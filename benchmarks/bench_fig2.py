@@ -1,0 +1,42 @@
+"""Paper Fig 2: evolution of the mean-bias ratio R (and mu~v1 alignment)
+across depth and training steps — R should grow with training while staying
+aligned with the dominant spectral direction."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import analysis
+from .common import emit
+from .figs_common import (
+    CKPT_STEPS,
+    capture_layer_inputs,
+    ensure_trained,
+    eval_batch,
+    model_and_data,
+)
+
+
+def run() -> dict:
+    ckpts = ensure_trained()
+    model, data = model_and_data()
+    batch = eval_batch(data)
+    out = {}
+    for step in CKPT_STEPS:
+        acts = capture_layer_inputs(model, ckpts[step], batch)
+        rs = [float(analysis.mean_bias_ratio(x)) for x in acts]
+        cos = [float(analysis.spectral_alignment(x)["cos_mu_vk"][0])
+               for x in acts]
+        out[step] = {"R_per_layer": rs, "cos_mu_v1_per_layer": cos}
+        emit(f"fig2/step{step}", 0.0,
+             f"mean_R={np.mean(rs):.4f};max_R={np.max(rs):.4f};"
+             f"mean_cos={np.mean(cos):.3f}")
+    # headline: R grows with training
+    growth = np.mean(out[CKPT_STEPS[-1]]["R_per_layer"]) / max(
+        np.mean(out[CKPT_STEPS[0]]["R_per_layer"]), 1e-9)
+    emit("fig2/R_growth_late_over_early", 0.0, f"ratio={growth:.2f}")
+    out["growth"] = float(growth)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Fig 3: operator-level mean-bias amplification — R traced across
+input -> +attention -> +FFN stages of a block, early vs late checkpoints,
+plus adjacent-stage mean-direction cosine (directional reshaping)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import analysis
+from .common import emit
+from .figs_common import (
+    CKPT_STEPS,
+    capture_operator_stages,
+    ensure_trained,
+    eval_batch,
+    model_and_data,
+)
+
+
+def _mean_dir(x: np.ndarray) -> np.ndarray:
+    mu = x.mean(0)
+    return mu / max(np.linalg.norm(mu), 1e-30)
+
+
+def run() -> dict:
+    ckpts = ensure_trained()
+    model, data = model_and_data()
+    batch = eval_batch(data)
+    layer = model.cfg.num_layers // 2
+    out = {}
+    for tag, step in [("early", CKPT_STEPS[0]), ("late", CKPT_STEPS[-1])]:
+        stages = capture_operator_stages(model, ckpts[step], batch, layer)
+        names = ["input", "post_attn", "post_ffn"]
+        rs = {n: float(analysis.mean_bias_ratio(stages[n])) for n in names}
+        dirs = {n: _mean_dir(stages[n]) for n in names}
+        cos_attn = float(abs(dirs["input"] @ dirs["post_attn"]))
+        cos_ffn = float(abs(dirs["post_attn"] @ dirs["post_ffn"]))
+        out[tag] = {"R": rs, "cos_in_attn": cos_attn, "cos_attn_ffn": cos_ffn}
+        emit(f"fig3/{tag}", 0.0,
+             f"R_in={rs['input']:.4f};R_attn={rs['post_attn']:.4f};"
+             f"R_ffn={rs['post_ffn']:.4f};"
+             f"dir_cos_attn={cos_attn:.3f};dir_cos_ffn={cos_ffn:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

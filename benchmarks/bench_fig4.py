@@ -1,0 +1,42 @@
+"""Paper Fig 4 (+Appendix C): outlier attribution — mean vs residual squared
+share of the top-0.1% activation entries, early vs late, shallow vs deep —
+plus the Appendix C tail contraction after mean removal."""
+from __future__ import annotations
+
+from repro.core import analysis
+from .common import emit
+from .figs_common import (
+    CKPT_STEPS,
+    capture_layer_inputs,
+    ensure_trained,
+    eval_batch,
+    model_and_data,
+)
+
+
+def run() -> dict:
+    ckpts = ensure_trained()
+    model, data = model_and_data()
+    batch = eval_batch(data)
+    out = {}
+    for tag, step in [("early", CKPT_STEPS[0]), ("late", CKPT_STEPS[-1])]:
+        acts = capture_layer_inputs(model, ckpts[step], batch)
+        for lname, x in [("shallow", acts[1]), ("deep", acts[-2])]:
+            att = analysis.outlier_attribution(x)
+            tail = analysis.tail_contraction(x)
+            key = f"{tag}/{lname}"
+            out[key] = {
+                "median_rho_mean": float(att["median_rho_mean"]),
+                "median_rho_res": float(att["median_rho_res"]),
+                "tail_q999_raw": tail["raw_q"],
+                "tail_q999_res": tail["res_q"],
+            }
+            emit(f"fig4/{key}", 0.0,
+                 f"rho_mean={att['median_rho_mean']:.3f};"
+                 f"rho_res={att['median_rho_res']:.3f};"
+                 f"tail_contraction={tail['res_q'] / max(tail['raw_q'], 1e-9):.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

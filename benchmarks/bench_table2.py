@@ -1,0 +1,90 @@
+"""Paper Table 2: preprocessing overhead — tiled Hadamard vs Averis mean
+extraction, on the paper's large activation shapes.
+
+Two complementary measurements (CPU container — no TPU wall clock):
+  1. wall-clock of the jitted XLA ops (relative comparison, smaller shapes),
+  2. analytic FLOPs+bytes of each preprocessing step at the paper's exact
+     shapes (l=512*2048, m=4096/8192) against v5e rooflines — the
+     hardware-independent version of the paper's 4.5-4.7x claim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.averis import split_mean
+from repro.core.hadamard import hadamard_tiles
+from .common import emit, time_jitted
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+@jax.jit
+def _averis_pre(x):
+    mu, xr = split_mean(x, 0)
+    return mu, xr
+
+
+@jax.jit
+def _hadamard_pre(x):
+    return hadamard_tiles(x, -1)
+
+
+def analytic(l: int, m: int, dtype_bytes: int = 2, fused: bool = True):
+    """Roofline seconds of the MARGINAL preprocessing cost on one v5e chip.
+
+    fused=True models the deployment path (our Pallas kernels): the
+    quantizer pass runs regardless, so Averis' marginal cost is one extra
+    read for the mean reduction (subtract rides inside mean_split_qdq's
+    VMEM pass), while tiled Hadamard needs its own read+write round-trip
+    (the 16x16 tile matmuls stay far below the MXU ridge, so it is
+    bandwidth-bound too). fused=False models standalone passes.
+    """
+    n = l * m
+    if fused:
+        averis_bytes = 1 * n * dtype_bytes          # mean-reduction read
+        had_bytes = 2 * n * dtype_bytes             # extra round-trip
+    else:
+        averis_bytes = 3 * n * dtype_bytes          # read, read, write
+        had_bytes = 2 * n * dtype_bytes
+    averis_flops = 2 * n
+    had_flops = 2 * 16 * n
+    t_av = max(averis_bytes / HBM_BW, averis_flops / PEAK_FLOPS)
+    t_h = max(had_bytes / HBM_BW, had_flops / PEAK_FLOPS)
+    return t_av, t_h
+
+
+def run() -> dict:
+    out = {}
+    # wall-clock comparison at reduced shapes (CPU)
+    for l, m in [(16384, 1024), (16384, 2048)]:
+        x = jnp.asarray(
+            np.random.default_rng(0).normal(size=(l, m)).astype(np.float32)
+        )
+        t_a = time_jitted(_averis_pre, x)["mean_s"]
+        t_h = time_jitted(_hadamard_pre, x)["mean_s"]
+        emit(f"table2/wallclock_l{l}_m{m}/averis", t_a * 1e6,
+             f"speedup_vs_hadamard={t_h / t_a:.2f}x")
+        emit(f"table2/wallclock_l{l}_m{m}/hadamard", t_h * 1e6, "baseline")
+        out[f"wall_{l}_{m}"] = {"averis_s": t_a, "hadamard_s": t_h,
+                                "speedup": t_h / t_a}
+    # analytic at the paper's exact shapes: marginal (fused, the deployment
+    # path) and standalone (unfused) costs
+    for l, m in [(512 * 2048, 4096), (512 * 2048, 8192)]:
+        t_av, t_h = analytic(l, m, fused=True)
+        emit(f"table2/roofline_fused_l{l}_m{m}/averis", t_av * 1e6,
+             f"speedup_vs_hadamard={t_h / t_av:.2f}x;paper=4.47-4.72x")
+        emit(f"table2/roofline_fused_l{l}_m{m}/hadamard", t_h * 1e6,
+             "baseline")
+        ta_u, th_u = analytic(l, m, fused=False)
+        emit(f"table2/roofline_standalone_l{l}_m{m}/averis", ta_u * 1e6,
+             f"speedup_vs_hadamard={th_u / ta_u:.2f}x (both bandwidth-bound)")
+        out[f"roofline_{l}_{m}"] = {"averis_s": t_av, "hadamard_s": t_h,
+                                    "speedup": t_h / t_av}
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Paper Table 3: end-to-end training-step overhead of each recipe over
+vanilla NVFP4 (the paper reports +2.0-2.2% for Averis vs +6.8-7.6% for
+Hadamard on Blackwell; on CPU the QDQ simulation dominates, so the
+comparable quantity is the RELATIVE overhead of the preprocessing)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.train.trainer import TrainConfig, init_train_state, make_train_step
+from .common import emit, time_jitted
+
+MODES = ["bf16", "nvfp4", "averis", "nvfp4_hadamard", "averis_hadamard"]
+
+
+def run() -> dict:
+    cfg = reduced("qwen3-0.6b", remat=False)
+    model = Model(cfg)
+    data = TokenStream(DataConfig(seed=0, batch_size=8, seq_len=128,
+                                  vocab_size=cfg.vocab_size))
+    batch = jax.tree.map(jnp.asarray, data.batch(0))
+    results = {}
+    for mode in MODES:
+        tcfg = TrainConfig(
+            quant_mode=mode,
+            optimizer=adamw.OptimizerConfig(total_steps=100),
+        )
+        params, opt = init_train_state(model, tcfg, jax.random.key(0))
+        step = jax.jit(make_train_step(model, tcfg))
+        t = time_jitted(
+            lambda p, o, b: step(p, o, b, jax.random.key(1))[2]["loss"],
+            params, opt, batch, warmup=2, iters=5,
+        )
+        results[mode] = t["mean_s"]
+    base = results["nvfp4"]
+    out = {}
+    for mode in MODES:
+        ovh = (results[mode] - base) / base * 100
+        out[mode] = {"step_s": results[mode], "overhead_vs_nvfp4_pct": ovh}
+        emit(f"table3/{mode}", results[mode] * 1e6,
+             f"overhead_vs_nvfp4={ovh:+.2f}%")
+    return out
+
+
+if __name__ == "__main__":
+    run()

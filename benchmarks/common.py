@@ -1,0 +1,63 @@
+"""Shared benchmark utilities: timing, CSV emission, tiny-model training."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+import jax
+
+
+def time_jitted(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> Dict:
+    """Wall-clock a jitted callable (CPU timings — relative comparisons only)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    arr = np.asarray(times)
+    return {"mean_s": float(arr.mean()), "std_s": float(arr.std()),
+            "min_s": float(arr.min())}
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """CSV row per the harness contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+    sys.stdout.flush()
+
+
+def train_tiny(quant_mode: str, steps: int = 80, seed: int = 0,
+               peak_lr: float = 3e-3, arch: str = "qwen3-0.6b",
+               **reduced_overrides) -> List[float]:
+    """Train the reduced paper config under a recipe; returns loss curve."""
+    import jax.numpy as jnp
+
+    from repro.configs import reduced
+    from repro.data.pipeline import DataConfig, TokenStream
+    from repro.models.model import Model
+    from repro.optim import adamw
+    from repro.train.trainer import TrainConfig, init_train_state, make_train_step
+
+    cfg = reduced(arch, remat=False, **reduced_overrides)
+    model = Model(cfg)
+    tcfg = TrainConfig(
+        quant_mode=quant_mode,
+        optimizer=adamw.OptimizerConfig(peak_lr=peak_lr, warmup_steps=10,
+                                        total_steps=steps, weight_decay=0.01),
+    )
+    data = TokenStream(DataConfig(seed=42, batch_size=8, seq_len=128,
+                                  vocab_size=cfg.vocab_size, chain_alpha=7.0,
+                                  n_states=48))
+    params, opt = init_train_state(model, tcfg, jax.random.key(seed))
+    step = jax.jit(make_train_step(model, tcfg), donate_argnums=(0, 1))
+    losses = []
+    for i in range(steps):
+        batch = jax.tree.map(jnp.asarray, data.batch(i))
+        params, opt, m = step(params, opt, batch, jax.random.key(7000 + i))
+        losses.append(float(m["loss"]))
+    return losses

@@ -1,0 +1,159 @@
+"""Shared infrastructure for the paper-figure benchmarks (Figs 1-5).
+
+Trains the reduced paper model (qwen3-0.6b family) once, checkpointing at
+early/mid/late steps, and exposes activation / output-gradient capture at
+arbitrary layers — the raw material for every §2 diagnostic.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced
+from repro.core.qgemm import recipe
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.models.layers import QuantCtx, rms_norm
+from repro.models.model import Model
+from repro.models.transformer import attn_ffn_block_apply
+from repro.optim import adamw
+from repro.train import checkpoint
+from repro.train.trainer import TrainConfig, init_train_state, make_train_step
+
+CKPT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "bench_model")
+CKPT_STEPS = [20, 200, 600]
+_TOTAL = CKPT_STEPS[-1]
+
+
+def model_and_data() -> Tuple[Model, TokenStream]:
+    cfg = reduced("qwen3-0.6b", remat=False)
+    model = Model(cfg)
+    data = TokenStream(DataConfig(seed=21, batch_size=8, seq_len=128,
+                                  vocab_size=cfg.vocab_size, chain_alpha=7.0,
+                                  n_states=48))
+    return model, data
+
+
+def ensure_trained() -> Dict[int, dict]:
+    """Train once (bf16 recipe — we analyze ACTIVATION structure, which the
+    paper measures on its BF16/quantized runs alike), checkpointing at
+    CKPT_STEPS. Returns {step: params}."""
+    model, data = model_and_data()
+    have = set(checkpoint.all_steps(CKPT_DIR))
+    if not set(CKPT_STEPS) <= have:
+        tcfg = TrainConfig(
+            quant_mode="bf16",
+            optimizer=adamw.OptimizerConfig(peak_lr=3e-3, warmup_steps=20,
+                                            total_steps=_TOTAL,
+                                            weight_decay=0.01),
+        )
+        params, opt = init_train_state(model, tcfg, jax.random.key(0))
+        step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0, 1))
+        for i in range(_TOTAL):
+            batch = jax.tree.map(jnp.asarray, data.batch(i))
+            params, opt, _ = step_fn(params, opt, batch, jax.random.key(i))
+            if (i + 1) in CKPT_STEPS:
+                checkpoint.save(CKPT_DIR, i + 1, params, opt, keep=0)
+    out = {}
+    params_t, opt_t = _templates(model)
+    for s in CKPT_STEPS:
+        p, _, _ = checkpoint.restore(CKPT_DIR, params_t, opt_t, step=s)
+        out[s] = p
+    return out
+
+
+def _templates(model: Model):
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    opt = jax.eval_shape(adamw.init_state, params)
+    return params, opt
+
+
+def capture_layer_inputs(model: Model, params, batch) -> List[np.ndarray]:
+    """Flattened (l, d) FFN-block inputs per layer (paper: 'FFN-input
+    activations'), plus the final-norm input."""
+    cfg = model.cfg
+    ctx = QuantCtx(recipe("bf16"), jax.random.key(0))
+    x, positions = model._embed_inputs(params, batch)
+    acts = []
+    for i in range(cfg.num_layers):
+        p_l = jax.tree.map(lambda a: a[i], params["layers"])
+        acts.append(np.asarray(
+            x.reshape(-1, cfg.d_model), np.float32))
+        x, _, _ = attn_ffn_block_apply(
+            p_l, x, positions, QuantCtx(ctx.cfg, jax.random.fold_in(ctx.key, i)),
+            cfg, None, None,
+        )
+    acts.append(np.asarray(x.reshape(-1, cfg.d_model), np.float32))
+    return acts
+
+
+def capture_operator_stages(model: Model, params, batch, layer: int
+                            ) -> Dict[str, np.ndarray]:
+    """Stage-wise activations through one block: input -> +attn -> +ffn
+    (paper Fig 3's operator-level trace)."""
+    from repro.models.attention import gqa_apply
+    from repro.models.layers import ffn_apply
+
+    cfg = model.cfg
+    ctx = QuantCtx(recipe("bf16"), jax.random.key(0))
+    x, positions = model._embed_inputs(params, batch)
+    for i in range(layer):
+        p_l = jax.tree.map(lambda a: a[i], params["layers"])
+        x, _, _ = attn_ffn_block_apply(
+            p_l, x, positions, QuantCtx(ctx.cfg, jax.random.fold_in(ctx.key, i)),
+            cfg, None, None,
+        )
+    p_l = jax.tree.map(lambda a: a[layer], params["layers"])
+    d = cfg.d_model
+    stages = {"input": x}
+    h = rms_norm(x, p_l["ln1"])
+    a, _ = gqa_apply(p_l["attn"], h, positions, ctx.child(1), cfg)
+    x1 = x + a
+    stages["post_attn"] = x1
+    h2 = rms_norm(x1, p_l["ln2"])
+    f = ffn_apply(p_l["ffn"], h2, ctx.child(2), cfg.ffn_type)
+    stages["post_ffn"] = x1 + f
+    return {k: np.asarray(v.reshape(-1, d), np.float32)
+            for k, v in stages.items()}
+
+
+def capture_output_gradient(model: Model, params, batch, layer: int
+                            ) -> np.ndarray:
+    """dL/d(layer input) — an output-gradient matrix of the preceding GeMM
+    stack (Appendix D's object), flattened to (l, d)."""
+    cfg = model.cfg
+    ctx = QuantCtx(recipe("bf16"), jax.random.key(0))
+    x0, positions = model._embed_inputs(params, batch)
+
+    def head_from(x):
+        for i in range(layer, cfg.num_layers):
+            p_l = jax.tree.map(lambda a: a[i], params["layers"])
+            x, _, _ = attn_ffn_block_apply(
+                p_l, x, positions,
+                QuantCtx(ctx.cfg, jax.random.fold_in(ctx.key, i)), cfg, None,
+                None,
+            )
+        logits = model._lm_head(params, x, ctx)
+        lg = logits.astype(jnp.float32)
+        targets = batch["tokens"][:, 1:]
+        logz = jax.scipy.special.logsumexp(lg[:, :-1], axis=-1)
+        gold = jnp.take_along_axis(lg[:, :-1], targets[..., None], -1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    x = x0
+    for i in range(layer):
+        p_l = jax.tree.map(lambda a: a[i], params["layers"])
+        x, _, _ = attn_ffn_block_apply(
+            p_l, x, positions, QuantCtx(ctx.cfg, jax.random.fold_in(ctx.key, i)),
+            cfg, None, None,
+        )
+    g = jax.grad(head_from)(x)
+    return np.asarray(g.reshape(-1, cfg.d_model), np.float32)
+
+
+def eval_batch(data: TokenStream, step: int = 10_000):
+    return jax.tree.map(jnp.asarray, data.batch(step))

@@ -1,0 +1,57 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Roofline rows appear when
+dry-run artifacts exist (PYTHONPATH=src python -m repro.launch.dryrun).
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run table2 fig4 # subset
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (
+    bench_fig1,
+    bench_fig2,
+    bench_fig3,
+    bench_fig4,
+    bench_fig5,
+    bench_quant_error,
+    bench_table1,
+    bench_table2,
+    bench_table3,
+    roofline,
+)
+
+BENCHES = {
+    "table1": bench_table1.run,    # loss gaps per recipe
+    "table2": bench_table2.run,    # hadamard vs averis preprocessing
+    "table3": bench_table3.run,    # end-to-end step overhead
+    "fig1": bench_fig1.run,        # three-panel mean-bias evidence
+    "fig2": bench_fig2.run,        # R across depth/training
+    "fig3": bench_fig3.run,        # operator-level amplification
+    "fig4": bench_fig4.run,        # outlier attribution + tail contraction
+    "fig5": bench_fig5.run,        # Gaussian residual validation
+    "quant_error": bench_quant_error.run,  # Appendix D
+    "roofline": roofline.run,      # deliverable (g), from dry-run artifacts
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        try:
+            BENCHES[name]()
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"{name},nan,FAILED:{type(e).__name__}:{e}")
+            failures.append(name)
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Model / training configuration schema.
+
+One frozen dataclass drives every architecture in the zoo (dense GQA, MLA,
+MoE, Mamba2 SSD, hybrid, VLM backbone, audio encoder). Architecture configs
+live in sibling modules (one file per assigned arch) and register themselves
+in ``repro.configs`` (see ``__init__.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | vlm | hybrid | audio
+    num_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention ---------------------------------------------------------
+    attention: str = "gqa"           # gqa | mla | none
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    causal: bool = True              # False => bidirectional encoder
+    rope_theta: float = 1e6
+    rope_type: str = "standard"      # standard | mrope | none
+    mrope_sections: Tuple[int, ...] = ()
+
+    # --- MLA (MiniCPM3 / DeepSeek-style latent attention) -------------------
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- FFN ----------------------------------------------------------------
+    ffn_type: str = "swiglu"         # swiglu | gelu
+
+    # --- MoE ----------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    moe_group_size: int = 2048   # dispatch-group tokens (einsum-dispatch cost
+                                 # is O(group * E * cap) ~ O(group^2) — a
+                                 # §Perf knob; see EXPERIMENTS.md)
+
+    # --- SSM (Mamba2 / SSD) --------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+
+    # --- hybrid (Zamba2): shared attention block every k SSM layers ---------
+    hybrid_attn_every: int = 0       # 0 => not hybrid
+
+    # --- IO ------------------------------------------------------------------
+    input_mode: str = "tokens"       # tokens | embeddings (vlm/audio stubs)
+    tie_embeddings: bool = False
+    quantize_lm_head: bool = True    # paper: ALL GeMMs are W4A4G4
+
+    # --- numerics / training -------------------------------------------------
+    param_dtype: str = "float32"     # master/param storage dtype
+    compute_dtype: str = "bfloat16"  # activation compute dtype
+    attn_softmax_dtype: str = "float32"  # score/softmax dtype; bfloat16 halves
+                                     # the dominant HBM term of the XLA path
+                                     # (a flash kernel keeps it in VMEM — §Perf)
+    remat: bool = True               # checkpoint each block in train fwd
+    max_seq_len: int = 4096          # RoPE table default horizon
+
+    # ------------------------------------------------------------------------
+    def __post_init__(self):
+        if self.attention not in ("gqa", "mla", "none"):
+            raise ValueError(f"bad attention {self.attention}")
+        if self.attention == "gqa":
+            assert self.num_heads > 0 and self.num_kv_heads > 0
+            assert self.num_heads % self.num_kv_heads == 0
+        if self.attention != "none" and self.resolved_head_dim <= 0:
+            raise ValueError("head_dim unresolved")
+        if self.family == "moe":
+            assert self.num_experts > 0 and self.num_experts_per_tok > 0
+        if self.family in ("ssm", "hybrid"):
+            assert self.ssm_state > 0
+        if self.hybrid_attn_every:
+            assert self.num_layers % self.hybrid_attn_every == 0
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.attention == "mla":
+            return self.qk_nope_head_dim + self.qk_rope_head_dim
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def resolved_v_head_dim(self) -> int:
+        if self.attention == "mla":
+            return self.v_head_dim
+        return self.resolved_head_dim
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_num_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_decoder(self) -> bool:
+        """Has an autoregressive decode step (encoder-only archs do not)."""
+        return self.causal
+
+    def num_params(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        n = v * d  # embedding
+        if not self.tie_embeddings:
+            n += d * v  # head
+        per_layer = 2 * d  # two RMSNorm gains
+        if self.attention == "gqa" and self.family not in ("ssm",):
+            hd, nh, nkv = self.resolved_head_dim, self.num_heads, self.num_kv_heads
+            per_layer += d * nh * hd + 2 * d * nkv * hd + nh * hd * d
+            if self.qkv_bias:
+                per_layer += (nh + 2 * nkv) * hd
+        elif self.attention == "mla":
+            r_q, r_kv = self.q_lora_rank, self.kv_lora_rank
+            dh, dr, dv = self.qk_nope_head_dim, self.qk_rope_head_dim, self.v_head_dim
+            nh = self.num_heads
+            per_layer += d * r_q + r_q * nh * (dh + dr)          # q path
+            per_layer += d * (r_kv + dr) + r_kv * nh * (dh + dv)  # kv path
+            per_layer += nh * dv * d                              # o proj
+            per_layer += r_q + r_kv                               # latent norms
+        if self.family == "moe":
+            per_layer += self.num_experts * 3 * d * f + d * self.num_experts
+        elif self.family in ("ssm",):
+            per_layer = self._ssm_layer_params() + 2 * d
+        elif self.family == "hybrid":
+            per_layer = self._ssm_layer_params() + 2 * d
+        elif self.ffn_type == "swiglu":
+            per_layer += 3 * d * f
+        else:
+            per_layer += 2 * d * f
+        if self.family in ("dense", "vlm", "audio") and self.ffn_type == "swiglu":
+            pass
+        n += self.num_layers * per_layer
+        if self.family == "vlm" or self.family == "audio":
+            pass  # frontend is a stub (precomputed embeddings)
+        if self.hybrid_attn_every:
+            # one shared attention+FFN block
+            hd, nh, nkv = self.resolved_head_dim, self.num_heads, self.num_kv_heads
+            shared = d * nh * hd + 2 * d * nkv * hd + nh * hd * d + 3 * d * f + 2 * d
+            n += shared
+        return n
+
+    def _ssm_layer_params(self) -> int:
+        d, di, ns = self.d_model, self.d_inner, self.ssm_state
+        nh = self.ssm_num_heads
+        # in_proj -> [z, x, B, C, dt], conv (x,B,C), A_log/D/dt_bias, norm, out
+        conv_ch = di + 2 * ns
+        return (
+            d * (2 * di + 2 * ns + nh)
+            + conv_ch * self.ssm_conv_width
+            + 3 * nh
+            + di
+            + di * d
+        )
+
+    def active_params(self) -> int:
+        """MoE: params touched per token (for MODEL_FLOPS = 6*N_active*D)."""
+        if self.family != "moe":
+            return self.num_params()
+        d, f = self.d_model, self.d_ff
+        dense_moe = self.num_layers * self.num_experts * 3 * d * f
+        active_moe = self.num_layers * self.num_experts_per_tok * 3 * d * f
+        return self.num_params() - dense_moe + active_moe
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned (input-shape) cell: what to lower and at what size."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def runnable_shapes(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Which assigned shapes run for this arch (skips per DESIGN.md §5)."""
+    names = ["train_4k", "prefill_32k"]
+    if cfg.is_decoder:
+        names.append("decode_32k")
+        if cfg.family in ("ssm", "hybrid"):  # sub-quadratic only
+            names.append("long_500k")
+    return tuple(names)

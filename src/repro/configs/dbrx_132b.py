@@ -1,0 +1,38 @@
+"""dbrx-132b [moe] — 40L d_model=6144 48H (GQA kv=8) d_ff=10752
+vocab=100352, MoE 16 experts top-4 (fine-grained).
+[hf:databricks/dbrx-base; unverified]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    num_layers=40,
+    d_model=6144,
+    d_ff=10752,
+    vocab_size=100352,
+    attention="gqa",
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    rope_theta=5e5,
+    num_experts=16,
+    num_experts_per_tok=4,
+    tie_embeddings=False,
+)
+
+REDUCED = ModelConfig(
+    name="dbrx-132b-reduced",
+    family="moe",
+    num_layers=2,
+    d_model=64,
+    d_ff=96,
+    vocab_size=256,
+    attention="gqa",
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    rope_theta=5e5,
+    num_experts=4,
+    num_experts_per_tok=2,
+    tie_embeddings=False,
+)

@@ -1,0 +1,37 @@
+"""grok-1-314b [moe] — 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2. [hf:xai-org/grok-1; unverified]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    d_ff=32768,
+    vocab_size=131072,
+    attention="gqa",
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    rope_theta=1e4,
+    num_experts=8,
+    num_experts_per_tok=2,
+    tie_embeddings=False,
+)
+
+REDUCED = ModelConfig(
+    name="grok-1-314b-reduced",
+    family="moe",
+    num_layers=2,
+    d_model=64,
+    d_ff=128,
+    vocab_size=256,
+    attention="gqa",
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    rope_theta=1e4,
+    num_experts=4,
+    num_experts_per_tok=2,
+    tie_embeddings=False,
+)

@@ -1,0 +1,46 @@
+"""hubert-xlarge [audio] — 48L d_model=1280 16H (GQA kv=16) d_ff=5120
+vocab=504, encoder-only (same arch as wav2vec2). [arXiv:2106.07447; unverified]
+
+The conv waveform frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (b, s, d_model); training is
+frame-level unit prediction over the 504-entry codebook. Encoder-only =>
+bidirectional attention, no decode shapes (DESIGN.md §5). HuBERT's conv
+positional embedding is replaced by RoPE (TPU-idiomatic; noted adaptation).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    num_layers=48,
+    d_model=1280,
+    d_ff=5120,
+    vocab_size=504,
+    attention="gqa",
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=80,
+    causal=False,
+    ffn_type="gelu",
+    rope_theta=1e4,
+    input_mode="embeddings",
+    tie_embeddings=False,
+)
+
+REDUCED = ModelConfig(
+    name="hubert-xlarge-reduced",
+    family="audio",
+    num_layers=2,
+    d_model=64,
+    d_ff=128,
+    vocab_size=64,
+    attention="gqa",
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    causal=False,
+    ffn_type="gelu",
+    rope_theta=1e4,
+    input_mode="embeddings",
+    tie_embeddings=False,
+)

@@ -1,0 +1,37 @@
+"""mamba2-780m [ssm] — 48L d_model=1536 (attn-free) d_ff=0 vocab=50280,
+ssm_state=128, SSD (state-space duality). [arXiv:2405.21060; unverified]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    num_layers=48,
+    d_model=1536,
+    d_ff=0,
+    vocab_size=50280,
+    attention="none",
+    rope_type="none",
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv_width=4,
+    ssm_chunk=128,
+    tie_embeddings=True,
+)
+
+REDUCED = ModelConfig(
+    name="mamba2-780m-reduced",
+    family="ssm",
+    num_layers=2,
+    d_model=64,
+    d_ff=0,
+    vocab_size=256,
+    attention="none",
+    rope_type="none",
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=16,
+    ssm_conv_width=4,
+    ssm_chunk=32,
+    tie_embeddings=True,
+)

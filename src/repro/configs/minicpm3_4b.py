@@ -1,0 +1,45 @@
+"""minicpm3-4b [dense] — 62L d_model=2560 40H (GQA kv=40) d_ff=6400
+vocab=73448, MLA. [hf:openbmb/MiniCPM3-4B; hf]
+
+MLA dims follow the HF reference: q_lora_rank=768, kv_lora_rank=256,
+qk_nope_head_dim=64, qk_rope_head_dim=32, v_head_dim=64.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    num_layers=62,
+    d_model=2560,
+    d_ff=6400,
+    vocab_size=73448,
+    attention="mla",
+    num_heads=40,
+    num_kv_heads=40,
+    q_lora_rank=768,
+    kv_lora_rank=256,
+    qk_nope_head_dim=64,
+    qk_rope_head_dim=32,
+    v_head_dim=64,
+    rope_theta=1e6,
+    tie_embeddings=True,
+)
+
+REDUCED = ModelConfig(
+    name="minicpm3-4b-reduced",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    d_ff=160,
+    vocab_size=256,
+    attention="mla",
+    num_heads=4,
+    num_kv_heads=4,
+    q_lora_rank=32,
+    kv_lora_rank=16,
+    qk_nope_head_dim=16,
+    qk_rope_head_dim=8,
+    v_head_dim=16,
+    rope_theta=1e6,
+    tie_embeddings=True,
+)

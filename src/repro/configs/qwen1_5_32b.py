@@ -1,0 +1,35 @@
+"""qwen1.5-32b [dense] — 64L d_model=5120 40H (GQA kv=40) d_ff=27392
+vocab=152064, QKV bias. [hf:Qwen/Qwen1.5-0.5B family; hf]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    d_ff=27392,
+    vocab_size=152064,
+    attention="gqa",
+    num_heads=40,
+    num_kv_heads=40,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1e6,
+    tie_embeddings=False,
+)
+
+REDUCED = ModelConfig(
+    name="qwen1.5-32b-reduced",
+    family="dense",
+    num_layers=2,
+    d_model=80,
+    d_ff=224,
+    vocab_size=256,
+    attention="gqa",
+    num_heads=5,
+    num_kv_heads=5,
+    head_dim=16,
+    qkv_bias=True,
+    rope_theta=1e6,
+    tie_embeddings=False,
+)

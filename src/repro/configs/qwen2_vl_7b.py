@@ -1,0 +1,46 @@
+"""qwen2-vl-7b [vlm] — 28L d_model=3584 28H (GQA kv=4) d_ff=18944
+vocab=152064, M-RoPE, dynamic resolution. [arXiv:2409.12191; hf]
+
+The vision frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch/token embeddings (b, s, d_model) plus M-RoPE position ids
+(b, 3, s). Only the LM backbone is modeled.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    d_ff=18944,
+    vocab_size=152064,
+    attention="gqa",
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1e6,
+    rope_type="mrope",
+    mrope_sections=(16, 24, 24),
+    input_mode="embeddings",
+    tie_embeddings=False,
+)
+
+REDUCED = ModelConfig(
+    name="qwen2-vl-7b-reduced",
+    family="vlm",
+    num_layers=2,
+    d_model=64,
+    d_ff=160,
+    vocab_size=256,
+    attention="gqa",
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    qkv_bias=True,
+    rope_theta=1e6,
+    rope_type="mrope",
+    mrope_sections=(2, 3, 3),
+    input_mode="embeddings",
+    tie_embeddings=False,
+)

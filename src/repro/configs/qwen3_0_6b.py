@@ -1,0 +1,38 @@
+"""qwen3-0.6b — the paper's dense training config (Table 1, 100B tokens).
+
+[hf:Qwen/Qwen3-0.6B]: 28L, d_model=1024, 16Q/8KV heads, head_dim=128,
+d_ff=3072, qk_norm, tied embeddings, vocab 151936.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    num_layers=28,
+    d_model=1024,
+    d_ff=3072,
+    vocab_size=151936,
+    attention="gqa",
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1e6,
+    tie_embeddings=True,
+)
+
+REDUCED = ModelConfig(
+    name="qwen3-0.6b-reduced",
+    family="dense",
+    num_layers=4,
+    d_model=128,
+    d_ff=384,
+    vocab_size=512,
+    attention="gqa",
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    qk_norm=True,
+    rope_theta=1e6,
+    tie_embeddings=True,
+)

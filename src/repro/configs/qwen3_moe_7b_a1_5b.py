@@ -1,0 +1,44 @@
+"""qwen3-7b-a1.5b — the paper's MoE training config (Table 1, 50B tokens).
+
+The paper describes it as "a scaled-down variant following Qwen3-235B-A22B"
+without exact dims; we derive a config hitting ~7B total / ~1.5B active:
+28L, d_model=2048, 16Q/2KV hd128, qk_norm, 48 experts top-4, expert d_ff=768
+=> total ≈ 7.0B params, active ≈ 1.5B (router weights negligible).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-7b-a1.5b",
+    family="moe",
+    num_layers=28,
+    d_model=2048,
+    d_ff=768,
+    vocab_size=151936,
+    attention="gqa",
+    num_heads=16,
+    num_kv_heads=2,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1e6,
+    num_experts=48,
+    num_experts_per_tok=4,
+    tie_embeddings=False,
+)
+
+REDUCED = ModelConfig(
+    name="qwen3-7b-a1.5b-reduced",
+    family="moe",
+    num_layers=4,
+    d_model=128,
+    d_ff=96,
+    vocab_size=512,
+    attention="gqa",
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    qk_norm=True,
+    rope_theta=1e6,
+    num_experts=8,
+    num_experts_per_tok=2,
+    tie_embeddings=False,
+)

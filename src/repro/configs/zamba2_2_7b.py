@@ -1,0 +1,51 @@
+"""zamba2-2.7b [hybrid] — 54L d_model=2560 32H (GQA kv=32) d_ff=10240
+vocab=32000, ssm_state=64, Mamba2 + shared attn blocks. [arXiv:2411.15242; hf]
+
+Hybrid layout: 54 Mamba2 layers; ONE shared attention+FFN block (single
+parameter copy) applied after every 6 SSM layers (9 invocations, each with
+its own KV cache). Zamba2's per-invocation LoRA specialization of the shared
+block is omitted — noted in DESIGN.md §5.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    num_layers=54,
+    d_model=2560,
+    d_ff=10240,
+    vocab_size=32000,
+    attention="gqa",
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=80,
+    rope_theta=1e4,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv_width=4,
+    ssm_chunk=128,
+    hybrid_attn_every=6,
+    tie_embeddings=False,
+)
+
+REDUCED = ModelConfig(
+    name="zamba2-2.7b-reduced",
+    family="hybrid",
+    num_layers=4,
+    d_model=64,
+    d_ff=160,
+    vocab_size=256,
+    attention="gqa",
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    rope_theta=1e4,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=16,
+    ssm_conv_width=4,
+    ssm_chunk=32,
+    hybrid_attn_every=2,
+    tie_embeddings=False,
+)

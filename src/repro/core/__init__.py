@@ -1,0 +1,30 @@
+"""Core: NVFP4 numerics, Averis mean-residual splitting, quantized GeMM."""
+from .formats import BLOCK_SIZE, E2M1_MAX, E4M3_MAX, HADAMARD_16, MODES
+from .nvfp4 import nvfp4_qdq, nvfp4_quant_error, round_e2m1_rn, round_e2m1_sr
+from .hadamard import hadamard_tiles
+from .averis import (
+    averis_forward,
+    averis_input_grad,
+    averis_weight_grad,
+    split_mean,
+)
+from .qgemm import (
+    AVERIS,
+    AVERIS_HADAMARD,
+    BF16,
+    NVFP4,
+    NVFP4_HADAMARD,
+    QuantConfig,
+    qgemm,
+    qgemm_expert,
+    recipe,
+)
+
+__all__ = [
+    "BLOCK_SIZE", "E2M1_MAX", "E4M3_MAX", "HADAMARD_16", "MODES",
+    "nvfp4_qdq", "nvfp4_quant_error", "round_e2m1_rn", "round_e2m1_sr",
+    "hadamard_tiles",
+    "averis_forward", "averis_input_grad", "averis_weight_grad", "split_mean",
+    "QuantConfig", "qgemm", "qgemm_expert", "recipe",
+    "BF16", "NVFP4", "NVFP4_HADAMARD", "AVERIS", "AVERIS_HADAMARD",
+]

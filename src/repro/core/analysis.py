@@ -1,0 +1,137 @@
+"""Mean-bias diagnostics — quantitative reproductions of paper §2 / Figs 1-5.
+
+All functions take a flattened activation matrix X of shape (l, m) (tokens x
+features) and return plain floats / small arrays so they can be logged from
+training callbacks or notebooks.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def feature_mean(x: jax.Array) -> jax.Array:
+    """mu_X = (1/l) X^T 1  — the feature-wise (column) mean vector."""
+    return jnp.mean(x.astype(jnp.float32), axis=0)
+
+
+def mean_bias_ratio(x: jax.Array) -> jax.Array:
+    """R = ||mu_X||_2 / sqrt(||X||_F^2 / l)  (paper §2.2).
+
+    R in [0, 1]; R -> 1 means the rank-one mean component carries nearly all
+    per-token energy.
+    """
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=0)
+    denom = jnp.sqrt(jnp.sum(xf * xf) / xf.shape[0])
+    return jnp.linalg.norm(mu) / jnp.maximum(denom, 1e-30)
+
+
+def spectral_alignment(x: jax.Array, k: int = 4) -> Dict[str, np.ndarray]:
+    """Paper Fig. 1: singular spectrum + alignment of mu_X with top-k right
+    singular vectors + alignment of left vectors with the all-ones direction.
+
+    Returns numpy arrays (host-side; uses full SVD — analysis only, not a
+    training-path op).
+    """
+    xf = np.asarray(x, dtype=np.float32)
+    l = xf.shape[0]
+    u, s, vt = np.linalg.svd(xf, full_matrices=False)
+    mu = xf.mean(axis=0)
+    mu_n = mu / max(np.linalg.norm(mu), 1e-30)
+    e = np.ones(l, dtype=np.float32) / np.sqrt(l)
+    cos_mu_v = np.abs(vt[:k] @ mu_n)               # |cos(mu, v_k)|
+    beta = u[:, :k].T @ e                          # <u_k, e> alignment coeffs
+    return {
+        "singular_values": s[: max(k, 16)],
+        "cos_mu_vk": cos_mu_v,
+        "beta_k": beta,
+        "mean_norm": np.float32(np.linalg.norm(mu)),
+    }
+
+
+def token_mean_cosine(x: jax.Array) -> Tuple[np.ndarray, np.ndarray]:
+    """Paper Fig. 1(B): per-token cosine with the mean direction vs with v2."""
+    xf = np.asarray(x, dtype=np.float32)
+    mu = xf.mean(axis=0)
+    mu_n = mu / max(np.linalg.norm(mu), 1e-30)
+    _, _, vt = np.linalg.svd(xf, full_matrices=False)
+    v2 = vt[1] if vt.shape[0] > 1 else vt[0]
+    norms = np.maximum(np.linalg.norm(xf, axis=1), 1e-30)
+    return (xf @ mu_n) / norms, (xf @ v2) / norms
+
+
+def outlier_attribution(x: jax.Array, top_frac: float = 1e-3) -> Dict[str, np.ndarray]:
+    """Paper §2.3 / Fig. 4: mean vs residual squared-share of top-|X| entries.
+
+    For the top ``top_frac`` entries by |X_ij| computes
+      rho_mean = (M_X)_ij^2 / X_ij^2,   rho_res = Xr_ij^2 / X_ij^2.
+    Returns both share arrays plus their medians.
+    """
+    xf = np.asarray(x, dtype=np.float32)
+    mu = xf.mean(axis=0)
+    flat = np.abs(xf).ravel()
+    k = max(1, int(round(top_frac * flat.size)))
+    idx = np.argpartition(flat, -k)[-k:]
+    rows, cols = np.unravel_index(idx, xf.shape)
+    vals = xf[rows, cols]
+    mean_part = mu[cols]
+    res_part = vals - mean_part
+    denom = np.maximum(vals**2, 1e-30)
+    rho_mean = mean_part**2 / denom
+    rho_res = res_part**2 / denom
+    return {
+        "rho_mean": rho_mean,
+        "rho_res": rho_res,
+        "median_rho_mean": np.float32(np.median(rho_mean)),
+        "median_rho_res": np.float32(np.median(rho_res)),
+    }
+
+
+def residual_gaussianity(x: jax.Array, n_sample: int = 65536, seed: int = 0
+                         ) -> Dict[str, float]:
+    """Paper Fig. 5: excess kurtosis of raw entries vs mean-centered residuals.
+
+    Gaussian => excess kurtosis 0. Mean removal should move kurtosis (and the
+    far-tail mass) toward the Gaussian reference.
+    """
+    rng = np.random.default_rng(seed)
+    xf = np.asarray(x, dtype=np.float32)
+    res = xf - xf.mean(axis=0, keepdims=True)
+
+    def kurt(v):
+        v = v.ravel()
+        if v.size > n_sample:
+            v = rng.choice(v, n_sample, replace=False)
+        v = v - v.mean()
+        s2 = max(float((v**2).mean()), 1e-30)
+        return float((v**4).mean() / s2**2 - 3.0)
+
+    return {"kurtosis_raw": kurt(xf), "kurtosis_residual": kurt(res)}
+
+
+def tail_contraction(x: jax.Array, q: float = 0.999) -> Dict[str, float]:
+    """Paper Appendix C: high quantiles of |raw| vs |residual| — mean removal
+    should contract the far tail."""
+    xf = np.asarray(x, dtype=np.float32)
+    res = xf - xf.mean(axis=0, keepdims=True)
+    return {
+        "raw_q": float(np.quantile(np.abs(xf), q)),
+        "res_q": float(np.quantile(np.abs(res), q)),
+        "raw_max": float(np.abs(xf).max()),
+        "res_max": float(np.abs(res).max()),
+    }
+
+
+def theorem1_tail_ratio(m: float, tau: float, t: float) -> Tuple[float, float]:
+    """Theorem 1 closed forms: exact two-sided tail (Eq. 4) and the asymptotic
+    amplification ratio vs the zero-mean baseline (Eq. 7)."""
+    from scipy.stats import norm
+
+    qf = norm.sf  # Q(x) = 1 - Phi(x)
+    exact = qf((t - abs(m)) / tau) + qf((t + abs(m)) / tau)
+    amp = (t / (2 * (t - abs(m)))) * np.exp((2 * t * abs(m) - m * m) / (2 * tau * tau))
+    return float(exact), float(amp)

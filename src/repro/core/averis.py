@@ -1,0 +1,114 @@
+"""Averis — Averaging-Induced Residual Splitting (the paper's method, §3).
+
+Quantization-sensitive activation outliers are predominantly driven by a
+coherent rank-one mean component  M_X = 1·μ_X^T  (paper §2, Theorem 1).
+Averis therefore isolates the column mean *before* FP4 quantization and
+quantizes mean and residual independently:
+
+  forward      (Eq. 8):   Ŷ  = 1·(μ̄_X W̄) + X̄_R W̄
+  input grad   (Eq. 9):   dX̂ = 1·(μ̄_D W̄ᵀ) + D̄_R W̄ᵀ
+  weight grad  (Eq.10):   dŴ = X̄_Rᵀ D̄_R + l·μ̄_Xᵀ μ̄_D
+
+Eq. 10 is *exact* under the splitting because the centered residuals
+annihilate the cross terms (X_Rᵀ1 = 0, 1ᵀD_R = 0).
+
+The only extra work over vanilla NVFP4 is one mean reduction and one
+elementwise subtraction per GeMM operand — no transforms, no SVD.
+
+This module provides the splitting and the three quantized GeMM evaluations;
+``qgemm.py`` wires them into a ``jax.custom_vjp`` so models simply call
+``qgemm(x, w, cfg, key)``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Quantizer = Callable[..., jax.Array]  # (x, axis) -> QDQ(x)
+
+
+def split_mean(x: jax.Array, token_axis: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Split ``x`` into (column-mean over tokens, centered residual).
+
+    ``token_axis`` is the flattened token dimension l = b*s. Returns
+    ``mu`` with that axis removed and ``x_r = x - broadcast(mu)``.
+    The mean is computed in fp32 regardless of input dtype (a bf16 mean over
+    10^5+ tokens loses the very signal Averis isolates).
+    """
+    mu = jnp.mean(x.astype(jnp.float32), axis=token_axis)
+    x_r = (x.astype(jnp.float32) - jnp.expand_dims(mu, token_axis)).astype(x.dtype)
+    return mu.astype(x.dtype), x_r
+
+
+def averis_forward(
+    x: jax.Array,
+    w_bar: jax.Array,
+    quant_vec: Quantizer,
+    quant_res: Quantizer,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Eq. 8: quantized forward GeMM with activation mean–residual splitting.
+
+    ``x``: (l, m) activations; ``w_bar``: the already-QDQ'd weight (m, n);
+    ``quant_vec``/``quant_res`` quantize the mean vector / residual along the
+    contraction dim (m). The 1·(μ̄W̄) term is broadcast — the rank-one mean
+    matrix is never materialized.
+    """
+    mu, x_r = split_mean(x, token_axis=0)
+    mu_bar = quant_vec(mu, axis=-1)
+    xr_bar = quant_res(x_r, axis=-1)
+    mean_row = jnp.dot(mu_bar, w_bar, preferred_element_type=acc_dtype)
+    res = jnp.dot(xr_bar, w_bar, preferred_element_type=acc_dtype)
+    return (res + mean_row[None, :]).astype(x.dtype)
+
+
+def averis_input_grad(
+    d: jax.Array,
+    w_bar_t: jax.Array,
+    quant_vec: Quantizer,
+    quant_res: Quantizer,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Eq. 9: quantized input-gradient GeMM with output-gradient splitting.
+
+    ``d``: (l, n) output cotangent; ``w_bar_t``: QDQ'd W (m, n) blocked along n
+    (the contraction dim of this GeMM). Returns dX̂ (l, m).
+    """
+    mu_d, d_r = split_mean(d, token_axis=0)
+    mu_bar = quant_vec(mu_d, axis=-1)
+    dr_bar = quant_res(d_r, axis=-1)
+    mean_row = jnp.dot(mu_bar, w_bar_t.T, preferred_element_type=acc_dtype)
+    res = jnp.dot(dr_bar, w_bar_t.T, preferred_element_type=acc_dtype)
+    return (res + mean_row[None, :]).astype(d.dtype)
+
+
+def averis_weight_grad(
+    x: jax.Array,
+    d: jax.Array,
+    quant_vec: Quantizer,
+    quant_x: Quantizer,
+    quant_d: Quantizer,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Eq. 10: quantized weight-gradient GeMM.
+
+    dŴ = X̄_Rᵀ D̄_R + l·μ̄_Xᵀ μ̄_D  — exact splitting (cross terms vanish
+    analytically), so the rank-one token-coherent component of dW is carried
+    at mean-vector precision while the residual GeMM sees a contracted
+    dynamic range. Residuals are quantized along l (axis 0), the contraction
+    dim of this GeMM.
+    """
+    l = x.shape[0]
+    mu_x, x_r = split_mean(x, token_axis=0)
+    mu_d, d_r = split_mean(d, token_axis=0)
+    mux_bar = quant_vec(mu_x, axis=-1)
+    mud_bar = quant_vec(mu_d, axis=-1)
+    xr_bar = quant_x(x_r, axis=0)
+    dr_bar = quant_d(d_r, axis=0)
+    res = jnp.dot(xr_bar.T, dr_bar, preferred_element_type=acc_dtype)
+    rank1 = l * jnp.outer(
+        mux_bar.astype(jnp.float32), mud_bar.astype(jnp.float32)
+    ).astype(acc_dtype)
+    return (res + rank1).astype(x.dtype)

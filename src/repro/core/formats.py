@@ -1,0 +1,61 @@
+"""Numeric format definitions for NVFP4 simulated training.
+
+NVFP4 is a two-level blockwise FP4 format (NVIDIA Blackwell):
+  * elements: E2M1 (1 sign, 2 exponent, 1 mantissa) -> representable
+    magnitudes {0, 0.5, 1, 1.5, 2, 3, 4, 6}
+  * per-block scale: E4M3 (float8_e4m3fn, max 448), block size 16 along the
+    GeMM reduction dimension
+  * per-tensor scale: fp32, chosen so the largest block scale is representable
+    in E4M3: s_tensor = amax(|X|) / (E2M1_MAX * E4M3_MAX)
+
+This module holds the constant grids and dtype helpers; the quantizers live in
+``nvfp4.py`` (XLA path) and ``repro.kernels`` (Pallas TPU path).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# --- E2M1 ------------------------------------------------------------------
+# Positive representable values of E2M1 (FP4): exponent bias 1, 1 mantissa bit.
+E2M1_GRID = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=np.float32)
+E2M1_MAX = 6.0
+# Midpoints between adjacent grid values — used for round-to-nearest(-even)
+# bucketing and for stochastic rounding interval lookup.
+E2M1_MIDPOINTS = (E2M1_GRID[1:] + E2M1_GRID[:-1]) / 2.0  # [.25,.75,1.25,1.75,2.5,3.5,5]
+
+# --- E4M3 ------------------------------------------------------------------
+E4M3_MAX = 448.0
+E4M3_DTYPE = jnp.float8_e4m3fn
+
+# --- NVFP4 block layout ----------------------------------------------------
+BLOCK_SIZE = 16  # elements per scale block, along the reduction dim
+
+# Tensor-level scale denominator: with two-level scaling the per-tensor fp32
+# scale maps the global amax to the largest exactly-representable product
+# (block scale = E4M3_MAX) * (element = E2M1_MAX).
+TENSOR_SCALE_DENOM = E2M1_MAX * E4M3_MAX
+
+# Quantization modes supported by qgemm.
+MODES = (
+    "bf16",             # no quantization (full-precision baseline)
+    "nvfp4",            # vanilla blockwise NVFP4 (W4A4G4)
+    "nvfp4_hadamard",   # NVFP4 + tiled 16x16 Hadamard smoothing (NVIDIA recipe)
+    "averis",           # NVFP4 + mean-residual splitting (the paper's method)
+    "averis_hadamard",  # Averis + Hadamard on the residual (paper "Averis-Hadamard")
+)
+
+
+def hadamard_matrix(n: int) -> np.ndarray:
+    """Sylvester-construction Hadamard matrix H_n (n a power of two), unnormalized."""
+    if n & (n - 1) != 0 or n <= 0:
+        raise ValueError(f"Hadamard order must be a power of two, got {n}")
+    h = np.array([[1.0]], dtype=np.float32)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+# Orthonormal 16x16 Hadamard (H @ H.T = I): the tiled transform used by the
+# NVIDIA outlier-smoothing baseline and by Averis-Hadamard.
+HADAMARD_16 = (hadamard_matrix(16) / np.sqrt(16.0)).astype(np.float32)

@@ -1,0 +1,43 @@
+"""Tiled 16x16 Hadamard transform — NVIDIA's outlier-smoothing baseline.
+
+The transform reshapes the target axis into tiles of 16 and multiplies each
+tile by the orthonormal Hadamard matrix H16 (H @ H.T = I). Applied to *both*
+GeMM operands along the contraction dimension it leaves the product exactly
+invariant in infinite precision:
+
+    X W = (X H_t)(H_t^T W),   H_t = blockdiag(H16, ..., H16)
+
+while spreading outlier energy across the 16 elements of each tile before
+blockwise FP4 quantization (QuaRot / HALO / NVFP4-Hadamard recipe).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .formats import HADAMARD_16
+
+_TILE = 16
+
+
+def hadamard_tiles(x: jax.Array, axis: int = -1, inverse: bool = False) -> jax.Array:
+    """Apply the tiled orthonormal H16 transform along ``axis``.
+
+    ``inverse=True`` applies H16^T (= H16 for the symmetric Sylvester H16 up to
+    orthonormal transpose; kept explicit for clarity). Requires the axis length
+    to be a multiple of 16 — transformer dims in this repo always are; callers
+    with ragged dims must pad externally (padding would break exactness of the
+    paired-transform identity).
+    """
+    n = x.shape[axis]
+    if n % _TILE != 0:
+        raise ValueError(f"hadamard_tiles: axis length {n} not a multiple of {_TILE}")
+    h = jnp.asarray(HADAMARD_16, x.dtype)
+    if inverse:
+        h = h.T
+    xm = jnp.moveaxis(x, axis, -1)
+    shp = xm.shape
+    xt = xm.reshape(shp[:-1] + (n // _TILE, _TILE))
+    yt = jnp.einsum("...t,tu->...u", xt, h, preferred_element_type=jnp.float32)
+    y = yt.reshape(shp).astype(x.dtype)
+    return jnp.moveaxis(y, -1, axis)

@@ -1,0 +1,146 @@
+"""Blockwise NVFP4 quantize–dequantize (QDQ) simulation.
+
+Implements NVIDIA's two-level NVFP4 recipe:
+
+  1. per-tensor fp32 scale          s_t = amax(|X|) / (E2M1_MAX * E4M3_MAX)
+  2. per-block (16 elems) E4M3 scale s_b = RN_e4m3( blockamax(|X|) / (E2M1_MAX * s_t) )
+  3. elements quantized to E2M1 in units of (s_b * s_t), round-to-nearest-even
+     or stochastic rounding (SR — used on gradient GeMM operands, "G4").
+
+Blocks always run along the GeMM **contraction** dimension (``axis``), so that
+per-block scales factor out of dot products — the same layout Blackwell tensor
+cores use and the layout our Pallas TPU kernels tile.
+
+Everything here is the pure-XLA path; ``repro.kernels`` holds the fused Pallas
+TPU version validated against this module.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .formats import BLOCK_SIZE, E2M1_MAX, E4M3_MAX, TENSOR_SCALE_DENOM
+
+_EPS = 1e-30
+
+
+def round_e2m1_rn(a: jax.Array) -> jax.Array:
+    """Round |values| (already in block-scale units) to the E2M1 grid, RNE.
+
+    The E2M1 grid {0,.5,1,1.5,2,3,4,6} is uniform with spacing .5 below 2,
+    spacing 1 on [2,4], spacing 2 on [4,6]; jnp.round is round-half-to-even, so
+    rounding in units of the local spacing reproduces IEEE RNE exactly
+    (verified against ml_dtypes.float4_e2m1fn casts in tests).
+    """
+    a = jnp.minimum(a, E2M1_MAX)
+    r = jnp.where(
+        a < 2.0,
+        jnp.round(a * 2.0) * 0.5,
+        jnp.where(a < 4.0, jnp.round(a), jnp.round(a * 0.5) * 2.0),
+    )
+    return jnp.minimum(r, E2M1_MAX)
+
+
+def round_e2m1_sr(a: jax.Array, u: jax.Array) -> jax.Array:
+    """Stochastically round |values| to the E2M1 grid.
+
+    ``u`` is uniform[0,1) of the same shape. P(round up) equals the relative
+    position within the enclosing grid interval — unbiased: E[SR(a)] = a.
+    """
+    a = jnp.minimum(a, E2M1_MAX)
+    step = jnp.where(a < 2.0, 0.5, jnp.where(a < 4.0, 1.0, 2.0))
+    lo = jnp.floor(a / step) * step
+    hi = jnp.minimum(lo + step, E2M1_MAX)
+    p_up = jnp.where(step > 0, (a - lo) / jnp.maximum(step, _EPS), 0.0)
+    r = jnp.where(u < p_up, hi, lo)
+    return jnp.minimum(r, E2M1_MAX)
+
+
+def _quantize_scale_e4m3(s: jax.Array) -> jax.Array:
+    """Round positive block scales to E4M3 (RN via hardware-equivalent cast)."""
+    s = jnp.clip(s, 0.0, E4M3_MAX)
+    return s.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+
+
+def nvfp4_qdq(
+    x: jax.Array,
+    axis: int = -1,
+    *,
+    sr: bool = False,
+    key: Optional[jax.Array] = None,
+    block_size: int = BLOCK_SIZE,
+    tensor_amax: Optional[jax.Array] = None,
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """Quantize ``x`` to NVFP4 along ``axis`` and dequantize back (simulation).
+
+    Args:
+      x: input array (any float dtype; computation in fp32).
+      axis: the GeMM contraction dimension — blocks of ``block_size`` run
+        along it.
+      sr: use stochastic rounding for the elements (scales are always RN).
+      key: PRNG key, required when ``sr=True``.
+      block_size: elements per scale block (16 for NVFP4).
+      tensor_amax: optional externally-supplied per-tensor amax (used by the
+        Averis weight-grad GeMM so both quantizations of the same tensor share
+        one tensor scale; defaults to amax(|x|)).
+      compute_dtype: dtype for the QDQ elementwise chain. float32 is exact;
+        bfloat16 halves the HBM traffic of the simulation's temporaries (the
+        E2M1 grid and its 0.5-granularity arithmetic are exactly representable
+        in bf16 — only the scale division loses ulps, shifting rare
+        tie-adjacent roundings). The fused Pallas kernel is the real fix on
+        TPU; this flag is its XLA-path analogue (§Perf).
+
+    Returns:
+      The dequantized array, same shape/dtype as ``x``.
+    """
+    if sr and key is None:
+        raise ValueError("stochastic rounding requires a PRNG key")
+    orig_dtype = x.dtype
+    xf = x.astype(compute_dtype)
+    xf = jnp.moveaxis(xf, axis, -1)
+    moved_shape = xf.shape
+    n = moved_shape[-1]
+    pad = (-n) % block_size
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * (xf.ndim - 1) + [(0, pad)])
+    xb = xf.reshape(xf.shape[:-1] + (-1, block_size))
+
+    absx = jnp.abs(xb)
+    if tensor_amax is None:
+        tensor_amax = jnp.max(absx)
+    s_t = jnp.maximum(tensor_amax.astype(jnp.float32) / TENSOR_SCALE_DENOM, _EPS)
+
+    block_amax = jnp.max(absx, axis=-1, keepdims=True)
+    s_b = _quantize_scale_e4m3(block_amax.astype(jnp.float32) / (E2M1_MAX * s_t))
+    scale = (s_b * s_t).astype(compute_dtype)  # effective per-block scale
+
+    eps = jnp.asarray(_EPS if compute_dtype == jnp.float32 else 1e-30,
+                      jnp.float32).astype(compute_dtype)
+    a = jnp.where(scale > 0, absx / jnp.maximum(scale, eps), 0)
+    if sr:
+        # u in the compute dtype: bf16 quantizes P(up) to ~1/256 steps — an
+        # SR bias bounded by 0.4% of one grid step, negligible vs FP4 noise.
+        u = jax.random.uniform(key, xb.shape, dtype=jnp.float32).astype(
+            compute_dtype
+        )
+        q = round_e2m1_sr(a, u)
+    else:
+        q = round_e2m1_rn(a)
+    deq = jnp.sign(xb) * q * scale
+
+    deq = deq.reshape(moved_shape[:-1] + (n + pad,))
+    if pad:
+        deq = deq[..., :n]
+    return jnp.moveaxis(deq, -1, axis).astype(orig_dtype)
+
+
+def nvfp4_quant_error(x: jax.Array, axis: int = -1, **kw) -> jax.Array:
+    """Relative Frobenius quantization error ||QDQ(x) - x||_F / ||x||_F."""
+    q = nvfp4_qdq(x, axis, **kw)
+    xf = x.astype(jnp.float32)
+    return jnp.linalg.norm(q.astype(jnp.float32) - xf) / jnp.maximum(
+        jnp.linalg.norm(xf), _EPS
+    )

@@ -1,0 +1,249 @@
+"""Quantized GeMM with a custom VJP — the single entry point every model
+projection in this framework routes through.
+
+``qgemm(cfg, x, w, key)`` computes x @ w under one of five recipes:
+
+  bf16             full-precision baseline
+  nvfp4            vanilla blockwise NVFP4 W4A4G4
+  nvfp4_hadamard   NVFP4 + tiled 16x16 Hadamard smoothing (NVIDIA baseline)
+  averis           NVFP4 + mean-residual splitting (paper Eqs. 8-10)
+  averis_hadamard  Averis + Hadamard on the residual stream (paper "combined")
+
+W4A4G4 scope: *both operands of every GeMM* (forward, input-grad, weight-grad)
+are quantized, blocks along the contraction dim of that GeMM; stochastic
+rounding is applied to the output-gradient operand of the backward GeMMs
+(cfg.sr_grad), round-to-nearest everywhere else. The backward implements the
+paper's quantized gradient computation directly (Eqs. 9-10 for Averis) with
+straight-through semantics across quantizers — this IS the training algorithm,
+not autodiff through the quantizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .averis import averis_forward, averis_input_grad, averis_weight_grad, split_mean
+from .hadamard import hadamard_tiles
+from .nvfp4 import nvfp4_qdq
+from .formats import MODES
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static quantization recipe configuration (hashable; safe as nondiff arg)."""
+
+    mode: str = "bf16"
+    sr_grad: bool = True        # stochastic rounding on gradient quantization (G4)
+    quantize_weights: bool = True   # W4 (False -> A4G4 with bf16 weights)
+    block_size: int = 16
+    # §Perf knobs (see EXPERIMENTS.md): paper-faithful defaults are float32.
+    comm_dtype: str = "float32"  # dtype of GeMM partial sums -> the dtype TP
+                                 # activation all-reduces travel in
+    qdq_dtype: str = "float32"   # dtype of the QDQ simulation chain
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown quant mode {self.mode!r}; expected one of {MODES}")
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.mode != "bf16"
+
+
+BF16 = QuantConfig(mode="bf16")
+NVFP4 = QuantConfig(mode="nvfp4")
+NVFP4_HADAMARD = QuantConfig(mode="nvfp4_hadamard")
+AVERIS = QuantConfig(mode="averis")
+AVERIS_HADAMARD = QuantConfig(mode="averis_hadamard")
+
+_RECIPES = {c.mode: c for c in (BF16, NVFP4, NVFP4_HADAMARD, AVERIS, AVERIS_HADAMARD)}
+
+
+def recipe(name: str, **overrides) -> QuantConfig:
+    """Look up a recipe by name, optionally overriding fields."""
+    base = _RECIPES[name]
+    return dataclasses.replace(base, **overrides) if overrides else base
+
+
+def _q(cfg: QuantConfig, *, sr: bool = False, key: Optional[jax.Array] = None):
+    """Quantizer closure: (t, axis) -> QDQ(t) under this recipe's block size."""
+    def quant(t, axis=-1):
+        return nvfp4_qdq(t, axis, sr=sr, key=key, block_size=cfg.block_size,
+                         compute_dtype=jnp.dtype(cfg.qdq_dtype))
+    return quant
+
+
+def _qw(cfg: QuantConfig, w: jax.Array, axis: int) -> jax.Array:
+    """Weight quantization honoring cfg.quantize_weights (W4 vs bf16 weights)."""
+    if not cfg.quantize_weights:
+        return w
+    return nvfp4_qdq(w, axis, block_size=cfg.block_size,
+                     compute_dtype=jnp.dtype(cfg.qdq_dtype))
+
+
+def _dot(a, b, acc_dtype=jnp.float32):
+    return jnp.dot(a, b, preferred_element_type=acc_dtype)
+
+
+def _had(t: jax.Array, axis: int) -> jax.Array:
+    """Tiled Hadamard along ``axis``, skipped when the axis length is not a
+    multiple of 16 (padding would break the paired-transform exactness; the
+    GeMM is then computed unrotated — correct, just unsmoothed). Only ragged
+    token counts hit this; contraction dims in the model zoo are 16-aligned.
+    """
+    if t.shape[axis] % 16 != 0:
+        return t
+    return hadamard_tiles(t, axis)
+
+
+# --------------------------------------------------------------------------
+# custom_vjp core (2-D operands; the public qgemm flattens leading dims)
+# --------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _qgemm2d(cfg: QuantConfig, x: jax.Array, w: jax.Array, key: jax.Array):
+    y, _ = _qgemm2d_fwd(cfg, x, w, key)
+    return y
+
+
+def _forward(cfg: QuantConfig, x, w, key):
+    mode = cfg.mode
+    acc = jnp.dtype(cfg.comm_dtype)
+    if mode == "bf16":
+        return _dot(x, w, acc).astype(x.dtype)
+    if mode == "nvfp4":
+        xq = _q(cfg)(x, axis=-1)
+        wq = _qw(cfg, w, axis=0)
+        return _dot(xq, wq, acc).astype(x.dtype)
+    if mode == "nvfp4_hadamard":
+        xq = _q(cfg)(_had(x, -1), axis=-1)
+        wq = _qw(cfg, _had(w, 0), axis=0)
+        return _dot(xq, wq, acc).astype(x.dtype)
+    if mode == "averis":
+        wq = _qw(cfg, w, axis=0)
+        return averis_forward(x, wq, _q(cfg), _q(cfg), acc_dtype=acc)
+    if mode == "averis_hadamard":
+        # Mean path uses the plain quantized weight; the residual stream gets
+        # the paired tiled-Hadamard rotation before quantization (Eq. 8 with
+        # element-space smoothing on the residual only).
+        wq_mean = _qw(cfg, w, axis=0)
+        wq_res = _qw(cfg, _had(w, 0), axis=0)
+        mu, x_r = split_mean(x, token_axis=0)
+        mu_bar = _q(cfg)(mu, axis=-1)
+        xr_bar = _q(cfg)(_had(x_r, -1), axis=-1)
+        mean_row = _dot(mu_bar, wq_mean, acc)
+        return (_dot(xr_bar, wq_res, acc) + mean_row[None, :]).astype(x.dtype)
+    raise ValueError(mode)
+
+
+def _qgemm2d_fwd(cfg: QuantConfig, x, w, key):
+    y = _forward(cfg, x, w, key)
+    return y, (x, w, key)
+
+
+def _qgemm2d_bwd(cfg: QuantConfig, res, g):
+    x, w, key = res
+    mode = cfg.mode
+    acc = jnp.dtype(cfg.comm_dtype)
+    g = g.astype(x.dtype)
+    kdx, kdw = jax.random.split(jax.random.fold_in(key, 1))
+    sr = cfg.sr_grad
+
+    if mode == "bf16":
+        dx = _dot(g, w.T, acc).astype(x.dtype)
+        dw = _dot(x.T, g, acc).astype(w.dtype)
+
+    elif mode == "nvfp4":
+        # dX = Q_sr(D) Q(W|n)^T     (contraction dim n)
+        gq = _q(cfg, sr=sr, key=kdx)(g, axis=-1)
+        wq_n = _qw(cfg, w, axis=1)
+        dx = _dot(gq, wq_n.T, acc).astype(x.dtype)
+        # dW = Q(X|l)^T Q_sr(D|l)   (contraction dim l)
+        xq_l = _q(cfg)(x, axis=0)
+        gq_l = _q(cfg, sr=sr, key=kdw)(g, axis=0)
+        dw = _dot(xq_l.T, gq_l, acc).astype(w.dtype)
+
+    elif mode == "nvfp4_hadamard":
+        # dX: rotate along n:  (D H_n)(H_n^T W^T)
+        gq = _q(cfg, sr=sr, key=kdx)(_had(g, -1), axis=-1)
+        wq_n = _qw(cfg, _had(w, 1), axis=1)
+        dx = _dot(gq, wq_n.T, acc).astype(x.dtype)
+        # dW: rotate along l:  (H_l X)^T (H_l D)
+        xq_l = _q(cfg)(_had(x, 0), axis=0)
+        gq_l = _q(cfg, sr=sr, key=kdw)(_had(g, 0), axis=0)
+        dw = _dot(xq_l.T, gq_l, acc).astype(w.dtype)
+
+    elif mode == "averis":
+        wq_n = _qw(cfg, w, axis=1)
+        dx = averis_input_grad(g, wq_n, _q(cfg), _q(cfg, sr=sr, key=kdx),
+                               acc_dtype=acc)
+        dw = averis_weight_grad(
+            x, g, _q(cfg), _q(cfg), _q(cfg, sr=sr, key=kdw), acc_dtype=acc
+        ).astype(w.dtype)
+
+    elif mode == "averis_hadamard":
+        # Eq. 9 with Hadamard on the residual stream (contraction n).
+        mu_d, d_r = split_mean(g, token_axis=0)
+        mud_bar = _q(cfg)(mu_d, axis=-1)
+        dr_bar = _q(cfg, sr=sr, key=kdx)(_had(d_r, -1), axis=-1)
+        wq_mean_n = _qw(cfg, w, axis=1)
+        wq_res_n = _qw(cfg, _had(w, 1), axis=1)
+        mean_row = _dot(mud_bar, wq_mean_n.T, acc)
+        dx = (_dot(dr_bar, wq_res_n.T, acc) + mean_row[None, :]).astype(x.dtype)
+        # Eq. 10 with Hadamard on the residual GeMM (contraction l):
+        # (H_l X_R)^T (H_l D_R) = X_R^T D_R exactly in infinite precision.
+        lx = x.shape[0]
+        mu_x, x_r = split_mean(x, token_axis=0)
+        mux_bar = _q(cfg)(mu_x, axis=-1)
+        xr_bar = _q(cfg)(_had(x_r, 0), axis=0)
+        drl_bar = _q(cfg, sr=sr, key=kdw)(_had(d_r, 0), axis=0)
+        rank1 = lx * jnp.outer(
+            mux_bar.astype(jnp.float32), mud_bar.astype(jnp.float32)
+        ).astype(acc)
+        dw = (_dot(xr_bar.T, drl_bar, acc) + rank1).astype(w.dtype)
+
+    else:  # pragma: no cover
+        raise ValueError(mode)
+
+    dkey = np.zeros(key.shape, dtype=jax.dtypes.float0)
+    return dx, dw, dkey
+
+
+_qgemm2d.defvjp(_qgemm2d_fwd, _qgemm2d_bwd)
+
+
+# --------------------------------------------------------------------------
+# Public API
+# --------------------------------------------------------------------------
+
+def qgemm(x: jax.Array, w: jax.Array, cfg: QuantConfig, key: jax.Array) -> jax.Array:
+    """Quantized ``x @ w`` for ``x`` of shape (..., m) and ``w`` of (m, n).
+
+    All leading dims of ``x`` are flattened into the token axis l — the Averis
+    column mean is taken over every token in the GeMM, exactly as the paper
+    reshapes (b, s, m) -> (l, m).
+    """
+    m = w.shape[0]
+    if x.shape[-1] != m:
+        raise ValueError(f"qgemm: x[...,{x.shape[-1]}] @ w[{m},...] mismatch")
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, m))
+    y2 = _qgemm2d(cfg, x2, w, key)
+    return y2.reshape(lead + (w.shape[1],))
+
+
+def qgemm_expert(
+    x: jax.Array, w: jax.Array, cfg: QuantConfig, key: jax.Array
+) -> jax.Array:
+    """Per-expert quantized GeMM: x (E, C, m) @ w (E, m, n) -> (E, C, n).
+
+    Each expert's dispatched token group forms its own ``l`` axis, so the
+    Averis mean is computed per expert group (DESIGN.md §5, MoE row).
+    """
+    keys = jax.random.split(key, w.shape[0])
+    return jax.vmap(lambda xe, we, ke: _qgemm2d(cfg, xe, we, ke))(x, w, keys)

@@ -1,0 +1,2 @@
+"""Deterministic resumable data pipelines."""
+from .pipeline import DataConfig, EmbeddingStream, TokenStream, make_stream

@@ -1,0 +1,141 @@
+"""Deterministic, resumable synthetic data pipeline.
+
+Fault-tolerance substrate: every batch is a pure function of (seed, step), so
+a job restarted from a step-k checkpoint regenerates byte-identical batches
+from step k with NO data-loader state to persist — the idiom large TPU jobs
+use with deterministic input pipelines (here taken to its logical extreme).
+
+Two generators:
+
+  * ``TokenStream`` — Markov-chain token sequences (not uniform noise: the
+    chain has learnable structure so tiny models show real loss curves and
+    the FP4-recipe loss-gap ordering is measurable).
+  * ``EmbeddingStream`` — synthetic frame/patch embeddings + labels for the
+    stub-frontend archs (vlm/audio). Embeddings carry a planted rank-one
+    mean-bias component whose strength grows with feature index, exercising
+    exactly the activation structure the paper analyzes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    batch_size: int = 8
+    seq_len: int = 256
+    vocab_size: int = 256
+    # Markov chain sharpness: higher -> more predictable -> lower attainable CE
+    chain_alpha: float = 6.0
+    n_states: int = 64
+
+
+def _chain_tables(cfg: DataConfig) -> np.ndarray:
+    """Row-stochastic transition table over a small state space, mapped into
+    the vocab by a fixed affine hash. Deterministic in cfg.seed."""
+    rng = np.random.default_rng(cfg.seed + 7919)
+    logits = rng.gumbel(size=(cfg.n_states, cfg.n_states)) * cfg.chain_alpha
+    p = np.exp(logits - logits.max(axis=1, keepdims=True))
+    return p / p.sum(axis=1, keepdims=True)
+
+
+class TokenStream:
+    """batch(step) -> {"tokens": (B, S) int32}; pure in (seed, step)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self._p = _chain_tables(cfg)
+        self._cum = np.cumsum(self._p, axis=1)
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed << 20) ^ step)
+        b, s = cfg.batch_size, cfg.seq_len
+        states = np.empty((b, s), np.int64)
+        states[:, 0] = rng.integers(0, cfg.n_states, b)
+        u = rng.random((b, s))
+        for t in range(1, s):
+            rows = self._cum[states[:, t - 1]]
+            states[:, t] = (u[:, t : t + 1] < rows).argmax(axis=1)
+        # map states into vocab with a step-independent scatter
+        tokens = (states * 2654435761 % cfg.vocab_size).astype(np.int32)
+        return {"tokens": tokens}
+
+    def iterate(self, start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+        step = start_step
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class EmbeddingStream:
+    """batch(step) -> {"embeddings", "labels"[, "positions"]}.
+
+    Embeddings = class-conditioned Gaussians + a planted feature-wise mean
+    bias (heavy-tailed across features), mirroring the paper's activation
+    structure so FP4-recipe comparisons are meaningful for the stub archs.
+    """
+
+    def __init__(self, cfg: DataConfig, model_cfg: ModelConfig,
+                 bias_scale: float = 2.0):
+        self.cfg = cfg
+        self.model_cfg = model_cfg
+        rng = np.random.default_rng(cfg.seed + 104729)
+        d = model_cfg.d_model
+        v = model_cfg.vocab_size
+        self._centers = rng.normal(size=(v, d)).astype(np.float32) * 0.5
+        t = rng.standard_t(df=2, size=d).astype(np.float32)
+        self._mu = t * bias_scale
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        cfg, mc = self.cfg, self.model_cfg
+        rng = np.random.default_rng((cfg.seed << 20) ^ (step + 1))
+        b, s, d = cfg.batch_size, cfg.seq_len, mc.d_model
+        labels = rng.integers(0, mc.vocab_size, (b, s)).astype(np.int32)
+        emb = (
+            self._centers[labels]
+            + rng.normal(size=(b, s, d)).astype(np.float32) * 0.3
+            + self._mu[None, None, :]
+        )
+        out: Dict[str, np.ndarray] = {
+            "embeddings": emb.astype(np.float32),
+            "labels": labels,
+        }
+        if mc.rope_type == "mrope":
+            pos = np.broadcast_to(np.arange(s, dtype=np.int32)[None, None, :],
+                                  (b, 3, s)).copy()
+            out["positions"] = pos
+        return out
+
+    def iterate(self, start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+        step = start_step
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def make_stream(model_cfg: ModelConfig, data_cfg: Optional[DataConfig] = None):
+    data_cfg = data_cfg or DataConfig(vocab_size=model_cfg.vocab_size)
+    if model_cfg.input_mode == "tokens":
+        return TokenStream(
+            dataclasses.replace(data_cfg, vocab_size=model_cfg.vocab_size)
+        )
+    return EmbeddingStream(data_cfg, model_cfg)
+
+
+def device_put_batch(batch: Dict[str, np.ndarray], compute_dtype=jnp.bfloat16):
+    out = {}
+    for k, v in batch.items():
+        arr = jnp.asarray(v)
+        if arr.dtype == jnp.float32 and k == "embeddings":
+            arr = arr.astype(compute_dtype)
+        out[k] = arr
+    return out

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: tiled 16x16 Hadamard transform (the baseline's hot path).
+
+Each (TILE_L, TILE_M) VMEM tile is reshaped to (TILE_L, TILE_M/16, 16) and
+contracted with H16 on the MXU. Provided both for a fair baseline in the
+overhead benchmarks and because NVFP4-Hadamard / Averis-Hadamard are shipped
+recipes in this framework.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import HADAMARD_16
+from .nvfp4_quant import DEFAULT_TILE_L, DEFAULT_TILE_M
+
+_TILE = 16
+
+
+def _hadamard_kernel(x_ref, h_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    tl, tm = x.shape
+    xt = x.reshape(tl, tm // _TILE, _TILE)
+    h = h_ref[...].astype(jnp.float32)
+    y = jax.lax.dot_general(
+        xt, h, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] = y.reshape(tl, tm).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_l", "tile_m", "interpret")
+)
+def hadamard16_2d(
+    x: jax.Array,
+    *,
+    tile_l: int = DEFAULT_TILE_L,
+    tile_m: int = DEFAULT_TILE_M,
+    interpret: bool = True,
+) -> jax.Array:
+    """Apply tiled orthonormal H16 along the last axis of a 2-D array.
+
+    Requires m % 16 == 0 (transformer dims in this repo always satisfy it).
+    """
+    l, m = x.shape
+    if m % _TILE != 0:
+        raise ValueError(f"hadamard16_2d: m={m} not a multiple of {_TILE}")
+    tile_l = min(tile_l, max(8, l))
+    tile_m = min(tile_m, m)
+    if m % tile_m != 0 or tile_m % _TILE != 0:
+        tile_m = m
+    pad_l = (-l) % tile_l
+    xp = jnp.pad(x, ((0, pad_l), (0, 0)))
+    h = jnp.asarray(HADAMARD_16)
+    grid = (xp.shape[0] // tile_l, m // tile_m)
+    out = pl.pallas_call(
+        _hadamard_kernel,
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_l, tile_m), lambda i, j: (i, j)),
+            pl.BlockSpec((_TILE, _TILE), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_l, tile_m), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(xp, h)
+    return out[:l]

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: fused blockwise NVFP4 quantize-dequantize.
+
+One VMEM round-trip per tile: load a (TILE_L, TILE_M) activation tile, compute
+the 16-element block amaxes along the lane (contraction) dim, derive E4M3
+block scales against the per-tensor fp32 scale, round elements to the E2M1
+grid (RNE or stochastic), and write the dequantized bf16/f32 tile back.
+
+This is the deployment artifact for the quantization hot path; validated in
+``interpret=True`` against ``repro.core.nvfp4`` (which itself is validated
+against ml_dtypes float4 casts). Tile shapes are MXU/VPU aligned: lane dim a
+multiple of 128 (and of the 16-element scale block), sublane dim a multiple
+of 8.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import BLOCK_SIZE, E2M1_MAX, E4M3_MAX, TENSOR_SCALE_DENOM
+
+DEFAULT_TILE_L = 256
+DEFAULT_TILE_M = 512
+_EPS = 1e-30
+
+
+def _round_e2m1_rn(a):
+    """E2M1 RNE on |values| in block-scale units (same math as core.nvfp4)."""
+    a = jnp.minimum(a, E2M1_MAX)
+    r = jnp.where(
+        a < 2.0,
+        jnp.round(a * 2.0) * 0.5,
+        jnp.where(a < 4.0, jnp.round(a), jnp.round(a * 0.5) * 2.0),
+    )
+    return jnp.minimum(r, E2M1_MAX)
+
+
+def _round_e2m1_sr(a, u):
+    """Stochastic E2M1 rounding; u uniform[0,1) same shape."""
+    a = jnp.minimum(a, E2M1_MAX)
+    step = jnp.where(a < 2.0, 0.5, jnp.where(a < 4.0, 1.0, 2.0))
+    lo = jnp.floor(a / step) * step
+    hi = jnp.minimum(lo + step, E2M1_MAX)
+    p_up = (a - lo) / jnp.maximum(step, _EPS)
+    return jnp.minimum(jnp.where(u < p_up, hi, lo), E2M1_MAX)
+
+
+def _qdq_tile(x, s_t, u=None):
+    """QDQ a 2-D fp32 tile whose lane dim is a multiple of BLOCK_SIZE."""
+    tl, tm = x.shape
+    xb = x.reshape(tl, tm // BLOCK_SIZE, BLOCK_SIZE)
+    absx = jnp.abs(xb)
+    block_amax = jnp.max(absx, axis=-1, keepdims=True)
+    s_b = jnp.clip(block_amax / (E2M1_MAX * s_t), 0.0, E4M3_MAX)
+    s_b = s_b.astype(jnp.float8_e4m3fn).astype(jnp.float32)  # RN to E4M3
+    scale = s_b * s_t
+    a = jnp.where(scale > 0, absx / jnp.maximum(scale, _EPS), 0.0)
+    if u is None:
+        q = _round_e2m1_rn(a)
+    else:
+        q = _round_e2m1_sr(a, u.reshape(a.shape))
+    return (jnp.sign(xb) * q * scale).reshape(tl, tm)
+
+
+def _kernel_rn(x_ref, st_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = _qdq_tile(x, st_ref[0, 0]).astype(o_ref.dtype)
+
+
+def _kernel_sr(x_ref, st_ref, bits_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    # uint32 -> uniform [0, 1): top 24 bits for an exact float32 lattice.
+    u = (bits_ref[...] >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    o_ref[...] = _qdq_tile(x, st_ref[0, 0], u).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_l", "tile_m", "interpret")
+)
+def nvfp4_qdq_2d(
+    x: jax.Array,
+    bits: Optional[jax.Array] = None,
+    *,
+    tile_l: int = DEFAULT_TILE_L,
+    tile_m: int = DEFAULT_TILE_M,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blockwise NVFP4 QDQ of a 2-D array along its last (contraction) axis.
+
+    ``bits``: optional uint32 random bits (same shape) -> stochastic rounding.
+    Pads both dims to tile multiples (zero padding is scale-neutral: a zero
+    block quantizes to zero).
+    """
+    l, m = x.shape
+    tile_l = min(tile_l, max(8, l))
+    tile_m = min(tile_m, max(BLOCK_SIZE, m))
+    pad_l = (-l) % tile_l
+    pad_m = (-m) % tile_m
+    s_t = jnp.maximum(
+        jnp.max(jnp.abs(x.astype(jnp.float32))) / TENSOR_SCALE_DENOM, _EPS
+    ).reshape(1, 1)
+    xp = jnp.pad(x, ((0, pad_l), (0, pad_m)))
+    grid = (xp.shape[0] // tile_l, xp.shape[1] // tile_m)
+    x_spec = pl.BlockSpec((tile_l, tile_m), lambda i, j: (i, j))
+    st_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    out_shape = jax.ShapeDtypeStruct(xp.shape, x.dtype)
+    if bits is None:
+        out = pl.pallas_call(
+            _kernel_rn,
+            out_shape=out_shape,
+            grid=grid,
+            in_specs=[x_spec, st_spec],
+            out_specs=x_spec,
+            interpret=interpret,
+        )(xp, s_t)
+    else:
+        bp = jnp.pad(bits, ((0, pad_l), (0, pad_m)))
+        out = pl.pallas_call(
+            _kernel_sr,
+            out_shape=out_shape,
+            grid=grid,
+            in_specs=[x_spec, st_spec, x_spec],
+            out_specs=x_spec,
+            interpret=interpret,
+        )(xp, s_t, bp)
+    return out[:l, :m]

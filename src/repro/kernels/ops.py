@@ -1,0 +1,93 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle arbitrary ranks/axes (kernels are 2-D, contraction-last), PRNG-key ->
+random-bits plumbing for stochastic rounding, and the interpret switch:
+``interpret=True`` (default here) executes the kernel bodies in Python on CPU
+for validation; on a real TPU deployment ``interpret=False`` compiles via
+Mosaic. The model graph uses the XLA path (repro.core) for dry-run lowering —
+see DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .hadamard16 import hadamard16_2d
+from .mean_split import column_mean_2d, mean_split_qdq_2d
+from .nvfp4_quant import nvfp4_qdq_2d
+
+
+def _to_2d(x: jax.Array, axis: int):
+    """Move ``axis`` last and flatten the rest; return (x2d, restore_fn)."""
+    xm = jnp.moveaxis(x, axis, -1)
+    shp = xm.shape
+    x2 = xm.reshape((-1, shp[-1]))
+
+    def restore(y2):
+        return jnp.moveaxis(y2.reshape(shp), -1, axis)
+
+    return x2, restore
+
+
+def _bits_like(key: jax.Array, x2: jax.Array) -> jax.Array:
+    return jax.random.bits(key, x2.shape, jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "interpret"))
+def nvfp4_qdq_pallas(
+    x: jax.Array,
+    axis: int = -1,
+    key: Optional[jax.Array] = None,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blockwise NVFP4 QDQ along ``axis`` via the fused Pallas kernel."""
+    x2, restore = _to_2d(x, axis)
+    bits = _bits_like(key, x2) if key is not None else None
+    return restore(nvfp4_qdq_2d(x2, bits, interpret=interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "interpret"))
+def averis_split_qdq_pallas(
+    x: jax.Array,
+    axis: int = -1,
+    token_axis_mean: bool = True,
+    key: Optional[jax.Array] = None,
+    *,
+    interpret: bool = True,
+):
+    """Averis preprocessing: column mean + fused subtract-&-QDQ of the residual.
+
+    Returns (mu, qdq_residual). ``axis`` is the quantization (contraction)
+    axis; the mean is always over the flattened token axis (all other dims),
+    matching ``repro.core.averis.split_mean``.
+    """
+    x2, restore = _to_2d(x, axis)
+    mu = column_mean_2d(x2, interpret=interpret)
+    amax = jnp.max(jnp.abs(x2.astype(jnp.float32) - mu))
+    bits = _bits_like(key, x2) if key is not None else None
+    qr = mean_split_qdq_2d(x2, mu, amax, bits, interpret=interpret)
+    return mu.reshape(-1), restore(qr)
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "interpret"))
+def hadamard16_pallas(
+    x: jax.Array, axis: int = -1, *, interpret: bool = True
+) -> jax.Array:
+    """Tiled orthonormal H16 transform along ``axis`` via the Pallas kernel."""
+    x2, restore = _to_2d(x, axis)
+    return restore(hadamard16_2d(x2, interpret=interpret))
+
+
+__all__ = [
+    "nvfp4_qdq_pallas",
+    "averis_split_qdq_pallas",
+    "hadamard16_pallas",
+    "column_mean_2d",
+    "mean_split_qdq_2d",
+    "nvfp4_qdq_2d",
+    "hadamard16_2d",
+]

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are thin, independent compositions of the core numerics (which are
+themselves validated against ml_dtypes float4/float8 casts) expressed exactly
+in the kernels' contract: 2-D input, contraction along the last axis.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import E2M1_MAX, TENSOR_SCALE_DENOM
+from repro.core.hadamard import hadamard_tiles
+from repro.core.nvfp4 import _quantize_scale_e4m3, round_e2m1_rn, round_e2m1_sr
+
+_EPS = 1e-30
+
+
+def _bits_to_uniform(bits: jax.Array) -> jax.Array:
+    """Same uint32 -> [0,1) mapping the kernels use (top 24 bits)."""
+    return (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+
+
+def nvfp4_qdq_2d_ref(
+    x: jax.Array, bits: Optional[jax.Array] = None, block_size: int = 16
+) -> jax.Array:
+    """Oracle for kernels.nvfp4_quant.nvfp4_qdq_2d."""
+    l, m = x.shape
+    xf = x.astype(jnp.float32)
+    pad = (-m) % block_size
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad)))
+        if bits is not None:
+            bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    xb = xf.reshape(l, -1, block_size)
+    absx = jnp.abs(xb)
+    s_t = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))) / TENSOR_SCALE_DENOM, _EPS)
+    s_b = _quantize_scale_e4m3(jnp.max(absx, axis=-1, keepdims=True) / (E2M1_MAX * s_t))
+    scale = s_b * s_t
+    a = jnp.where(scale > 0, absx / jnp.maximum(scale, _EPS), 0.0)
+    if bits is None:
+        q = round_e2m1_rn(a)
+    else:
+        q = round_e2m1_sr(a, _bits_to_uniform(bits).reshape(a.shape))
+    out = (jnp.sign(xb) * q * scale).reshape(l, m + pad)[:, :m]
+    return out.astype(x.dtype)
+
+
+def column_mean_2d_ref(x: jax.Array) -> jax.Array:
+    """Oracle for kernels.mean_split.column_mean_2d."""
+    return jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+
+
+def mean_split_qdq_2d_ref(
+    x: jax.Array,
+    mu: jax.Array,
+    residual_amax: jax.Array,
+    bits: Optional[jax.Array] = None,
+    block_size: int = 16,
+) -> jax.Array:
+    """Oracle for kernels.mean_split.mean_split_qdq_2d."""
+    l, m = x.shape
+    xr = x.astype(jnp.float32) - mu.reshape(1, m).astype(jnp.float32)
+    pad = (-m) % block_size
+    if pad:
+        xr = jnp.pad(xr, ((0, 0), (0, pad)))
+        if bits is not None:
+            bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    xb = xr.reshape(l, -1, block_size)
+    absx = jnp.abs(xb)
+    s_t = jnp.maximum(residual_amax.astype(jnp.float32) / TENSOR_SCALE_DENOM, _EPS)
+    s_b = _quantize_scale_e4m3(jnp.max(absx, axis=-1, keepdims=True) / (E2M1_MAX * s_t))
+    scale = s_b * s_t
+    a = jnp.where(scale > 0, absx / jnp.maximum(scale, _EPS), 0.0)
+    if bits is None:
+        q = round_e2m1_rn(a)
+    else:
+        q = round_e2m1_sr(a, _bits_to_uniform(bits).reshape(a.shape))
+    out = (jnp.sign(xb) * q * scale).reshape(l, m + pad)[:, :m]
+    return out.astype(x.dtype)
+
+
+def hadamard16_2d_ref(x: jax.Array) -> jax.Array:
+    """Oracle for kernels.hadamard16.hadamard16_2d."""
+    return hadamard_tiles(x, axis=-1)

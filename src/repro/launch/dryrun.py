@@ -1,0 +1,397 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell we
+``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` against the production
+mesh (single-pod 16x16 and multi-pod 2x16x16), print memory_analysis /
+cost_analysis, extract the collective schedule from the compiled HLO, and
+write a JSON artifact that the roofline analysis (benchmarks/roofline.py,
+EXPERIMENTS.md §Roofline) consumes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multipod-only --quant averis
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, SHAPES, get_config, runnable_shapes
+from repro.configs.base import ShapeConfig
+from repro.core.qgemm import recipe
+from repro.launch.mesh import make_production_mesh
+from repro.models.layers import QuantCtx
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.launch import hlo_analysis
+from repro.parallel.sharding import ShardingRules, tree_shardings, use_rules
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f4e2m1fn": 1,
+}
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Per-device ICI traffic of every collective op in the compiled HLO.
+
+    Post-SPMD HLO lines carry types on the RESULT only, e.g.
+      %ar = (f32[1024]{0}) all-reduce(%x, %y), replica_groups=[16,16]<=...
+    so we parse the result type(s) and convert to ring-algorithm per-device
+    wire bytes with the standard factors (n = collective group size):
+      all-reduce       2 * S * (n-1)/n     (reduce-scatter + all-gather)
+      all-gather       S * (n-1)/n         (S = gathered result size)
+      reduce-scatter   S * (n-1)           (result is 1/n of the input)
+      all-to-all       S * (n-1)/n
+      collective-permute: S                 (one hop)
+    """
+    stats = {k: {"count": 0, "bytes": 0, "wire_bytes": 0.0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        matched = None
+        for op in _COLLECTIVES:
+            if f" {op}(" in line or f" {op}-start(" in line:
+                matched = op
+                break
+        if matched is None:
+            continue
+        eq = line.find("= ")
+        opidx = line.find(f" {matched}")
+        if eq < 0 or opidx <= eq:
+            continue
+        result_types = line[eq + 2 : opidx]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(result_types):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        m = _GROUPS_RE.search(line)
+        gsize = int(m.group(2)) if m else 2
+        frac = (gsize - 1) / max(gsize, 1)
+        if matched == "all-reduce":
+            wire = 2.0 * nbytes * frac
+        elif matched == "reduce-scatter":
+            wire = float(nbytes) * (gsize - 1)
+        elif matched == "collective-permute":
+            wire = float(nbytes)
+        else:  # all-gather, all-to-all
+            wire = float(nbytes) * frac
+        stats[matched]["count"] += 1
+        stats[matched]["bytes"] += nbytes
+        stats[matched]["wire_bytes"] += wire
+    total = sum(v["wire_bytes"] for v in stats.values())
+    stats["effective_bytes"] = total
+    return stats
+
+
+def build_step(model: Model, shape: ShapeConfig, quant_mode: str,
+               rules: ShardingRules, microbatches: int = 8,
+               quant_overrides=None):
+    """Returns (fn, arg_specs, in_shardings, out_shardings, donate)."""
+    cfg = model.cfg
+    qcfg = recipe(quant_mode, **(quant_overrides or {}))
+    params_spec = model.abstract_params()
+    params_shard = tree_shardings(rules, model.param_logical(), params_spec)
+    seed_spec = jax.ShapeDtypeStruct((), jnp.uint32)
+    repl = jax.sharding.NamedSharding(rules.mesh, jax.sharding.PartitionSpec())
+
+    if shape.kind == "train":
+        ocfg = adamw.OptimizerConfig(total_steps=10_000)
+        opt_spec = jax.eval_shape(adamw.init_state, params_spec)
+        opt_shard = {
+            "step": repl,
+            "m": tree_shardings(rules, model.param_logical(), params_spec),
+            "v": tree_shardings(rules, model.param_logical(), params_spec),
+        }
+        batch_spec = model.input_specs(shape)
+        batch_shard = tree_shardings(
+            rules, model.input_logical(shape), batch_spec
+        )
+        n_micro = microbatches
+
+        def train_step(params, opt_state, batch, seed):
+            key = jax.random.key(seed)
+
+            def loss_fn(p, mb, k):
+                ctx = QuantCtx(qcfg, k)
+                loss, _ = model.loss(p, mb, ctx)
+                return loss
+
+            if n_micro > 1:
+                # Gradient accumulation over microbatches (lax.scan): the
+                # production large-batch idiom — per-step live activations
+                # are one microbatch's worth.
+                micro = jax.tree.map(
+                    lambda a: a.reshape(
+                        (n_micro, a.shape[0] // n_micro) + a.shape[1:]
+                    ),
+                    batch,
+                )
+                keys = jax.random.split(key, n_micro)
+
+                def body(carry, xs):
+                    g_acc, l_acc = carry
+                    mb, k = xs
+                    loss, grads = jax.value_and_grad(loss_fn)(params, mb, k)
+                    g_acc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32) / n_micro,
+                        g_acc, grads,
+                    )
+                    return (g_acc, l_acc + loss / n_micro), None
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                (grads, loss), _ = jax.lax.scan(body, (g0, 0.0), (micro, keys))
+            else:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch, key)
+            params2, opt2, _ = adamw.apply_updates(params, grads, opt_state, ocfg)
+            return params2, opt2, loss
+
+        args = (params_spec, opt_spec, batch_spec, seed_spec)
+        in_sh = (params_shard, opt_shard, batch_shard, repl)
+        out_sh = (params_shard, opt_shard, repl)
+        return train_step, args, in_sh, out_sh, (0, 1)
+
+    if shape.kind == "prefill":
+        batch_spec = model.input_specs(shape)
+        batch_shard = tree_shardings(rules, model.input_logical(shape), batch_spec)
+        cache_shard = tree_shardings(
+            rules, model.cache_logical(shape),
+            model.cache_specs(shape),
+        )
+
+        def prefill_step(params, batch, seed):
+            ctx = QuantCtx(qcfg, jax.random.key(seed))
+            return model.prefill(params, batch, ctx)
+
+        args = (params_spec, batch_spec, seed_spec)
+        in_sh = (params_shard, batch_shard, repl)
+        out_sh = (repl, cache_shard)
+        return prefill_step, args, in_sh, out_sh, ()
+
+    # decode
+    b = shape.global_batch
+    inp_spec = model.input_specs(shape)
+    inp_shard = tree_shardings(rules, model.input_logical(shape), inp_spec)
+    pos_spec = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos_shard = rules.sharding(("batch",), (b,))
+    cache_spec = model.cache_specs(shape)
+    cache_shard = tree_shardings(rules, model.cache_logical(shape), cache_spec)
+
+    def serve_step(params, inputs, pos, caches, seed):
+        ctx = QuantCtx(qcfg, jax.random.key(seed))
+        return model.decode_step(params, inputs, pos, caches, ctx)
+
+    args = (params_spec, inp_spec, pos_spec, cache_spec, seed_spec)
+    in_sh = (params_shard, inp_shard, pos_shard, cache_shard, repl)
+    out_sh = (repl, cache_shard)
+    return serve_step, args, in_sh, out_sh, (3,)
+
+
+def dryrun_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    quant_mode: str = "averis",
+    remat_policy: str = "nothing",
+    rules_overrides: Optional[Dict] = None,
+    extra_tag: str = "",
+    microbatches: int = 8,
+    quant_overrides: Optional[Dict] = None,
+    config_overrides: Optional[Dict] = None,
+):
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if config_overrides:
+        cfg = _dc.replace(cfg, **config_overrides)
+    shape = SHAPES[shape_name]
+    model = Model(cfg, remat_policy=remat_policy)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules(mesh, rules_overrides)
+    t0 = time.time()
+    with use_rules(rules):
+        fn, args, in_sh, out_sh, donate = build_step(
+            model, shape, quant_mode, rules, microbatches=microbatches,
+            quant_overrides=quant_overrides)
+        jitted = jax.jit(
+            fn, in_shardings=in_sh, out_shardings=out_sh,
+            donate_argnums=donate,
+        )
+        lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    tot = hlo_analysis.analyze(hlo)  # loop-aware (scan bodies x trip counts)
+    n_chips = mesh.devices.size
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": int(n_chips),
+        "quant_mode": quant_mode,
+        "remat_policy": remat_policy,
+        "microbatches": microbatches,
+        "tag": extra_tag,
+        "kind": shape.kind,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "lower_s": t1 - t0,
+        "compile_s": t2 - t1,
+        # xla cost_analysis (counts while bodies ONCE — kept for reference)
+        "xla_flops_per_device": float(cost.get("flops", 0.0)),
+        "xla_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        # loop-aware HLO analysis (see launch/hlo_analysis.py)
+        "flops_per_device": tot.flops,
+        "hbm_bytes_per_device": tot.hbm_bytes,
+        "collective_wire_bytes_per_device": tot.collective_wire_bytes,
+        "collective_counts": tot.collective_counts,
+        "collective_op_bytes": tot.collective_bytes,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "collectives": coll,
+        "num_params": cfg.num_params(),
+        "active_params": cfg.active_params(),
+    }
+    return result, hlo
+
+
+def cell_filename(out_dir: str, r: Dict[str, Any]) -> str:
+    tag = f"__{r['tag']}" if r.get("tag") else ""
+    return os.path.join(
+        out_dir,
+        f"{r['arch']}__{r['shape']}__{r['mesh']}__{r['quant_mode']}{tag}.json",
+    )
+
+
+def save_cell(out_dir: str, r: Dict[str, Any], hlo: str) -> str:
+    """Write the JSON artifact + gzipped HLO (so the analyzer can be re-run
+    offline without recompiling)."""
+    import gzip
+
+    path = cell_filename(out_dir, r)
+    with open(path, "w") as f:
+        json.dump(r, f, indent=1)
+    with gzip.open(path.replace(".json", ".hlo.gz"), "wt") as f:
+        f.write(hlo)
+    return path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: runnable)")
+    ap.add_argument("--quant", default="averis")
+    ap.add_argument("--remat", default="nothing")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--multipod-only", action="store_true")
+    ap.add_argument("--singlepod-only", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--micro", type=int, default=8)
+    ap.add_argument("--qopt", default=None,
+                    help="JSON QuantConfig overrides, e.g. "
+                         "'{\"comm_dtype\": \"bfloat16\"}'")
+    ap.add_argument("--copt", default=None,
+                    help="JSON ModelConfig overrides, e.g. "
+                         "'{\"moe_group_size\": 512}'")
+    ap.add_argument("--rules", default=None,
+                    help="JSON logical->mesh-axis overrides, e.g. "
+                         "'{\"embed\": null}' for ZeRO-1 instead of FSDP")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ALL_ARCHS
+    os.makedirs(args.out, exist_ok=True)
+    meshes = [False, True]
+    if args.multipod_only:
+        meshes = [True]
+    if args.singlepod_only:
+        meshes = [False]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [args.shape] if args.shape else list(runnable_shapes(cfg))
+        for shape_name in shapes:
+            for mp in meshes:
+                stub = {
+                    "arch": arch, "shape": shape_name,
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "quant_mode": args.quant, "tag": args.tag,
+                }
+                path = cell_filename(args.out, stub)
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {path}")
+                    continue
+                label = f"{arch} x {shape_name} x {stub['mesh']} ({args.quant})"
+                print(f"[dryrun] {label} ...", flush=True)
+                try:
+                    overrides = json.loads(args.rules) if args.rules else None
+                    qov = json.loads(args.qopt) if args.qopt else None
+                    cov = json.loads(args.copt) if args.copt else None
+                    r, hlo = dryrun_cell(arch, shape_name, mp, args.quant,
+                                         args.remat,
+                                         rules_overrides=overrides,
+                                         extra_tag=args.tag,
+                                         microbatches=args.micro,
+                                         quant_overrides=qov,
+                                         config_overrides=cov)
+                except Exception as e:  # noqa: BLE001
+                    print(f"[FAIL] {label}: {e}", flush=True)
+                    traceback.print_exc()
+                    failures.append(label)
+                    continue
+                save_cell(args.out, r, hlo)
+                print(
+                    f"[ok] {label}: compile={r['compile_s']:.1f}s "
+                    f"flops/dev={r['flops_per_device']:.3e} "
+                    f"peak_mem/dev={r['memory']['peak_estimate_bytes']/2**30:.2f}GiB "
+                    f"coll_bytes/dev={r['collectives']['effective_bytes']:.3e}",
+                    flush=True,
+                )
+    if failures:
+        print(f"{len(failures)} FAILURES: {failures}")
+        return 1
+    print("all cells compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,397 @@
+"""HLO static analyzer: loop-aware FLOP / collective / HBM-traffic counting.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, so any
+scanned computation (layer stacks, microbatch accumulation, chunked
+attention) is undercounted by its trip count. This module parses the
+post-optimization HLO text, builds the computation call graph (fusion/call/
+while/conditional), infers while trip counts from their condition
+computations (scan conditions compare the induction variable against a
+constant), and walks the graph multiplying by trip counts.
+
+Outputs per-device totals:
+  * dot_flops            — 2*M*N*K summed over every dot execution
+  * transcendental_count — exp/log/tanh/... element counts (approx)
+  * collective bytes     — per primitive, with ring wire-traffic factors
+  * hbm_bytes            — approximate HBM traffic: operand+result bytes of
+    materializing ops (fusions, dots, copies, DUS, gather/scatter, converts)
+
+This is the dry-run "profiler" that the roofline analysis and the §Perf
+hillclimbing loop read (no real-hardware trace exists on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f4e2m1fn": 1, "token": 0, "opaque": 0,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_TRANSCENDENTAL_OPS = {
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "power", "logistic",
+    "cosine", "sine", "erf", "exponential-minus-one", "log-plus-one",
+}
+# Ops that actually move data through HBM in post-optimization HLO. Pure
+# layout/shape ops (reshape/broadcast/transpose/convert/slice/pad/iota) at
+# top level are bitcasts or get fused — counting them (and their operands)
+# inflates traffic ~2 orders of magnitude; they are excluded. For the ops
+# kept, traffic = result + operand bytes (operands resolved via the local
+# symbol table; a tensor read by k consumers is genuinely read k times).
+_MATERIALIZING = {
+    "fusion", "dot", "copy", "gather", "scatter",
+    "dynamic-update-slice", "reduce", "convolution", "sort",
+    "rng-bit-generator",
+} | set(COLLECTIVE_OPS)
+
+
+def _parse_type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    raw_operands: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    defs: Dict[str, str]  # name -> type_str
+
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_ATTR_CALL_RE = {
+    "calls": re.compile(r"calls=%?([\w\.\-]+)"),
+    "body": re.compile(r"body=%?([\w\.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w\.\-]+)"),
+    "to_apply": re.compile(r"to_apply=%?([\w\.\-]+)"),
+    "branches": re.compile(r"branch_computations=\{([^}]*)\}"),
+    "true": re.compile(r"true_computation=%?([\w\.\-]+)"),
+    "false": re.compile(r"false_computation=%?([\w\.\-]+)"),
+}
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _COMP_HEADER_RE.match(line)
+            if m and line.endswith("{"):
+                cur = Computation(m.group(1), [], {})
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        if not line or "=" not in line:
+            continue
+        if line.startswith("ROOT "):
+            line = line[5:]
+        if not line.startswith("%"):
+            continue
+        eq = line.find(" = ")
+        if eq < 0:
+            continue
+        name = line[1:eq]
+        rest = line[eq + 3:]
+        # type: balanced if tuple
+        if rest.startswith("("):
+            depth = 0
+            tend = 0
+            for tend, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            type_str = rest[: tend + 1]
+            rest2 = rest[tend + 1:].lstrip()
+        else:
+            sp = rest.find(" ")
+            if sp < 0:
+                continue
+            type_str = rest[:sp]
+            rest2 = rest[sp + 1:]
+        par = rest2.find("(")
+        if par < 0:
+            continue
+        opcode = rest2[:par].strip()
+        depth = 0
+        oend = par
+        for oend in range(par, len(rest2)):
+            if rest2[oend] == "(":
+                depth += 1
+            elif rest2[oend] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operand_str = rest2[par + 1 : oend]
+        attrs = rest2[oend + 1:]
+        operands = _OPERAND_RE.findall(operand_str)
+        inst = Instruction(name, type_str, opcode, operands, attrs, operand_str)
+        cur.instructions.append(inst)
+        cur.defs[name] = type_str
+    return comps
+
+
+def _dot_flops(inst: Instruction, defs: Dict[str, str]) -> float:
+    result_dims = _parse_dims(inst.type_str)
+    if not result_dims:
+        return 0.0
+    out_elems = 1
+    for d in result_dims[0][1]:
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.attrs)
+    if not m or not inst.operands:
+        return 2.0 * out_elems  # degenerate
+    lhs_type = defs.get(inst.operands[0], "")
+    lhs_dims = _parse_dims(lhs_type)
+    if not lhs_dims:
+        return 2.0 * out_elems
+    k = 1
+    for idx in m.group(1).split(","):
+        if idx:
+            i = int(idx)
+            if i < len(lhs_dims[0][1]):
+                k *= lhs_dims[0][1][i]
+    return 2.0 * out_elems * k
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Infer a scan-style while trip count: the loop condition compares the
+    induction variable against a scalar integer constant, which prints as
+      %c = s32[] constant(24)
+    inside the condition computation. Fallback: 1 (cost lower bound)."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for inst in cond.instructions:
+        if (
+            inst.opcode == "constant"
+            and inst.type_str in ("s32[]", "u32[]", "s64[]", "u64[]")
+            and inst.raw_operands.strip().isdigit()
+        ):
+            best = max(best, int(inst.raw_operands.strip()))
+    return best
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_OPS}
+    )
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_OPS}
+    )
+
+    def add(self, other: "Totals", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.collective_wire_bytes += other.collective_wire_bytes * mult
+        for k in COLLECTIVE_OPS:
+            self.collective_counts[k] += other.collective_counts[k] * mult
+            self.collective_bytes[k] += other.collective_bytes[k] * mult
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _collective_wire(op: str, nbytes: int, attrs: str) -> float:
+    m = _GROUPS_RE.search(attrs)
+    gsize = int(m.group(2)) if m else 2
+    frac = (gsize - 1) / max(gsize, 1)
+    if op == "all-reduce":
+        return 2.0 * nbytes * frac
+    if op == "reduce-scatter":
+        return float(nbytes) * (gsize - 1)
+    if op == "collective-permute":
+        return float(nbytes)
+    return float(nbytes) * frac
+
+
+def analyze(text: str) -> Totals:
+    comps = parse_hlo(text)
+    memo: Dict[str, Totals] = {}
+
+    entry = None
+    for name in comps:
+        if name.startswith("main") or ".main" in name or name.endswith("main"):
+            entry = name
+    if entry is None:  # pick the largest computation as entry fallback
+        entry = max(comps, key=lambda n: len(comps[n].instructions))
+
+    def visit(name: str, stack: Tuple[str, ...] = (), in_fusion: bool = False
+              ) -> Totals:
+        memo_key = (name, in_fusion)
+        if memo_key in memo:
+            return memo[memo_key]
+        comp = comps.get(name)
+        t = Totals()
+        if comp is None or name in stack:
+            return t
+        for inst in comp.instructions:
+            op = inst.opcode
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op in COLLECTIVE_OPS:
+                nbytes = _parse_type_bytes(inst.type_str)
+                # -done ops repeat the result type; skip them
+                if op.endswith("-done"):
+                    continue
+                t.collective_counts[base_op] += 1
+                t.collective_bytes[base_op] += nbytes
+                t.collective_wire_bytes += _collective_wire(
+                    base_op, nbytes, inst.attrs
+                )
+                t.hbm_bytes += nbytes
+                continue
+            if op == "dot" or op == "convolution":
+                t.flops += _dot_flops(inst, comp.defs)
+            if op in _TRANSCENDENTAL_OPS:
+                t.transcendentals += _parse_type_bytes(inst.type_str)
+            if op in _MATERIALIZING and not in_fusion:
+                # HBM traffic is accounted at the fusion boundary; interior
+                # ops of a fused computation stay in registers/VMEM.
+                nbytes = _parse_type_bytes(inst.type_str)
+                for o in inst.operands:
+                    nbytes += _parse_type_bytes(comp.defs.get(o, ""))
+                t.hbm_bytes += nbytes
+            # calls
+            if op == "fusion":
+                m = _ATTR_CALL_RE["calls"].search(inst.attrs)
+                if m:
+                    t.add(visit(m.group(1), stack + (name,), True), 1.0)
+            elif op == "call":
+                m = _ATTR_CALL_RE["to_apply"].search(inst.attrs)
+                if m:
+                    t.add(visit(m.group(1), stack + (name,), in_fusion), 1.0)
+            elif op == "while":
+                mb = _ATTR_CALL_RE["body"].search(inst.attrs)
+                mc = _ATTR_CALL_RE["condition"].search(inst.attrs)
+                trips = _trip_count(comps, mc.group(1)) if mc else 1
+                if mb:
+                    t.add(visit(mb.group(1), stack + (name,), in_fusion),
+                          float(trips))
+            elif op == "conditional":
+                branches: List[str] = []
+                mb = _ATTR_CALL_RE["branches"].search(inst.attrs)
+                if mb:
+                    branches = _OPERAND_RE.findall(mb.group(1))
+                else:
+                    for key in ("true", "false"):
+                        mm = _ATTR_CALL_RE[key].search(inst.attrs)
+                        if mm:
+                            branches.append(mm.group(1))
+                if branches:
+                    sub = [visit(b, stack + (name,), in_fusion) for b in branches]
+                    # execute one branch: take the max-flops branch (upper bound)
+                    best = max(sub, key=lambda s: s.flops)
+                    t.add(best, 1.0)
+        memo[memo_key] = t
+        return t
+
+    return visit(entry)
+
+
+def analyze_compiled(compiled) -> Totals:
+    return analyze(compiled.as_text())
+
+
+def top_collectives(text: str, k: int = 12) -> List[dict]:
+    """The k largest collective ops by trip-multiplied wire bytes — the
+    'profile view' the §Perf loop reads to decide what to attack."""
+    comps = parse_hlo(text)
+
+    # execution multiplicity of each computation (product of trip counts
+    # down the call chain)
+    mult: Dict[str, float] = {}
+
+    entry = None
+    for name in comps:
+        if name.startswith("main") or ".main" in name or name.endswith("main"):
+            entry = name
+    if entry is None:
+        entry = max(comps, key=lambda n: len(comps[n].instructions))
+
+    def walk(name: str, m: float, stack: Tuple[str, ...]) -> None:
+        if name in stack or name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for inst in comps[name].instructions:
+            if inst.opcode == "fusion":
+                mm = _ATTR_CALL_RE["calls"].search(inst.attrs)
+                if mm:
+                    walk(mm.group(1), m, stack + (name,))
+            elif inst.opcode == "call":
+                mm = _ATTR_CALL_RE["to_apply"].search(inst.attrs)
+                if mm:
+                    walk(mm.group(1), m, stack + (name,))
+            elif inst.opcode == "while":
+                mb = _ATTR_CALL_RE["body"].search(inst.attrs)
+                mc = _ATTR_CALL_RE["condition"].search(inst.attrs)
+                trips = _trip_count(comps, mc.group(1)) if mc else 1
+                if mb:
+                    walk(mb.group(1), m * trips, stack + (name,))
+
+    walk(entry, 1.0, ())
+
+    rows = []
+    for cname, m in mult.items():
+        for inst in comps[cname].instructions:
+            op = inst.opcode
+            base = op[:-6] if op.endswith("-start") else op
+            if base not in COLLECTIVE_OPS or op.endswith("-done"):
+                continue
+            nbytes = _parse_type_bytes(inst.type_str)
+            wire = _collective_wire(base, nbytes, inst.attrs)
+            rows.append({
+                "op": base,
+                "name": inst.name,
+                "computation": cname,
+                "type": inst.type_str[:80],
+                "bytes": nbytes,
+                "trips": m,
+                "total_wire_bytes": wire * m,
+            })
+    rows.sort(key=lambda r: -r["total_wire_bytes"])
+    return rows[:k]

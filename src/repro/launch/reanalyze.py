@@ -1,0 +1,48 @@
+"""Re-run the loop-aware HLO analysis over stored .hlo.gz artifacts and
+refresh the JSON fields — lets the analyzer evolve without recompiling
+every cell.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze [--dir artifacts/dryrun]
+"""
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.launch import hlo_analysis
+
+
+def reanalyze_file(json_path: str) -> bool:
+    hlo_path = json_path.replace(".json", ".hlo.gz")
+    if not os.path.exists(hlo_path):
+        return False
+    with gzip.open(hlo_path, "rt") as f:
+        hlo = f.read()
+    tot = hlo_analysis.analyze(hlo)
+    r = json.load(open(json_path))
+    r["flops_per_device"] = tot.flops
+    r["hbm_bytes_per_device"] = tot.hbm_bytes
+    r["collective_wire_bytes_per_device"] = tot.collective_wire_bytes
+    r["collective_counts"] = tot.collective_counts
+    r["collective_op_bytes"] = tot.collective_bytes
+    with open(json_path, "w") as f:
+        json.dump(r, f, indent=1)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        if reanalyze_file(path):
+            n += 1
+        else:
+            print(f"[no-hlo] {path}")
+    print(f"reanalyzed {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

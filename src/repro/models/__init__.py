@@ -1,0 +1,5 @@
+"""Model zoo: quantization-aware transformer / SSM / hybrid architectures."""
+from .layers import QuantCtx
+from .model import Model, make_quant_ctx
+
+__all__ = ["Model", "QuantCtx", "make_quant_ctx"]

@@ -1,0 +1,431 @@
+"""Model API: init / forward / loss / prefill / decode_step / input_specs.
+
+A ``Model`` wraps a ``ModelConfig`` and exposes pure functions over plain
+nested-dict parameters. Layers are scanned over stacked (L, ...) params
+(compile-time O(1) in depth); every weight GeMM routes through the
+quantization context (the paper's W4A4G4 recipes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.qgemm import QuantConfig
+from repro.parallel.sharding import constrain
+from .layers import (
+    Param,
+    QuantCtx,
+    init_tree,
+    logical_tree,
+    rms_norm,
+)
+from .transformer import (
+    attn_ffn_block_apply,
+    block_cache_spec,
+    block_defs,
+    shared_block_cache_spec,
+    shared_block_defs,
+    ssm_block_apply,
+)
+
+REMAT_POLICIES = {
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    "everything": jax.checkpoint_policies.everything_saveable,
+}
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, remat_policy: str = "nothing"):
+        self.cfg = cfg
+        self.remat_policy = remat_policy
+
+    # ------------------------------------------------------------------ params
+    def _top_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        defs: Dict[str, Any] = {"final_norm": Param((cfg.d_model,), (None,), init="ones")}
+        if cfg.input_mode == "tokens":
+            defs["embed"] = Param((cfg.vocab_size, cfg.d_model), ("vocab", "embed"))
+        if not cfg.tie_embeddings:
+            defs["head"] = Param((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+        return defs
+
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        k_top, k_layers, k_shared = jax.random.split(key, 3)
+        params = init_tree(self._top_defs(), k_top, dtype)
+        layer_keys = jax.random.split(k_layers, cfg.num_layers)
+        params["layers"] = jax.vmap(
+            lambda k: init_tree(block_defs(cfg), k, dtype)
+        )(layer_keys)
+        if cfg.hybrid_attn_every:
+            params["shared"] = init_tree(shared_block_defs(cfg), k_shared, dtype)
+        return params
+
+    def abstract_params(self) -> Dict[str, Any]:
+        """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def param_logical(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        log = logical_tree(self._top_defs())
+        log["layers"] = logical_tree(block_defs(cfg), prepend=("layer",))
+        if cfg.hybrid_attn_every:
+            log["shared"] = logical_tree(shared_block_defs(cfg))
+        return log
+
+    # ------------------------------------------------------------------ inputs
+    def _positions(self, batch: Dict[str, jax.Array], b: int, s: int) -> jax.Array:
+        if self.cfg.rope_type == "mrope":
+            return batch["positions"]
+        ar = jnp.arange(s, dtype=jnp.int32)
+        return jnp.broadcast_to(ar[None, :], (b, s))
+
+    def _embed_inputs(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        if cfg.input_mode == "tokens":
+            tokens = batch["tokens"]
+            x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+        else:
+            x = batch["embeddings"].astype(cdt)
+        b, s = x.shape[:2]
+        x = constrain(x, ("batch", "seq", "embed_act"))
+        return x, self._positions(batch, b, s)
+
+    # ------------------------------------------------------------------ stacks
+    def _maybe_remat(self, fn):
+        if self.cfg.remat:
+            return jax.checkpoint(
+                fn, policy=REMAT_POLICIES[self.remat_policy], static_argnums=()
+            )
+        return fn
+
+    def _run_stack(
+        self,
+        params,
+        x: jax.Array,
+        positions: jax.Array,
+        ctx: QuantCtx,
+        mode: str,                       # train | prefill | decode
+        caches: Optional[Dict] = None,   # stacked (L,...) / hybrid dict
+        decode_pos: Optional[jax.Array] = None,
+    ):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return self._run_ssm(params, x, ctx, mode, caches)
+        if cfg.family == "hybrid":
+            return self._run_hybrid(params, x, positions, ctx, mode, caches,
+                                    decode_pos)
+        return self._run_attn(params, x, positions, ctx, mode, caches,
+                              decode_pos)
+
+    def _run_attn(self, params, x, positions, ctx, mode, caches, decode_pos):
+        cfg = self.cfg
+
+        def layer(x, p_l, cache_l, idx):
+            lctx = QuantCtx(ctx.cfg, jax.random.fold_in(ctx.key, idx))
+            return attn_ffn_block_apply(
+                p_l, x, positions, lctx, cfg, cache_l, decode_pos
+            )
+
+        if mode == "train":
+            fn = self._maybe_remat(
+                lambda x, p_l, idx: layer(x, p_l, None, idx)[::2]
+            )
+
+            def body(c, xs):
+                p_l, idx = xs
+                xo, aux = fn(c, p_l, idx)
+                return xo, aux
+
+            x, auxs = jax.lax.scan(
+                body, x, (params["layers"], jnp.arange(cfg.num_layers))
+            )
+            return x, None, jnp.sum(auxs)
+
+        def body(c, xs):
+            p_l, cache_l, idx = xs
+            xo, new_cache, aux = layer(c, p_l, cache_l, idx)
+            return xo, (new_cache, aux)
+
+        cache_xs = (
+            caches if caches is not None
+            else _none_tree(cfg.num_layers)
+        )
+        x, (new_caches, auxs) = jax.lax.scan(
+            body, x, (params["layers"], cache_xs, jnp.arange(cfg.num_layers))
+        )
+        return x, new_caches, jnp.sum(auxs)
+
+    def _run_ssm(self, params, x, ctx, mode, caches):
+        cfg = self.cfg
+
+        def layer(x, p_l, cache_l, idx):
+            lctx = QuantCtx(ctx.cfg, jax.random.fold_in(ctx.key, idx))
+            return ssm_block_apply(p_l, x, lctx, cfg, cache_l)
+
+        if mode == "train":
+            fn = self._maybe_remat(lambda x, p_l, idx: layer(x, p_l, None, idx)[0])
+
+            def body(c, xs):
+                p_l, idx = xs
+                return fn(c, p_l, idx), None
+
+            x, _ = jax.lax.scan(
+                body, x, (params["layers"], jnp.arange(cfg.num_layers))
+            )
+            return x, None, jnp.zeros((), jnp.float32)
+
+        def body(c, xs):
+            p_l, cache_l, idx = xs
+            xo, new_cache = layer(c, p_l, cache_l, idx)
+            return xo, new_cache
+
+        cache_xs = caches if caches is not None else _none_tree(cfg.num_layers)
+        x, new_caches = jax.lax.scan(
+            body, x, (params["layers"], cache_xs, jnp.arange(cfg.num_layers))
+        )
+        return x, new_caches, jnp.zeros((), jnp.float32)
+
+    def _run_hybrid(self, params, x, positions, ctx, mode, caches, decode_pos):
+        cfg = self.cfg
+        every = cfg.hybrid_attn_every
+        groups = cfg.num_layers // every
+        layers_g = jax.tree.map(
+            lambda a: a.reshape((groups, every) + a.shape[1:]), params["layers"]
+        )
+        shared = params["shared"]
+
+        def group(x, p_g, ssm_cache_g, shared_cache_g, gidx):
+            def inner(c, xs):
+                p_l, cache_l, li = xs
+                lctx = QuantCtx(ctx.cfg, jax.random.fold_in(ctx.key, gidx * every + li))
+                xo, new_cache = ssm_block_apply(p_l, c, lctx, cfg, cache_l)
+                return xo, new_cache
+
+            inner_caches = (
+                ssm_cache_g if ssm_cache_g is not None else _none_tree(every)
+            )
+            x, new_ssm = jax.lax.scan(
+                inner, x, (p_g, inner_caches, jnp.arange(every))
+            )
+            sctx = QuantCtx(ctx.cfg, jax.random.fold_in(ctx.key, 10_000 + gidx))
+            x, new_shared, _ = attn_ffn_block_apply(
+                shared, x, positions, sctx, cfg, shared_cache_g, decode_pos
+            )
+            return x, new_ssm, new_shared
+
+        if mode == "train":
+            fn = self._maybe_remat(
+                lambda x, p_g, gidx: group(x, p_g, None, None, gidx)[0]
+            )
+
+            def body(c, xs):
+                p_g, gidx = xs
+                return fn(c, p_g, gidx), None
+
+            x, _ = jax.lax.scan(body, x, (layers_g, jnp.arange(groups)))
+            return x, None, jnp.zeros((), jnp.float32)
+
+        ssm_caches, shared_caches = (
+            caches if caches is not None
+            else (_none_tree(groups), _none_tree(groups))
+        )
+        if caches is not None:
+            ssm_caches = jax.tree.map(
+                lambda a: a.reshape((groups, every) + a.shape[1:]), ssm_caches
+            )
+
+        def body(c, xs):
+            p_g, sc_g, shc_g, gidx = xs
+            xo, new_ssm, new_shared = group(c, p_g, sc_g, shc_g, gidx)
+            return xo, (new_ssm, new_shared)
+
+        x, (new_ssm, new_shared) = jax.lax.scan(
+            body, x, (layers_g, ssm_caches, shared_caches, jnp.arange(groups))
+        )
+        new_ssm = jax.tree.map(
+            lambda a: a.reshape((groups * every,) + a.shape[2:]), new_ssm
+        )
+        return x, (new_ssm, new_shared), jnp.zeros((), jnp.float32)
+
+    # ------------------------------------------------------------------ public
+    def forward(
+        self, params, batch: Dict[str, jax.Array], ctx: QuantCtx
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Training/eval forward: returns (logits (b,s,V), aux_loss)."""
+        x, positions = self._embed_inputs(params, batch)
+        x, _, aux = self._run_stack(params, x, positions, ctx, mode="train")
+        logits = self._lm_head(params, x, ctx)
+        return logits, aux
+
+    def _lm_head(self, params, x, ctx: QuantCtx) -> jax.Array:
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"])
+        w = params["embed"].T if cfg.tie_embeddings else params["head"]
+        if cfg.quantize_lm_head:
+            logits = ctx.child(99).gemm(x, w, site=0)
+        else:
+            logits = jnp.einsum(
+                "bsd,dv->bsv", x, w.astype(x.dtype),
+                preferred_element_type=jnp.float32,
+            ).astype(x.dtype)
+        return constrain(logits, ("batch", "seq", "vocab"))
+
+    def loss(
+        self, params, batch: Dict[str, jax.Array], ctx: QuantCtx
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, ctx)
+        lg = logits.astype(jnp.float32)
+        if cfg.input_mode == "tokens":
+            targets = batch["tokens"][:, 1:]
+            lg = lg[:, :-1]
+        else:
+            targets = batch["labels"]
+        logz = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(logz - gold)
+        total = ce + cfg.aux_loss_coef * aux
+        return total, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, batch, ctx: QuantCtx):
+        """Inference prefill: returns (last-position logits, stacked caches)."""
+        x, positions = self._embed_inputs(params, batch)
+        x, caches, _ = self._run_stack(params, x, positions, ctx, mode="prefill")
+        logits = self._lm_head(params, x[:, -1:, :], ctx)
+        return logits, caches
+
+    def decode_step(self, params, inputs, pos, caches, ctx: QuantCtx):
+        """One decode step. inputs: {"token": (b,)} or {"embedding": (b,1,d)};
+        pos: (b,) write/attend positions; caches as returned by cache_specs.
+        Returns (logits (b,1,V), new_caches)."""
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        if cfg.input_mode == "tokens":
+            x = jnp.take(params["embed"], inputs["token"], axis=0)[:, None, :]
+            x = x.astype(cdt)
+        else:
+            x = inputs["embedding"].astype(cdt)
+        b = x.shape[0]
+        if cfg.rope_type == "mrope":
+            positions = jnp.broadcast_to(pos[:, None, None], (b, 3, 1)).astype(jnp.int32)
+        else:
+            positions = pos[:, None].astype(jnp.int32)
+        x = constrain(x, ("batch", "seq", "embed_act"))
+        x, new_caches, _ = self._run_stack(
+            params, x, positions, ctx, mode="decode", caches=caches,
+            decode_pos=pos,
+        )
+        logits = self._lm_head(params, x, ctx)
+        return logits, new_caches
+
+    # ------------------------------------------------------------------ specs
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        cdt = jnp.dtype(cfg.compute_dtype)
+        if shape.kind in ("train", "prefill"):
+            if cfg.input_mode == "tokens":
+                specs: Dict[str, Any] = {
+                    "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)
+                }
+            else:
+                specs = {
+                    "embeddings": jax.ShapeDtypeStruct((b, s, cfg.d_model), cdt)
+                }
+                if shape.kind == "train":
+                    specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            if cfg.rope_type == "mrope":
+                specs["positions"] = jax.ShapeDtypeStruct((b, 3, s), jnp.int32)
+            return specs
+        # decode
+        if cfg.input_mode == "tokens":
+            return {"token": jax.ShapeDtypeStruct((b,), jnp.int32)}
+        return {"embedding": jax.ShapeDtypeStruct((b, 1, cfg.d_model), cdt)}
+
+    def input_logical(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        if shape.kind in ("train", "prefill"):
+            log: Dict[str, Any] = {}
+            if cfg.input_mode == "tokens":
+                log["tokens"] = ("batch", "seq")
+            else:
+                log["embeddings"] = ("batch", "seq", "embed_act")
+                if shape.kind == "train":
+                    log["labels"] = ("batch", "seq")
+            if cfg.rope_type == "mrope":
+                log["positions"] = ("batch", None, "seq")
+            return log
+        if cfg.input_mode == "tokens":
+            return {"token": ("batch",)}
+        return {"embedding": ("batch", None, "embed_act")}
+
+    def cache_specs(self, shape: ShapeConfig):
+        """Stacked cache ShapeDtypeStructs for decode cells."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        per_layer = block_cache_spec(cfg, b, s)
+        stacked = jax.tree.map(
+            lambda sds: jax.ShapeDtypeStruct((cfg.num_layers,) + sds.shape, sds.dtype),
+            per_layer,
+        )
+        if cfg.family == "hybrid":
+            groups = cfg.num_layers // cfg.hybrid_attn_every
+            shared = shared_block_cache_spec(cfg, b, s)
+            shared_stacked = jax.tree.map(
+                lambda sds: jax.ShapeDtypeStruct((groups,) + sds.shape, sds.dtype),
+                shared,
+            )
+            return (stacked, shared_stacked)
+        return stacked
+
+    def cache_logical(self, shape: ShapeConfig):
+        cfg = self.cfg
+        # Production model-axis (TP) size is 16 on both meshes. When the KV
+        # head count doesn't divide it, the cache time axis takes the model
+        # axis instead (collective-softmax decode) — otherwise a 32k cache
+        # would be replicated 16x (e.g. qwen1.5-32b: 40 kv heads).
+        tp = 16
+        kv_shardable = cfg.num_kv_heads % tp == 0
+        seq_ax = "seq_sp" if kv_shardable else "kv_seq"
+        if cfg.family in ("ssm", "hybrid"):
+            ssm_log = {
+                "conv": ("layer", "batch", None, "conv_ch"),
+                "ssm": ("layer", "batch", "ssm_heads", None, None),
+            }
+            if cfg.family == "ssm":
+                return ssm_log
+            shared_log = {
+                "k": ("layer", "batch", seq_ax, "kv_heads", None),
+                "v": ("layer", "batch", seq_ax, "kv_heads", None),
+            }
+            return (ssm_log, shared_log)
+        if cfg.attention == "mla":
+            # the latent rank dim never shards; time takes the model axis
+            return {
+                "c": ("layer", "batch", "kv_seq", None),
+                "kr": ("layer", "batch", "kv_seq", None),
+            }
+        return {
+            "k": ("layer", "batch", seq_ax, "kv_heads", None),
+            "v": ("layer", "batch", seq_ax, "kv_heads", None),
+        }
+
+
+def _none_tree(n: int):
+    """Scan-compatible placeholder for 'no cache' (per-layer None)."""
+    return None
+
+
+def make_quant_ctx(mode: str, key: jax.Array, **overrides) -> QuantCtx:
+    from repro.core.qgemm import recipe
+
+    return QuantCtx(recipe(mode, **overrides), key)

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN: top-k routing, grouped capacity dispatch, aux loss.
+
+GShard/Switch-style dispatch: tokens are viewed in groups (the sharded token
+dim), each group dispatches into (experts, capacity) slots via one-hot
+einsums — fully GSPMD-friendly (groups shard over the data axis, the expert
+dim of the weight GeMMs shards over the model axis = expert parallelism).
+
+Averis interaction: expert GeMMs go through ``qgemm_expert``, so the column
+mean is computed **per expert group** over that expert's dispatched tokens —
+the paper's MoE setting (Qwen3-MoE) does the same (DESIGN.md §5).
+
+The router itself runs in fp32 and is NOT quantized (d_model x n_experts is
+negligible and router noise is known to destabilize low-bit training).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.qgemm import qgemm_expert
+from repro.parallel.sharding import constrain
+from .layers import Param, QuantCtx
+
+
+
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, Param]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": Param((d, e), ("embed", "expert")),
+        "w_gate": Param((e, d, f), ("expert", "embed", "mlp")),
+        "w_up": Param((e, d, f), ("expert", "embed", "mlp")),
+        "w_down": Param((e, f, d), ("expert", "mlp", "embed")),
+    }
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = math.ceil(
+        tokens_per_group * cfg.num_experts_per_tok * cfg.moe_capacity_factor
+        / cfg.num_experts
+    )
+    return max(8, c)
+
+
+def moe_apply(
+    p, x: jax.Array, ctx: QuantCtx, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (b, s, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    n_tok = b * s
+    tg = min(cfg.moe_group_size, n_tok)
+    while n_tok % tg:
+        tg //= 2
+    g = n_tok // tg
+    cap = _capacity(tg, cfg)
+
+    xt = x.reshape(g, tg, d)
+    xt = constrain(xt, ("batch", None, "embed_act"))
+
+    # --- routing (fp32) -----------------------------------------------------
+    logits = jnp.einsum(
+        "gtd,de->gte", xt.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)                      # (g,tg,e)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)              # (g,tg,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # --- aux load-balance loss (Switch): E * sum_e f_e * P_e ------------------
+    onehot_k = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (g,tg,k,e)
+    token_assign = jnp.sum(onehot_k, axis=2)                     # (g,tg,e)
+    f_e = jnp.mean(token_assign, axis=(0, 1)) / k
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(f_e * p_e)
+
+    # --- capacity assignment --------------------------------------------------
+    # Slot position of each (token, choice) inside its expert's buffer: the
+    # cumulative count of earlier assignments to that expert within the group.
+    pos_in_e = jnp.cumsum(
+        onehot_k.reshape(g, tg * k, e), axis=1
+    ).reshape(g, tg, k, e) - onehot_k                            # (g,tg,k,e)
+    pos = jnp.sum(pos_in_e * onehot_k, axis=-1)                  # (g,tg,k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep                                  # drop overflow
+
+    # --- dispatch / combine one-hots ------------------------------------------
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=jnp.float32)
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot_k * keep[..., None], pos_oh)
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", onehot_k, pos_oh, gate_vals)
+
+    # Dispatch einsum selects (one-hot) token rows — exact in bf16; keeping
+    # it in compute dtype keeps its AD cotangents out of f32 collectives.
+    x_e = jnp.einsum("gtec,gtd->egcd", disp.astype(x.dtype), xt)  # (e,g,cap,d)
+    x_e = x_e.reshape(e, g * cap, d)
+    # EP over `model` when E divides it; the dispatched-token dim stays
+    # data-sharded either way, so x_e is NEVER replicated (grok-1: 8 experts
+    # on a 16-way model axis would otherwise all-gather every x_e — §Perf).
+    x_e = constrain(x_e, ("expert", "moe_tokens", "embed_act"))
+
+    # --- expert FFN (quantized; per-expert Averis mean over dispatched rows) --
+    ectx = ctx.child(31)
+    h_g = qgemm_expert(x_e, p["w_gate"].astype(x.dtype), ectx.cfg,
+                       jax.random.fold_in(ectx.key, 1))
+    h_u = qgemm_expert(x_e, p["w_up"].astype(x.dtype), ectx.cfg,
+                       jax.random.fold_in(ectx.key, 2))
+    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(x.dtype) * h_u
+    h = constrain(h, ("expert", "moe_tokens", "mlp"))
+    y_e = qgemm_expert(h, p["w_down"].astype(x.dtype), ectx.cfg,
+                       jax.random.fold_in(ectx.key, 3))          # (e,g*cap,d)
+
+    y_e = y_e.reshape(e, g, cap, d)
+    # combine: <=k weighted terms per token — bf16-safe
+    y = jnp.einsum("gtec,egcd->gtd", comb.astype(x.dtype), y_e)
+    return y.reshape(b, s, d), aux.astype(jnp.float32)

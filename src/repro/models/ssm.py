@@ -1,0 +1,193 @@
+"""Mamba2 (SSD — state-space duality) mixer block, chunked and cache-capable.
+
+Faithful to the Mamba2 formulation (arXiv:2405.21060): scalar-per-head decay
+A, per-step gate dt = softplus(.), shared B/C (ngroups=1), causal depthwise
+conv on the (x,B,C) channels, gated RMSNorm output. Computation uses the
+chunked SSD algorithm: within-chunk "attention-like" dual form + sequential
+inter-chunk state scan — O(s * Q) memory, O(s * (Q + state)) time per head
+dim, and the per-chunk body maps onto MXU matmuls on TPU.
+
+The state recurrence is not a weight GeMM, so it stays fp32 (W4A4G4 scope —
+DESIGN.md §5); the in/out projections (the FLOPs majority) are quantized via
+the QuantCtx.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain
+from .layers import Param, QuantCtx, gated_rms_norm
+
+
+def ssm_defs(cfg: ModelConfig) -> Dict[str, Param]:
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    conv_ch = di + 2 * ns
+    return {
+        "in_proj": Param((d, 2 * di + 2 * ns + nh), ("embed", "conv_ch")),
+        "conv_w": Param((cfg.ssm_conv_width, conv_ch), (None, "conv_ch"),
+                        init="normal", scale=0.1),
+        "conv_b": Param((conv_ch,), ("conv_ch",), init="zeros"),
+        "A_log": Param((nh,), ("ssm_heads",), init="mamba_A_log"),
+        "D": Param((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": Param((nh,), ("ssm_heads",), init="mamba_dt_bias"),
+        "norm": Param((di,), (None,), init="ones"),
+        "out_proj": Param((di, d), ("conv_ch", "embed")),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv along time. xbc: (b, s, ch); w: (width, ch).
+
+    ``tail``: (b, width-1, ch) of preceding raw inputs (decode/prefill-resume);
+    zeros when starting from scratch.
+    """
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([tail, xbc], axis=1)  # (b, s+width-1, ch)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return out + b[None, None, :]
+
+
+def _ssd_scan(
+    xh: jax.Array,    # (b, s, nh, hp) fp32
+    dt: jax.Array,    # (b, s, nh) fp32 (post-softplus)
+    dA: jax.Array,    # (b, s, nh) fp32 (= dt * A, negative)
+    B: jax.Array,     # (b, s, ns) fp32
+    C: jax.Array,     # (b, s, ns) fp32
+    h0: jax.Array,    # (b, nh, hp, ns) fp32 initial state
+    chunk: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (b,s,nh,hp), final_state)."""
+    b, s, nh, hp = xh.shape
+    ns = B.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(b, nc, q, *t.shape[2:]), 1, 0)
+
+    xs = (to_chunks(xh), to_chunks(dt), to_chunks(dA), to_chunks(B), to_chunks(C))
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def body(h, xs_c):
+        xh_c, dt_c, dA_c, B_c, C_c = xs_c
+        la = jnp.cumsum(dA_c, axis=1)                                 # (b,q,nh)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bqs,bnps->bqnp", C_c, h) * jnp.exp(la)[..., None]
+        # intra-chunk dual ("attention-like") form
+        cb = jnp.einsum("bis,bjs->bij", C_c, B_c)                     # (b,q,q)
+        decay = jnp.where(
+            tri[None, :, :, None],
+            jnp.exp(la[:, :, None, :] - la[:, None, :, :]),
+            0.0,
+        )                                                             # (b,i,j,nh)
+        g = cb[..., None] * decay * dt_c[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", g, xh_c)
+        # state update
+        rev = jnp.exp(la[:, -1:, :] - la) * dt_c                      # (b,q,nh)
+        s_c = jnp.einsum("bjh,bjhp,bjs->bhps", rev, xh_c, B_c)
+        h_new = jnp.exp(la[:, -1, :])[:, :, None, None] * h + s_c
+        return h_new, y_intra + y_inter
+
+    h_final, ys = jax.lax.scan(body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh, hp)
+    return y, h_final
+
+
+def ssm_apply(
+    p,
+    x: jax.Array,                       # (b, s, d)
+    ctx: QuantCtx,
+    cfg: ModelConfig,
+    cache: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mamba2 mixer. cache = {"conv": (b,w-1,ch), "ssm": (b,nh,hp,ns)} or None.
+
+    Returns (y (b,s,d), new_cache). With cache given and s==1 this is the O(1)
+    decode step (long_500k: state size is sequence-independent).
+    """
+    b, s, _ = x.shape
+    di, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+
+    zxbcdt = ctx.gemm(x, p["in_proj"], site=10)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * ns]
+    dt_raw = zxbcdt[..., 2 * di + 2 * ns :]
+
+    tail = cache["conv"] if cache is not None else None
+    conv_out = _causal_conv(
+        xbc.astype(jnp.float32),
+        p["conv_w"].astype(jnp.float32),
+        p["conv_b"].astype(jnp.float32),
+        None if tail is None else tail.astype(jnp.float32),
+    )
+    conv_out = jax.nn.silu(conv_out)
+    xi = conv_out[..., :di]
+    B = conv_out[..., di : di + ns]
+    C = conv_out[..., di + ns :]
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = dt * A[None, None, :]
+    xh = xi.reshape(b, s, nh, hp)
+    xh = constrain(xh, ("batch", "seq", "ssm_heads", None))
+
+    h0 = (
+        cache["ssm"].astype(jnp.float32)
+        if cache is not None
+        else jnp.zeros((b, nh, hp, ns), jnp.float32)
+    )
+
+    if s == 1 and cache is not None:
+        # decode: one recurrence step, no chunking
+        a = jnp.exp(dA[:, 0, :])                                   # (b,nh)
+        upd = jnp.einsum(
+            "bh,bhp,bs->bhps", dt[:, 0, :], xh[:, 0], B[:, 0]
+        )
+        h = a[:, :, None, None] * h0 + upd
+        y = jnp.einsum("bs,bhps->bhp", C[:, 0], h)[:, None]        # (b,1,nh,hp)
+        h_final = h
+    else:
+        y, h_final = _ssd_scan(
+            xh.astype(jnp.float32), dt, dA, B, C, h0, cfg.ssm_chunk
+        )
+
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = gated_rms_norm(y, z, p["norm"])
+    out = ctx.gemm(y, p["out_proj"], site=11)
+
+    # new conv tail: last (width-1) raw xbc inputs
+    width = cfg.ssm_conv_width
+    if cache is not None and s == 1:
+        new_tail = jnp.concatenate([cache["conv"][:, 1:], xbc], axis=1)
+    else:
+        pad = jnp.zeros((b, max(0, width - 1 - s), xbc.shape[-1]), xbc.dtype)
+        new_tail = jnp.concatenate([pad, xbc[:, -(width - 1) :]], axis=1)
+    new_cache = {"conv": new_tail.astype(x.dtype), "ssm": h_final}
+    return out, new_cache
+
+
+def ssm_cache_spec(cfg: ModelConfig, batch: int):
+    di, ns = cfg.d_inner, cfg.ssm_state
+    conv_ch = di + 2 * ns
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv_width - 1, conv_ch), dt),
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        ),
+    }

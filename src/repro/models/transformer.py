@@ -1,0 +1,112 @@
+"""Transformer / SSM / hybrid block assembly.
+
+One homogeneous ``block`` definition per architecture family, designed to be
+scanned over a stacked (L, ...) parameter tree so compile time and HLO size
+are O(1) in depth. Hybrid (Zamba2) stacks SSM blocks and interleaves a single
+*shared* attention+FFN block every ``hybrid_attn_every`` layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain
+from .attention import (
+    gqa_apply,
+    gqa_cache_spec,
+    gqa_defs,
+    mla_apply,
+    mla_cache_spec,
+    mla_defs,
+)
+from .layers import Param, QuantCtx, ffn_apply, ffn_defs, rms_norm
+from .moe import moe_apply, moe_defs
+from .ssm import ssm_apply, ssm_cache_spec, ssm_defs
+
+
+def block_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    """Parameter defs for ONE layer of the per-layer (scanned) stack."""
+    d = cfg.d_model
+    if cfg.family in ("ssm", "hybrid"):
+        return {"ln": Param((d,), (None,), init="ones"), "mixer": ssm_defs(cfg)}
+    attn = mla_defs(cfg) if cfg.attention == "mla" else gqa_defs(cfg)
+    block = {
+        "ln1": Param((d,), (None,), init="ones"),
+        "attn": attn,
+        "ln2": Param((d,), (None,), init="ones"),
+    }
+    if cfg.family == "moe":
+        block["moe"] = moe_defs(cfg)
+    else:
+        block["ffn"] = ffn_defs(d, cfg.d_ff, cfg.ffn_type)
+    return block
+
+
+def shared_block_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    """Zamba2's shared attention+FFN block (one copy, reused every k layers)."""
+    d = cfg.d_model
+    return {
+        "ln1": Param((d,), (None,), init="ones"),
+        "attn": gqa_defs(cfg),
+        "ln2": Param((d,), (None,), init="ones"),
+        "ffn": ffn_defs(d, cfg.d_ff, cfg.ffn_type),
+    }
+
+
+def attn_ffn_block_apply(
+    p,
+    x: jax.Array,
+    positions: jax.Array,
+    ctx: QuantCtx,
+    cfg: ModelConfig,
+    cache: Optional[Dict] = None,
+    decode_pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Pre-norm attention + FFN/MoE block. Returns (x, new_cache, aux)."""
+    h = rms_norm(x, p["ln1"])
+    if cfg.attention == "mla":
+        a, new_cache = mla_apply(p["attn"], h, positions, ctx.child(1), cfg,
+                                 cache, decode_pos)
+    else:
+        a, new_cache = gqa_apply(p["attn"], h, positions, ctx.child(1), cfg,
+                                 cache, decode_pos)
+    x = x + a
+    h = rms_norm(x, p["ln2"])
+    if "moe" in p:
+        f, aux = moe_apply(p["moe"], h, ctx.child(2), cfg)
+    else:
+        f = ffn_apply(p["ffn"], h, ctx.child(2), cfg.ffn_type)
+        aux = jnp.zeros((), jnp.float32)
+    x = x + f
+    x = constrain(x, ("batch", "seq", "embed_act"))
+    return x, new_cache, aux
+
+
+def ssm_block_apply(
+    p,
+    x: jax.Array,
+    ctx: QuantCtx,
+    cfg: ModelConfig,
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, Dict]:
+    h = rms_norm(x, p["ln"])
+    y, new_cache = ssm_apply(p["mixer"], h, ctx.child(1), cfg, cache)
+    x = x + y
+    x = constrain(x, ("batch", "seq", "embed_act"))
+    return x, new_cache
+
+
+def block_cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    """Cache spec for ONE layer of the per-layer stack."""
+    if cfg.family in ("ssm", "hybrid"):
+        return ssm_cache_spec(cfg, batch)
+    if cfg.attention == "mla":
+        return mla_cache_spec(cfg, batch, max_len)
+    return gqa_cache_spec(cfg, batch, max_len)
+
+
+def shared_block_cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    return gqa_cache_spec(cfg, batch, max_len)

@@ -1,0 +1,2 @@
+"""Optimizers: AdamW + schedules + gradient compression."""
+from . import adamw, compress

@@ -1,0 +1,53 @@
+"""Int8 error-feedback gradient compression (distributed-optimization trick).
+
+Before the data-parallel reduction, gradients can be compressed to int8 with
+per-tensor scales; the quantization residual is kept locally ("error
+feedback", 1-bit-Adam/EF-SGD lineage) and added back the next step, so the
+compression bias does not accumulate. At 1000-node scale this cuts the DP
+all-reduce (or DCN cross-pod reduce) payload 4x vs fp32 / 2x vs bf16.
+
+Implemented as a ``grad_transform`` hook for ``optim.adamw.apply_updates``.
+The compression simulates the wire format with quantize-dequantize (the same
+protocol the FP4 GeMM simulation uses), so numerics are exactly what a real
+int8 collective would deliver.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _q_int8(x: jax.Array) -> jax.Array:
+    """Symmetric per-tensor int8 QDQ in fp32."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)) / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127)
+    return q * scale
+
+
+def init_error_state(params) -> Dict[str, Any]:
+    return {"ef": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+
+def make_ef_int8_transform():
+    """Returns a grad_transform: grads' = QDQ_int8(grads + error); error
+    updated in-place inside the optimizer state under key "ef"."""
+
+    def transform(grads, state):
+        ef = state["ef"]
+
+        def comp(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q = _q_int8(corrected)
+            return q.astype(g.dtype), corrected - q
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = treedef.flatten_up_to(ef)
+        pairs = [comp(g, e) for g, e in zip(flat_g, flat_e)]
+        new_grads = treedef.unflatten([p[0] for p in pairs])
+        new_ef = treedef.unflatten([p[1] for p in pairs])
+        return new_grads, dict(state, ef=new_ef)
+
+    return transform

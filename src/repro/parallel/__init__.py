@@ -1,0 +1,4 @@
+"""Distribution: logical-axis sharding rules and mesh utilities."""
+from .sharding import ShardingRules, active_rules, constrain, use_rules
+
+__all__ = ["ShardingRules", "active_rules", "constrain", "use_rules"]

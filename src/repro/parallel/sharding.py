@@ -1,0 +1,166 @@
+"""Logical-axis sharding: rules mapping logical dim names -> mesh axes.
+
+Models annotate activations with ``constrain(x, ("batch", "seq", "embed"))``
+and parameter trees get logical specs from ``param_logical_specs``. A rule set
+(installed by the launcher inside a mesh context) maps logical names to
+physical mesh axes; with no rules installed every call is the identity, so
+single-device tests/examples run unchanged.
+
+Physical mesh axes (DESIGN.md §4):
+  pod    multi-pod data parallelism (DCN)
+  data   in-pod data parallelism + FSDP weight/optimizer sharding
+  model  tensor parallelism (heads / mlp / vocab / experts)  + SP residency
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, None]
+_state = threading.local()
+
+
+# Default logical -> physical translation. Values may be a mesh axis name, a
+# tuple of axis names, or None (replicated).
+DEFAULT_RULES: Dict[str, Union[str, Tuple[str, ...], None]] = {
+    "batch": ("pod", "data"),   # DP over pods (DCN) x in-pod data axis
+    "seq": None,                # sequence replicated by default (SP opt-in)
+    "seq_sp": "data",           # sequence-parallel residency for long context
+    "kv_seq": "model",          # KV-cache time axis when kv_heads can't shard
+                                # over the model axis (collective-softmax decode)
+    "embed": "data",            # FSDP: shard the d_model dim of weights
+    "embed_act": None,          # activations keep d_model unsharded by default
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "moe_tokens": "data",       # dispatched-token dim of expert GeMMs: keeps
+                                # x_e sharded (EP x DP) even when the expert
+                                # count can't take the model axis (grok: 8e)
+    "ssm_heads": "model",
+    "conv_ch": "model",
+    "layer": None,              # scan-stacked layer dim
+    "group": None,              # MoE dispatch groups follow batch via tokens
+    "capacity": None,
+    "state": None,
+    "rank": None,               # MLA latent ranks (small) stay replicated
+}
+
+
+def _axes_in_mesh(mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        return axes in mesh.axis_names
+    return all(a in mesh.axis_names for a in axes)
+
+
+class ShardingRules:
+    """A logical->physical rule set bound to a mesh, with divisibility checks."""
+
+    def __init__(self, mesh: Mesh, overrides: Optional[Dict] = None):
+        self.mesh = mesh
+        rules = dict(DEFAULT_RULES)
+        if overrides:
+            rules.update(overrides)
+        # Drop axes the mesh doesn't have (e.g. "pod" on the single-pod mesh).
+        self.rules: Dict[str, Union[str, Tuple[str, ...], None]] = {}
+        for k, v in rules.items():
+            if v is None:
+                self.rules[k] = None
+            elif isinstance(v, str):
+                self.rules[k] = v if v in mesh.axis_names else None
+            else:
+                kept = tuple(a for a in v if a in mesh.axis_names)
+                self.rules[k] = kept if kept else None
+
+    def _axis_size(self, phys) -> int:
+        if phys is None:
+            return 1
+        if isinstance(phys, str):
+            return self.mesh.shape[phys]
+        n = 1
+        for a in phys:
+            n *= self.mesh.shape[a]
+        return n
+
+    def spec(self, logical: Sequence[Logical], shape: Optional[Sequence[int]] = None
+             ) -> P:
+        """PartitionSpec for logical dim names.
+
+        Drops a dim's sharding when (a) the dim size is not divisible by the
+        mapped mesh-axis size, or (b) the mesh axis is already used by an
+        earlier dim (left-to-right priority). (b) is what makes e.g. MoE
+        weights ("expert","embed","mlp") shard experts over `model` and leave
+        `mlp` unsharded when experts divide, but fall back to mlp-over-model
+        when they don't (grok-1's 8 experts on a 16-way model axis) — and
+        what turns sequence-parallelism on exactly when the batch dim can't
+        use the data axis (long_500k, global_batch=1).
+        """
+        out = []
+        used: set = set()
+        for i, name in enumerate(logical):
+            if name is None:
+                out.append(None)
+                continue
+            phys = self.rules.get(name)
+            if phys is None:
+                out.append(None)
+                continue
+            axes = (phys,) if isinstance(phys, str) else tuple(phys)
+            # keep only axes not yet used by earlier dims
+            axes = tuple(a for a in axes if a not in used)
+            if not axes:
+                out.append(None)
+                continue
+            phys_eff = axes[0] if len(axes) == 1 else axes
+            if shape is not None and shape[i] % self._axis_size(phys_eff) != 0:
+                out.append(None)
+                continue
+            used.update(axes)
+            out.append(phys_eff)
+        return P(*out)
+
+    def sharding(self, logical: Sequence[Logical], shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+
+@contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    """Install a rule set for the duration of a trace (thread-local)."""
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return getattr(_state, "rules", None)
+
+
+def constrain(x: jax.Array, logical: Sequence[Logical]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without active rules)."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def tree_shardings(rules: ShardingRules, logical_tree, shape_tree):
+    """Map a tree of logical-axis tuples + shapes to NamedShardings."""
+    return jax.tree.map(
+        lambda log, shp: rules.sharding(log, shp.shape),
+        logical_tree,
+        shape_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t
+        ),
+    )

@@ -1,0 +1,108 @@
+"""Training step construction: loss, grads, optimizer, grad accumulation.
+
+``make_train_step`` builds the jit-able pure function
+    (params, opt_state, batch, step_key) -> (params, opt_state, metrics)
+with the FP4 recipe baked in via QuantConfig. Gradient accumulation is a
+``lax.scan`` over microbatches (the standard large-batch idiom: per-step
+HBM footprint is one microbatch's activations).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qgemm import QuantConfig, recipe
+from repro.models.layers import QuantCtx
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.optim.compress import init_error_state, make_ef_int8_transform
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    quant_mode: str = "bf16"
+    microbatches: int = 1            # gradient-accumulation factor
+    optimizer: adamw.OptimizerConfig = adamw.OptimizerConfig()
+    grad_compression: str = "none"   # none | ef_int8
+
+
+def make_loss_fn(model: Model, qcfg: QuantConfig):
+    def loss_fn(params, batch, key):
+        ctx = QuantCtx(qcfg, key)
+        loss, metrics = model.loss(params, batch, ctx)
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(
+    model: Model, tcfg: TrainConfig
+) -> Callable[..., Tuple[Any, Any, Dict[str, jax.Array]]]:
+    qcfg = recipe(tcfg.quant_mode)
+    loss_fn = make_loss_fn(model, qcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    transform = (
+        make_ef_int8_transform() if tcfg.grad_compression == "ef_int8" else None
+    )
+
+    def single(params, batch, key):
+        (loss, metrics), grads = grad_fn(params, batch, key)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch, step_key):
+        if tcfg.microbatches > 1:
+            n = tcfg.microbatches
+            micro = jax.tree.map(
+                lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]), batch
+            )
+            keys = jax.random.split(step_key, n)
+
+            def body(carry, xs):
+                g_acc, l_acc = carry
+                mb, k = xs
+                loss, _, grads = single(params, mb, k)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / n, g_acc, grads
+                )
+                return (g_acc, l_acc + loss / n), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = jax.lax.scan(body, (g0, 0.0), (micro, keys))
+            metrics: Dict[str, jax.Array] = {}
+        else:
+            loss, metrics, grads = single(params, batch, step_key)
+
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, tcfg.optimizer, grad_transform=transform
+        )
+        out = {"loss": loss, **metrics, **opt_metrics}
+        return params, opt_state, out
+
+    return train_step
+
+
+def init_train_state(model: Model, tcfg: TrainConfig, key: jax.Array):
+    params = model.init(key)
+    opt_state = adamw.init_state(params)
+    if tcfg.grad_compression == "ef_int8":
+        opt_state.update(init_error_state(params))
+    return params, opt_state
+
+
+def make_eval_step(model: Model, quant_mode: str):
+    """Forward-only eval under a given recipe (the paper's 'NVFP4 forward
+    evaluation' protocol for downstream numbers)."""
+    qcfg = recipe(quant_mode)
+
+    def eval_step(params, batch, key):
+        ctx = QuantCtx(qcfg, key)
+        loss, metrics = model.loss(params, batch, ctx)
+        return {"loss": loss, **metrics}
+
+    return eval_step

@@ -1,0 +1,81 @@
+"""Checkpointing: roundtrip, latest/retention, atomicity, mesh independence."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train import checkpoint
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    params = {
+        "layers": {"w": jax.random.normal(k, (4, 8)), "b": jnp.zeros((8,))},
+        "head": jax.random.normal(k, (8, 16)),
+    }
+    opt = {"step": jnp.asarray(7, jnp.int32),
+           "m": jax.tree.map(jnp.zeros_like, params),
+           "v": jax.tree.map(jnp.zeros_like, params)}
+    return params, opt
+
+
+def test_roundtrip(tmp_path):
+    params, opt = _state()
+    checkpoint.save(str(tmp_path), 7, params, opt)
+    p2, o2, step = checkpoint.restore(str(tmp_path), params, opt)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(o2["step"]) == 7
+
+
+def test_latest_and_retention(tmp_path):
+    params, opt = _state()
+    for s in [1, 2, 3, 4, 5]:
+        checkpoint.save(str(tmp_path), s, params, opt, keep=3)
+    assert checkpoint.latest_step(str(tmp_path)) == 5
+    assert sorted(checkpoint.all_steps(str(tmp_path))) == [3, 4, 5]
+
+
+def test_restore_specific_step(tmp_path):
+    params, opt = _state()
+    checkpoint.save(str(tmp_path), 1, params, opt)
+    params2 = jax.tree.map(lambda a: a + 1, params)
+    checkpoint.save(str(tmp_path), 2, params2, opt)
+    p, _, s = checkpoint.restore(str(tmp_path), params, opt, step=1)
+    assert s == 1
+    np.testing.assert_array_equal(np.asarray(p["head"]), np.asarray(params["head"]))
+
+
+def test_no_partial_checkpoints_visible(tmp_path):
+    """A directory without a manifest (interrupted save) is ignored."""
+    params, opt = _state()
+    checkpoint.save(str(tmp_path), 3, params, opt)
+    os.makedirs(tmp_path / "step_9")  # simulated wreckage, no manifest
+    assert checkpoint.latest_step(str(tmp_path)) == 3
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    params, opt = _state()
+    checkpoint.save(str(tmp_path), 1, params, opt)
+    bad = {
+        "layers": {"w": jnp.zeros((5, 8)), "b": jnp.zeros((8,))},
+        "head": jnp.zeros((8, 16)),
+    }
+    with pytest.raises(ValueError):
+        checkpoint.restore(str(tmp_path), bad, opt)
+
+
+def test_restore_with_shape_structs(tmp_path):
+    """Templates may be ShapeDtypeStructs — elastic restore path."""
+    params, opt = _state()
+    checkpoint.save(str(tmp_path), 4, params, opt)
+    p_tmpl = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params
+    )
+    o_tmpl = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), opt)
+    p, o, s = checkpoint.restore(str(tmp_path), p_tmpl, o_tmpl)
+    assert s == 4
+    np.testing.assert_array_equal(np.asarray(p["head"]), np.asarray(params["head"]))

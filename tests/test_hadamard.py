@@ -1,0 +1,63 @@
+"""Tiled Hadamard transform: orthonormality, pairing identity, smoothing."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.formats import HADAMARD_16, hadamard_matrix
+from repro.core.hadamard import hadamard_tiles
+
+
+def test_h16_orthonormal():
+    h = HADAMARD_16
+    np.testing.assert_allclose(h @ h.T, np.eye(16), atol=1e-6)
+
+
+def test_sylvester_construction():
+    h4 = hadamard_matrix(4)
+    assert set(np.unique(h4)) == {-1.0, 1.0}
+    np.testing.assert_allclose(h4 @ h4.T, 4 * np.eye(4), atol=1e-6)
+    with pytest.raises(ValueError):
+        hadamard_matrix(12)
+
+
+def test_tiles_norm_preserving():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, 48)).astype(np.float32))
+    y = hadamard_tiles(x, -1)
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(x)), float(jnp.linalg.norm(y)), rtol=1e-5
+    )
+
+
+def test_tiles_inverse_roundtrip():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(32, 64)).astype(np.float32))
+    y = hadamard_tiles(hadamard_tiles(x, -1), -1, inverse=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-5)
+
+
+def test_tiles_axis0_pairing():
+    """(H_l X)^T (H_l D) == X^T D — the dW-GeMM pairing identity."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(48, 8)).astype(np.float32))
+    d = jnp.asarray(rng.normal(size=(48, 6)).astype(np.float32))
+    xh = hadamard_tiles(x, 0)
+    dh = hadamard_tiles(d, 0)
+    np.testing.assert_allclose(
+        np.asarray(xh.T @ dh), np.asarray(x.T @ d), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_ragged_axis_rejected():
+    x = jnp.zeros((4, 40))
+    with pytest.raises(ValueError):
+        hadamard_tiles(x, -1)
+
+
+def test_smooths_single_outlier():
+    """A lone spike is spread across its 16-tile: max drops ~4x (1/sqrt(16))."""
+    x = np.zeros((1, 16), np.float32)
+    x[0, 3] = 16.0
+    y = np.asarray(hadamard_tiles(jnp.asarray(x), -1))
+    assert np.abs(y).max() == pytest.approx(4.0, rel=1e-5)
+    np.testing.assert_allclose(np.linalg.norm(y), 16.0, rtol=1e-5)

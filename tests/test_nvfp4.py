@@ -1,0 +1,138 @@
+"""NVFP4 quantizer: exactness vs ml_dtypes, SR unbiasedness, properties."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import BLOCK_SIZE, E2M1_MAX
+from repro.core.nvfp4 import (
+    nvfp4_qdq,
+    nvfp4_quant_error,
+    round_e2m1_rn,
+    round_e2m1_sr,
+)
+
+SET = dict(deadline=None, max_examples=30)
+
+
+def test_rn_matches_ml_dtypes_cast():
+    v = np.linspace(-8, 8, 8001).astype(np.float32)
+    ours = np.sign(v) * np.asarray(round_e2m1_rn(jnp.abs(jnp.asarray(v))))
+    ref = np.asarray(jnp.asarray(v).astype(jnp.float4_e2m1fn).astype(jnp.float32))
+    np.testing.assert_array_equal(ours, ref)
+
+
+def test_rn_grid_fixed_points():
+    grid = np.array([0, 0.5, 1, 1.5, 2, 3, 4, 6], np.float32)
+    out = np.asarray(round_e2m1_rn(jnp.asarray(grid)))
+    np.testing.assert_array_equal(out, grid)
+
+
+def test_sr_hits_neighbors_only():
+    a = jnp.full((10000,), 2.3, jnp.float32)
+    u = jax.random.uniform(jax.random.key(0), a.shape)
+    out = np.asarray(round_e2m1_sr(a, u))
+    assert set(np.unique(out)) <= {2.0, 3.0}
+
+
+def test_sr_unbiased():
+    # E[SR(a)] == a for a mid-interval value
+    for val, lo, hi in [(2.3, 2.0, 3.0), (4.7, 4.0, 6.0), (0.6, 0.5, 1.0)]:
+        a = jnp.full((200000,), val, jnp.float32)
+        u = jax.random.uniform(jax.random.key(1), a.shape)
+        out = np.asarray(round_e2m1_sr(a, u))
+        assert abs(out.mean() - val) < 3 * (hi - lo) / np.sqrt(len(out)), val
+
+
+def test_qdq_zero_preserved():
+    x = jnp.zeros((32, 64))
+    assert float(jnp.abs(nvfp4_qdq(x)).max()) == 0.0
+
+
+def test_qdq_bounded_by_tensor_amax():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32) * 100)
+    q = nvfp4_qdq(x)
+    # elements never exceed block_amax rounded up by the e4m3 scale step (~2x
+    # worst case at tiny scales; in practice <= amax * (1 + 2^-3)).
+    assert float(jnp.abs(q).max()) <= float(jnp.abs(x).max()) * 1.25
+
+
+@settings(**SET)
+@given(
+    rows=st.integers(1, 33),
+    cols=st.integers(1, 70),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qdq_relative_error_bound(rows, cols, scale, seed):
+    """Blockwise FP4 error per element is bounded by ~ block_amax / 12
+    (half the largest grid spacing, plus e4m3 scale rounding slack)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32) * scale)
+    q = np.asarray(nvfp4_qdq(x, -1), np.float32)
+    xn = np.asarray(x, np.float32)
+    pad = (-cols) % BLOCK_SIZE
+    xp = np.pad(xn, ((0, 0), (0, pad)))
+    qp = np.pad(q, ((0, 0), (0, pad)))
+    blocks_x = xp.reshape(rows, -1, BLOCK_SIZE)
+    blocks_q = qp.reshape(rows, -1, BLOCK_SIZE)
+    amax = np.abs(blocks_x).max(axis=-1, keepdims=True)
+    err = np.abs(blocks_q - blocks_x)
+    # spacing at the top of the grid is 2 (4->6) => half-spacing amax/6;
+    # the e4m3 scale quantization adds <= 2^-3 relative slack.
+    bound = amax / 6.0 * 1.2 + 1e-6
+    assert (err <= bound + 1e-7 * amax).all()
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_qdq_idempotent(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(16, 48)).astype(np.float32))
+    q1 = nvfp4_qdq(x, -1)
+    q2 = nvfp4_qdq(q1, -1)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=0, atol=1e-6)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1), axis=st.sampled_from([0, 1, -1]))
+def test_qdq_sign_symmetry(seed, axis):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(24, 40)).astype(np.float32))
+    q_pos = np.asarray(nvfp4_qdq(x, axis))
+    q_neg = np.asarray(nvfp4_qdq(-x, axis))
+    np.testing.assert_allclose(q_pos, -q_neg, atol=1e-7)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1), k=st.floats(0.1, 64.0))
+def test_qdq_scale_equivariant(seed, k):
+    """QDQ(k*x) == k*QDQ(x) up to e4m3 scale requantization for pow2 k."""
+    k = float(2 ** round(np.log2(k)))  # powers of two are exactly equivariant
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+    a = np.asarray(nvfp4_qdq(x * k, -1))
+    b = np.asarray(nvfp4_qdq(x, -1)) * k
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_sr_gemm_unbiased_vs_rn():
+    """SR over many keys averages to the true value; RN has a fixed bias."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+    acc = np.zeros_like(np.asarray(x))
+    n = 200
+    for i in range(n):
+        acc += np.asarray(nvfp4_qdq(x, -1, sr=True, key=jax.random.key(i)))
+    mean_err = np.abs(acc / n - np.asarray(x)).mean()
+    rn_err = np.abs(np.asarray(nvfp4_qdq(x, -1)) - np.asarray(x)).mean()
+    assert mean_err < rn_err * 0.5  # SR averages toward the truth
+
+
+def test_error_metric_sane():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
+    e = float(nvfp4_quant_error(x))
+    assert 0.02 < e < 0.25

@@ -1,0 +1,96 @@
+"""Optimizer: AdamW convergence, clipping, schedules, EF-int8 compression."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from repro.optim.compress import init_error_state, make_ef_int8_transform
+
+
+def _quadratic_problem():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)).astype(np.float32))
+    params = {"w": jnp.zeros((8, 8)), "b": jnp.zeros((8,))}
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] - target) ** 2) + jnp.sum(p["b"] ** 2)
+
+    return params, loss_fn
+
+
+def test_adamw_converges_on_quadratic():
+    params, loss_fn = _quadratic_problem()
+    cfg = adamw.OptimizerConfig(peak_lr=0.05, warmup_steps=5, total_steps=400,
+                                weight_decay=0.0)
+    state = adamw.init_state(params)
+    l0 = float(loss_fn(params))
+    for _ in range(400):
+        grads = jax.grad(loss_fn)(params)
+        params, state, _ = adamw.apply_updates(params, grads, state, cfg)
+    assert float(loss_fn(params)) < 1e-2 * l0
+
+
+def test_clipping_bounds_update():
+    params = {"w": jnp.zeros((4,))}
+    grads = {"w": jnp.full((4,), 1e6)}
+    clipped, norm = adamw.clip_by_global_norm(grads, 1.0)
+    assert float(norm) > 1e5
+    assert abs(float(adamw.global_norm(clipped)) - 1.0) < 1e-3
+
+
+def test_schedule_shapes():
+    cfg = adamw.OptimizerConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                                schedule="cosine", end_lr_frac=0.1)
+    lrs = [float(adamw.lr_at(cfg, jnp.asarray(s))) for s in [0, 5, 10, 55, 100]]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6          # mid-warmup
+    assert abs(lrs[2] - 1.0) < 1e-6          # peak
+    assert lrs[3] < lrs[2]                   # decaying
+    assert abs(lrs[4] - 0.1) < 1e-3          # floor
+
+
+def test_weight_decay_skips_1d():
+    params = {"w": jnp.ones((4, 4)), "gain": jnp.ones((4,))}
+    grads = jax.tree.map(jnp.zeros_like, params)
+    cfg = adamw.OptimizerConfig(peak_lr=0.1, warmup_steps=0, total_steps=10,
+                                weight_decay=0.5, clip_norm=0.0)
+    state = adamw.init_state(params)
+    new_params, _, _ = adamw.apply_updates(params, grads, state, cfg)
+    assert float(jnp.abs(new_params["w"] - 1.0).max()) > 1e-3   # decayed
+    assert float(jnp.abs(new_params["gain"] - 1.0).max()) < 1e-6  # not decayed
+
+
+def test_ef_int8_error_feedback_property():
+    """Accumulated compressed grads converge to accumulated true grads —
+    the error-feedback guarantee (bias does not accumulate)."""
+    rng = np.random.default_rng(1)
+    g_seq = [rng.normal(size=(64,)).astype(np.float32) * 10 ** rng.uniform(-3, 0)
+             for _ in range(50)]
+    params = {"w": jnp.zeros((64,))}
+    state = {"ef": {"w": jnp.zeros((64,), jnp.float32)}}
+    transform = make_ef_int8_transform()
+    acc_c = np.zeros(64, np.float32)
+    acc_t = np.zeros(64, np.float32)
+    for g in g_seq:
+        grads = {"w": jnp.asarray(g)}
+        cg, state = transform(grads, state)
+        acc_c += np.asarray(cg["w"])
+        acc_t += g
+    # residual error is bounded by one step's quantization error, not 50x
+    final_gap = np.abs(acc_c - acc_t).max()
+    one_step_err = max(np.abs(g).max() for g in g_seq) / 127
+    assert final_gap <= 2 * one_step_err + 1e-6
+
+
+def test_ef_int8_in_optimizer_loop():
+    params, loss_fn = _quadratic_problem()
+    cfg = adamw.OptimizerConfig(peak_lr=0.05, warmup_steps=5, total_steps=300,
+                                weight_decay=0.0)
+    state = adamw.init_state(params)
+    state.update(init_error_state(params))
+    transform = make_ef_int8_transform()
+    l0 = float(loss_fn(params))
+    for _ in range(300):
+        grads = jax.grad(loss_fn)(params)
+        params, state, _ = adamw.apply_updates(params, grads, state, cfg,
+                                               grad_transform=transform)
+    assert float(loss_fn(params)) < 5e-2 * l0

@@ -1,0 +1,136 @@
+"""End-to-end behaviour: tiny-scale training under every FP4 recipe.
+
+The paper's primary claim (Table 1) is a training-loss-gap ordering:
+   BF16 < Averis < NVFP4 (gaps),   with Averis-Hadamard <= Averis.
+We verify the testable core at laptop scale: all recipes train stably
+(loss decreases, no NaNs) and the quantized-recipe losses stay close to
+BF16, with Averis at least as good as vanilla NVFP4.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import reduced
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.train.trainer import TrainConfig, init_train_state, make_train_step
+
+STEPS = 60
+
+
+def _train(quant_mode: str, steps: int = STEPS, seed: int = 0):
+    cfg = reduced("qwen3-0.6b", num_layers=2, d_model=64, d_ff=192,
+                  vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=16,
+                  remat=False)
+    model = Model(cfg)
+    tcfg = TrainConfig(
+        quant_mode=quant_mode,
+        optimizer=adamw.OptimizerConfig(peak_lr=3e-3, warmup_steps=10,
+                                        total_steps=steps, weight_decay=0.01),
+    )
+    data = TokenStream(DataConfig(seed=11, batch_size=8, seq_len=64,
+                                  vocab_size=cfg.vocab_size, chain_alpha=8.0,
+                                  n_states=32))
+    params, opt = init_train_state(model, tcfg, jax.random.key(seed))
+    step = jax.jit(make_train_step(model, tcfg), donate_argnums=(0, 1))
+    losses = []
+    for i in range(steps):
+        batch = jax.tree.map(jnp.asarray, data.batch(i))
+        params, opt, m = step(params, opt, batch, jax.random.key(1000 + i))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+@pytest.fixture(scope="module")
+def curves():
+    return {mode: _train(mode) for mode in ["bf16", "nvfp4", "averis"]}
+
+
+def _final(losses, k=10):
+    return float(np.mean(losses[-k:]))
+
+
+def test_all_recipes_train_stably(curves):
+    for mode, losses in curves.items():
+        assert all(np.isfinite(losses)), mode
+        assert _final(losses) < 0.8 * np.mean(losses[:5]), (
+            f"{mode} did not learn: {losses[:3]} -> {losses[-3:]}"
+        )
+
+
+def test_fp4_recipes_close_to_bf16(curves):
+    ref = _final(curves["bf16"])
+    for mode in ["nvfp4", "averis"]:
+        gap = (_final(curves[mode]) - ref) / ref
+        assert gap < 0.15, f"{mode} gap {gap:.3f} too large"
+
+
+def test_averis_not_worse_than_vanilla(curves):
+    """Table 1 ordering at tiny scale (tolerance for small-scale noise)."""
+    assert _final(curves["averis"]) <= _final(curves["nvfp4"]) * 1.02
+
+
+@pytest.mark.slow
+def test_hadamard_variants_train():
+    for mode in ["nvfp4_hadamard", "averis_hadamard"]:
+        losses = _train(mode, steps=30)
+        assert all(np.isfinite(losses))
+        assert losses[-1] < losses[0]
+
+
+def test_microbatched_step_matches_semantics():
+    """Gradient accumulation: n microbatches of size B/n gives (approximately,
+    exactly for bf16-free f32 math) the same update as the full batch."""
+    cfg = reduced("qwen3-0.6b", num_layers=1, d_model=32, d_ff=64,
+                  vocab_size=64, num_heads=2, num_kv_heads=1, head_dim=16,
+                  remat=False)
+    model = Model(cfg)
+    data = TokenStream(DataConfig(seed=3, batch_size=8, seq_len=32,
+                                  vocab_size=64))
+    batch = jax.tree.map(jnp.asarray, data.batch(0))
+    ocfg = adamw.OptimizerConfig(peak_lr=1e-3, warmup_steps=0, total_steps=10)
+
+    outs = {}
+    for n_micro in [1, 4]:
+        tcfg = TrainConfig(quant_mode="bf16", microbatches=n_micro,
+                           optimizer=ocfg)
+        params, opt = init_train_state(model, tcfg, jax.random.key(0))
+        step = jax.jit(make_train_step(model, tcfg))
+        p2, _, m = step(params, opt, batch, jax.random.key(5))
+        outs[n_micro] = (p2, float(m["loss"]))
+    # same loss; param updates agree to optimizer-step scale (Adam on a
+    # fresh second moment amplifies bf16 reduction-order noise up to ~lr)
+    assert outs[1][1] == pytest.approx(outs[4][1], rel=2e-3)
+    for a, b in zip(jax.tree.leaves(outs[1][0]), jax.tree.leaves(outs[4][0])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-2, atol=2.5e-3)
+
+
+def test_eval_under_nvfp4_forward():
+    """The paper's downstream protocol: NVFP4-quantized forward evaluation
+    of a trained model produces finite, comparable losses."""
+    from repro.train.trainer import make_eval_step
+
+    cfg = reduced("qwen3-0.6b", num_layers=2, d_model=64, d_ff=192,
+                  vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=16,
+                  remat=False)
+    model = Model(cfg)
+    tcfg = TrainConfig(quant_mode="averis",
+                       optimizer=adamw.OptimizerConfig(peak_lr=3e-3,
+                                                       warmup_steps=5,
+                                                       total_steps=20))
+    data = TokenStream(DataConfig(seed=12, batch_size=8, seq_len=64,
+                                  vocab_size=cfg.vocab_size))
+    params, opt = init_train_state(model, tcfg, jax.random.key(0))
+    step = jax.jit(make_train_step(model, tcfg), donate_argnums=(0, 1))
+    for i in range(20):
+        params, opt, _ = step(params, opt,
+                              jax.tree.map(jnp.asarray, data.batch(i)),
+                              jax.random.key(i))
+    ev = jax.jit(make_eval_step(model, "nvfp4"))
+    out = ev(params, jax.tree.map(jnp.asarray, data.batch(100)),
+             jax.random.key(9))
+    assert np.isfinite(float(out["loss"]))
