@@ -1,0 +1,57 @@
+"""Serving-engine benchmark: decode throughput and cache bytes/token for the
+bf16, fp4, and fp4-centered KV-cache modes on the reduced paper config.
+
+Rows (name,us_per_call,derived):
+  serve_<kind>            mean decode-step latency; derived tok_s=..
+  serve_cache_<kind>      cache bytes/token (all layers); derived ratio vs bf16
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from .common import emit
+
+
+KINDS = ("bf16", "fp4", "fp4-centered")
+
+
+def run() -> None:
+    from repro.configs import reduced
+    from repro.models.model import Model
+    from repro.serve import Engine, EngineConfig
+
+    cfg = reduced("qwen3-0.6b", remat=False)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(1), (6, 32), 0, cfg.vocab_size), np.int32)
+
+    bytes_bf16 = None
+    for kind in KINDS:
+        eng = Engine(model, params, EngineConfig(
+            n_slots=4, max_len=512, kv_cache=kind, page_size=64,
+            quant_mode="bf16", seed=0))
+        # warmup drain pays prefill/decode/insert jit compiles so neither
+        # tok/s nor step latency below includes compile time
+        eng.submit(prompts[0], 4, seed=99)
+        eng.drain()
+        eng.reset_metrics()
+        for i, p in enumerate(prompts):
+            eng.submit(p, 24, seed=i)
+        eng.drain()
+        summ = eng.metrics.summary()
+        lat = np.asarray(eng.metrics.step_latencies_s)
+        emit(f"serve_{kind}", float(lat.mean() * 1e6),
+             f"tok_s={summ['throughput_tok_s']:.1f};"
+             f"occ={summ['mean_occupancy']:.2f}")
+        bpt = summ["cache_bytes_per_token"]
+        if kind == "bf16":
+            bytes_bf16 = bpt
+        ratio = bpt / bytes_bf16
+        emit(f"serve_cache_{kind}", 0.0,
+             f"bytes_per_token={bpt:.1f};vs_bf16={ratio:.3f}")
+
+
+if __name__ == "__main__":
+    run()

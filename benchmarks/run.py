@@ -18,6 +18,7 @@ from . import (
     bench_fig4,
     bench_fig5,
     bench_quant_error,
+    bench_serve,
     bench_table1,
     bench_table2,
     bench_table3,
@@ -34,6 +35,7 @@ BENCHES = {
     "fig4": bench_fig4.run,        # outlier attribution + tail contraction
     "fig5": bench_fig5.run,        # Gaussian residual validation
     "quant_error": bench_quant_error.run,  # Appendix D
+    "serve": bench_serve.run,      # engine throughput + KV-cache bytes/token
     "roofline": roofline.run,      # deliverable (g), from dry-run artifacts
 }
 

@@ -1,9 +1,15 @@
-"""Batched FP4 serving: prefill + greedy decode with a KV cache, comparing
-recipes on the same trained weights (agreement rate of generations).
+"""Batched FP4 serving demo: briefly train a tiny model, then serve the same
+prompts (a) through the static batch path under each quant recipe (token
+agreement vs bf16) and (b) through the continuous-batching engine with the
+mean-centered FP4 KV cache. Temperature / top-k sampling via --temperature /
+--top-k (greedy by default, seeded for reproducibility).
 
-    PYTHONPATH=src python examples/serve_batch.py
+    PYTHONPATH=src python examples/serve_batch.py [--temperature 0.8 --top-k 40]
 """
-import sys, os
+import argparse
+import os
+import sys
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
@@ -15,10 +21,19 @@ from repro.data.pipeline import DataConfig, TokenStream
 from repro.launch.serve import generate
 from repro.models.model import Model
 from repro.optim import adamw
+from repro.serve import Engine, EngineConfig
 from repro.train.trainer import TrainConfig, init_train_state, make_train_step
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy decoding")
+    ap.add_argument("--top-k", type=int, default=0, help="0 = full support")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
     cfg = reduced("qwen3-0.6b", remat=False)
     model = Model(cfg)
     # brief training so generations are non-degenerate
@@ -39,11 +54,29 @@ def main() -> None:
     prompts = jnp.asarray(data.batch(999)["tokens"][:4, :32])
     outs = {}
     for mode in ["bf16", "nvfp4", "averis"]:
-        outs[mode] = np.asarray(generate(model, params, prompts, 24, mode))
+        outs[mode] = np.asarray(generate(
+            model, params, prompts, args.gen, mode,
+            temperature=args.temperature, top_k=args.top_k, seed=args.seed))
         print(f"{mode:8s} sample: {outs[mode][0][:12]}")
     for mode in ["nvfp4", "averis"]:
         agree = (outs[mode] == outs["bf16"]).mean()
         print(f"{mode:8s} token agreement with bf16 generation: {agree:.2%}")
+
+    # Continuous batching with the mean-centered FP4 KV cache.
+    eng = Engine(model, params, EngineConfig(
+        n_slots=2, max_len=32 + args.gen, kv_cache="fp4-centered",
+        page_size=16, quant_mode="bf16", seed=args.seed))
+    for i, p in enumerate(np.asarray(prompts)):
+        eng.submit(p, args.gen, temperature=args.temperature,
+                   top_k=args.top_k, seed=args.seed + i)
+    finished = sorted(eng.drain(), key=lambda r: r.rid)
+    summ = eng.metrics.summary()
+    print(f"engine[fp4-centered] served {len(finished)} requests on 2 slots: "
+          f"{summ['throughput_tok_s']:.1f} tok/s, "
+          f"occupancy {summ['mean_occupancy']:.2f}")
+    eng_out = np.asarray([r.generated for r in finished])
+    agree = (eng_out == outs["bf16"]).mean()
+    print(f"fp4-centered cache token agreement with bf16 cache: {agree:.2%}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,15 @@
-"""Batched serving driver: prefill a prompt batch, decode greedily with the
-KV/state cache, all GeMMs under the selected FP4 recipe (the paper's "NVFP4
-forward evaluation" deployment mode).
+"""Serving driver: continuous batching by default, one-shot batch with
+``--static``. All weight GeMMs run under the selected FP4 recipe (the paper's
+"NVFP4 forward evaluation" deployment mode); the KV cache is dense bf16 or
+paged mean-centered NVFP4 (``--kv-cache fp4-centered``, see repro.serve).
 
+    # continuous batching over staggered request groups, FP4 KV cache
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
-        --quant nvfp4 --batch 4 --prompt-len 32 --gen 16
+        --kv-cache fp4-centered
+
+    # legacy fixed-shape batch path
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+        --static --quant nvfp4 --batch 4 --prompt-len 32 --gen 16
 """
 from __future__ import annotations
 
@@ -18,49 +24,108 @@ from repro.configs import ALL_ARCHS, get_config, reduced
 from repro.core.qgemm import recipe
 from repro.models.layers import QuantCtx
 from repro.models.model import Model
-
-
-def extend_caches(caches, extra: int, seq_axis: int = 2):
-    """Pad the cache time axis by ``extra`` slots (prefill len -> decode len).
-
-    Works on stacked (L, b, t, ...) attention caches; SSM caches (state-based)
-    pass through untouched.
-    """
-    def pad(a):
-        if a.ndim >= seq_axis + 1 and a.shape[0] > 0:
-            # attention caches have the time axis at `seq_axis`
-            pads = [(0, 0)] * a.ndim
-            pads[seq_axis] = (0, extra)
-            return jnp.pad(a, pads)
-        return a
-
-    def is_attn_leaf(a):
-        return a.ndim >= 4  # (L, b, t, heads/dh...) or (L, b, t, r)
-
-    return jax.tree.map(lambda a: pad(a) if is_attn_leaf(a) else a, caches)
+from repro.serve import Engine, EngineConfig
+from repro.serve.sampling import sample_tokens
 
 
 def generate(model: Model, params, tokens, gen: int, quant_mode: str,
-             key=None):
-    """Greedy generation; returns (b, gen) int32 tokens."""
-    cfg = model.cfg
-    key = key if key is not None else jax.random.key(0)
+             key=None, temperature: float = 0.0, top_k: int = 0,
+             seed: int = 0):
+    """Static-batch generation; returns (b, gen) int32 tokens.
+
+    Greedy by default; ``temperature``/``top_k`` enable seeded sampling via
+    ``repro.serve.sampling`` (shared with the engine).
+    """
+    key = key if key is not None else jax.random.key(seed)
     ctx = QuantCtx(recipe(quant_mode), key)
     b, s = tokens.shape
+    temps = jnp.full((b,), temperature, jnp.float32)
+    topks = jnp.full((b,), top_k, jnp.int32)
+    seeds = jnp.arange(b, dtype=jnp.int32)
     prefill = jax.jit(lambda p, t: model.prefill(p, {"tokens": t}, ctx))
     logits, caches = prefill(params, tokens)
-    caches = extend_caches(caches, gen)
+    caches = model.grow_caches(caches, gen)
     step = jax.jit(
         lambda p, tok, pos, c: model.decode_step(p, {"token": tok}, pos, c, ctx)
     )
     out = []
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    tok = sample_tokens(logits[:, -1], temps, topks, key, seeds)
     for i in range(gen):
         out.append(tok)
         pos = jnp.full((b,), s + i, jnp.int32)
         logits, caches = step(params, tok, pos, caches)
-        tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        tok = sample_tokens(logits[:, 0], temps, topks, key, seeds,
+                            jnp.full((b,), i + 1, jnp.int32))
     return jnp.stack(out, axis=1)
+
+
+def _build(args):
+    cfg = reduced(args.arch) if args.reduced else get_config(args.arch)
+    if not cfg.is_decoder:
+        raise SystemExit(f"{args.arch} is encoder-only — no decode path")
+    model = Model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    return cfg, model, params
+
+
+def _prompts(args, cfg, n: int):
+    return jax.random.randint(jax.random.key(args.seed + 1),
+                              (n, args.prompt_len), 0, cfg.vocab_size)
+
+
+def run_static(args) -> None:
+    cfg, model, params = _build(args)
+    tokens = _prompts(args, cfg, args.batch)
+    t0 = time.perf_counter()
+    out = generate(model, params, tokens, args.gen, args.quant,
+                   temperature=args.temperature, top_k=args.top_k,
+                   seed=args.seed)
+    dt = time.perf_counter() - t0
+    print(f"arch={cfg.name} recipe={args.quant} batch={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen} mode=static")
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print("sample:", np.asarray(out[0])[:12])
+
+
+def run_engine(args) -> None:
+    cfg, model, params = _build(args)
+    max_len = args.max_len or args.prompt_len + args.gen
+    eng = Engine(model, params, EngineConfig(
+        n_slots=args.slots, max_len=max_len, kv_cache=args.kv_cache,
+        page_size=args.page_size, quant_mode=args.quant, seed=args.seed,
+    ))
+    tokens = np.asarray(_prompts(args, cfg, args.requests))
+
+    # Submit in staggered groups: the engine admits/retires mid-flight, which
+    # is the continuous-batching behavior a single static batch can't show.
+    groups = np.array_split(np.arange(args.requests), max(args.groups, 1))
+    print(f"arch={cfg.name} recipe={args.quant} kv-cache={args.kv_cache} "
+          f"slots={args.slots} requests={args.requests} "
+          f"groups={len(groups)} prompt={args.prompt_len} gen={args.gen}")
+    for i in groups[0]:
+        eng.submit(tokens[i], args.gen, temperature=args.temperature,
+                   top_k=args.top_k, seed=args.seed + int(i))
+    finished = []
+    for gi, group in enumerate(groups[1:], start=1):
+        for _ in range(args.stagger_steps):
+            finished.extend(eng.step())
+        for i in group:
+            eng.submit(tokens[i], args.gen, temperature=args.temperature,
+                       top_k=args.top_k, seed=args.seed + int(i))
+    finished.extend(eng.drain())
+
+    summ = eng.metrics.summary()
+    print(f"finished {len(finished)} requests, "
+          f"{int(summ['generated_tokens'])} tokens, "
+          f"{summ['throughput_tok_s']:.1f} tok/s, "
+          f"ttft {summ['mean_ttft_s'] * 1e3:.0f}ms, "
+          f"p95 step {summ['p95_step_ms']:.0f}ms, "
+          f"occupancy {summ['mean_occupancy']:.2f}")
+    print(f"kv-cache bytes/token (all layers): "
+          f"{summ['cache_bytes_per_token']:.0f}")
+    by_rid = sorted(finished, key=lambda r: r.rid)
+    print("sample:", by_rid[0].generated[:12])
 
 
 def main() -> None:
@@ -68,28 +133,34 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen3-0.6b", choices=ALL_ARCHS)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--quant", default="nvfp4")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--static", action="store_true",
+                    help="legacy one-shot fixed-shape batch path")
+    ap.add_argument("--batch", type=int, default=4, help="--static batch size")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    # sampling (shared by both paths)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0, help="0 = full support")
+    # engine knobs
+    ap.add_argument("--kv-cache", default="bf16",
+                    choices=["bf16", "fp4", "fp4-centered"])
+    ap.add_argument("--page-size", type=int, default=64)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="cache horizon (0 = prompt+gen)")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--groups", type=int, default=2,
+                    help="staggered submission groups")
+    ap.add_argument("--stagger-steps", type=int, default=4,
+                    help="engine steps between group submissions")
     args = ap.parse_args()
 
-    cfg = reduced(args.arch) if args.reduced else get_config(args.arch)
-    if not cfg.is_decoder:
-        raise SystemExit(f"{args.arch} is encoder-only — no decode path")
-    model = Model(cfg)
-    params = model.init(jax.random.key(args.seed))
-    tokens = jax.random.randint(jax.random.key(args.seed + 1),
-                                (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size)
-    t0 = time.perf_counter()
-    out = generate(model, params, tokens, args.gen, args.quant)
-    dt = time.perf_counter() - t0
-    print(f"arch={cfg.name} recipe={args.quant} batch={args.batch} "
-          f"prompt={args.prompt_len} gen={args.gen}")
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
-    print("sample:", np.asarray(out[0])[:12])
+    if args.static:
+        run_static(args)
+    else:
+        run_engine(args)
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.parallel.sharding import constrain
+from .cache import dense_gqa_adapter, dense_mla_adapter
 from .layers import Param, QuantCtx, apply_rope, rms_norm, rope_angles
 
 NEG_INF = -1e30
@@ -130,11 +131,14 @@ def gqa_apply(
     cfg: ModelConfig,
     cache: Optional[Dict[str, jax.Array]] = None,
     decode_pos: Optional[jax.Array] = None,   # (b,) write index when decoding
+    adapter=None,                             # cache adapter (decode only)
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Returns (output (b,s,d), new_cache_or_None).
 
     Modes: train (cache=None), prefill (cache=None but caller keeps k/v via
-    gqa_prefill), decode (cache given, s==1, decode_pos given).
+    gqa_prefill), decode (cache given, s==1, decode_pos given). In decode the
+    cache write + attendable read go through ``adapter`` (see models/cache.py)
+    so dense bf16 and quantized paged layouts share this code path.
     """
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -155,15 +159,15 @@ def gqa_apply(
         new_cache = {"k": k, "v": v}
     else:
         assert s == 1 and decode_pos is not None
-        bidx = jnp.arange(b)
-        ck = cache["k"].at[bidx, decode_pos].set(k[:, 0])
-        cv = cache["v"].at[bidx, decode_pos].set(v[:, 0])
+        if adapter is None:
+            adapter = dense_gqa_adapter(cfg)
+        (ck, cv), new_cache = adapter.update(cache, (k[:, 0], v[:, 0]),
+                                             decode_pos)
         t = ck.shape[1]
         qpos = decode_pos[:, None]
         kpos = jnp.arange(t)
         out = attention_core(q, ck, cv, qpos, kpos, causal=True,
                              softmax_dtype=smd)
-        new_cache = {"k": ck, "v": cv}
 
     out = out.reshape(b, s, cfg.num_heads * hd)
     y = ctx.gemm(out, p["wo"], site=4)
@@ -171,13 +175,7 @@ def gqa_apply(
 
 
 def gqa_cache_spec(cfg: ModelConfig, batch: int, max_len: int):
-    nkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
-    shape = (batch, max_len, nkv, hd)
-    dt = jnp.dtype(cfg.compute_dtype)
-    return {
-        "k": jax.ShapeDtypeStruct(shape, dt),
-        "v": jax.ShapeDtypeStruct(shape, dt),
-    }
+    return dense_gqa_adapter(cfg).layer_spec(batch, max_len)
 
 
 # --------------------------------------------------------------------------
@@ -219,6 +217,7 @@ def mla_apply(
     cfg: ModelConfig,
     cache: Optional[Dict[str, jax.Array]] = None,
     decode_pos: Optional[jax.Array] = None,
+    adapter=None,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     b, s, _ = x.shape
     nh = cfg.num_heads
@@ -256,9 +255,10 @@ def mla_apply(
     c_new = rms_norm(c_new, p["kv_ln"])
     cos, sin = rope_angles(positions, dr, cfg.rope_theta)
     kr_new = apply_rope(kr_new[:, :, None, :], cos, sin)[:, :, 0, :]
-    bidx = jnp.arange(b)
-    cc = cache["c"].at[bidx, decode_pos].set(c_new[:, 0])
-    ckr = cache["kr"].at[bidx, decode_pos].set(kr_new[:, 0])
+    if adapter is None:
+        adapter = dense_mla_adapter(cfg)
+    (cc, ckr), new_cache = adapter.update(cache, (c_new[:, 0], kr_new[:, 0]),
+                                          decode_pos)
 
     wkv_b = p["wkv_b"].astype(x.dtype).reshape(rkv, nh, dn + dv)
     w_k, w_v = wkv_b[..., :dn], wkv_b[..., dn:]
@@ -278,12 +278,8 @@ def mla_apply(
     out = jnp.einsum("bqnr,rnd->bqnd", ctx_c, w_v,
                      preferred_element_type=jnp.float32).astype(x.dtype)
     y = ctx.gemm(out.reshape(b, s, nh * dv), p["wo"], site=5)
-    return y, {"c": cc, "kr": ckr}
+    return y, new_cache
 
 
 def mla_cache_spec(cfg: ModelConfig, batch: int, max_len: int):
-    dt = jnp.dtype(cfg.compute_dtype)
-    return {
-        "c": jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank), dt),
-        "kr": jax.ShapeDtypeStruct((batch, max_len, cfg.qk_rope_head_dim), dt),
-    }
+    return dense_mla_adapter(cfg).layer_spec(batch, max_len)

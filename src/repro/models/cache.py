@@ -1,0 +1,153 @@
+"""Decode-cache adapters: one read/write API over every cache layout.
+
+The decode path used to hard-code its cache handling per attention variant
+(``cache["k"].at[...].set`` inline in ``gqa_apply``/``mla_apply``) and the
+serving driver guessed which leaves had a time axis from ``ndim >= 4``. Both
+are replaced by explicit adapters:
+
+  * ``DenseCacheAdapter`` — plain bf16 ring of one or more *streams*
+    (GQA: k/v with feature shape (n_kv, head_dim); MLA: c/kr latent vectors).
+  * ``repro.serve.kvcache.QuantizedKVAdapter`` — paged, mean-centered NVFP4
+    storage with the same ``update``/``insert`` surface (serving only).
+
+An adapter owns the *per-layer* cache layout. The model scans layers over
+stacked (L, ...) leaves, so ``update`` operates on one layer's tree inside
+the scan while ``blank``/``insert`` operate on the stacked tree.
+
+Adapter protocol (duck-typed; all shapes static except array data):
+
+  layer_spec(batch, max_len)      -> {leaf: ShapeDtypeStruct}  (one layer)
+  blank(num_layers, batch, max_len) -> stacked zero tree
+  capacity(max_len)               -> token capacity (>= max_len)
+  update(cache, toks, pos)        -> ((dense per stream, ...), new_cache)
+        toks: one (b, *feat) array per stream; pos: (b,) write positions.
+        Returns dense attendable views of length capacity.
+  insert(caches, prefill, slot, length) -> caches
+        prefill: {stream: (L, 1, length, *feat)} from ``Model.prefill``;
+        slot/length are host ints (each request is placed individually).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseCacheAdapter:
+    """Dense (uncompressed) decode cache over named streams."""
+
+    streams: Tuple[str, ...]                 # leaf names, e.g. ("k", "v")
+    feats: Tuple[Tuple[int, ...], ...]       # per-stream feature shapes
+    dtype_name: str = "bfloat16"
+
+    kind = "bf16"
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.dtype_name)
+
+    def layer_spec(self, batch: int, max_len: int) -> Dict[str, Any]:
+        return {
+            name: jax.ShapeDtypeStruct((batch, max_len) + feat, self.dtype)
+            for name, feat in zip(self.streams, self.feats)
+        }
+
+    def blank(self, num_layers: int, batch: int, max_len: int):
+        return {
+            name: jnp.zeros((num_layers, batch, max_len) + feat, self.dtype)
+            for name, feat in zip(self.streams, self.feats)
+        }
+
+    def capacity(self, max_len: int) -> int:
+        return max_len
+
+    def update(self, cache, toks, pos):
+        bidx = jnp.arange(toks[0].shape[0])
+        new = {
+            name: cache[name].at[bidx, pos].set(tok.astype(cache[name].dtype))
+            for name, tok in zip(self.streams, toks)
+        }
+        return tuple(new[name] for name in self.streams), new
+
+    def insert(self, caches, prefill, slot: int, length: int):
+        out = dict(caches)
+        for name in self.streams:
+            c = caches[name]
+            row = jnp.zeros((c.shape[0],) + c.shape[2:], c.dtype)
+            row = row.at[:, :length].set(prefill[name][:, 0].astype(c.dtype))
+            out[name] = c.at[:, slot].set(row)
+        return out
+
+    def bytes_per_token(self) -> float:
+        """Marginal cache storage per cached token (one layer)."""
+        itemsize = self.dtype.itemsize
+        return float(sum(itemsize * math.prod(feat) for feat in self.feats))
+
+
+def dense_gqa_adapter(cfg: ModelConfig) -> DenseCacheAdapter:
+    feat = (cfg.num_kv_heads, cfg.resolved_head_dim)
+    return DenseCacheAdapter(("k", "v"), (feat, feat), cfg.compute_dtype)
+
+
+def dense_mla_adapter(cfg: ModelConfig) -> DenseCacheAdapter:
+    return DenseCacheAdapter(
+        ("c", "kr"),
+        ((cfg.kv_lora_rank,), (cfg.qk_rope_head_dim,)),
+        cfg.compute_dtype,
+    )
+
+
+def default_adapter(cfg: ModelConfig) -> Optional[DenseCacheAdapter]:
+    """The dense adapter matching ``cfg``'s attention variant.
+
+    SSM-family configs return None: their caches are fixed-size recurrent
+    states handled inside ``ssm_apply`` (no time axis to manage). Hybrid
+    configs use the GQA adapter for their shared attention block.
+    """
+    if cfg.family == "ssm":
+        return None
+    if cfg.attention == "mla":
+        return dense_mla_adapter(cfg)
+    return dense_gqa_adapter(cfg)
+
+
+# --------------------------------------------------------------------------
+# Static-path cache growth (prefill length -> prefill + gen length)
+# --------------------------------------------------------------------------
+
+def grow_caches(cfg: ModelConfig, caches, extra: int):
+    """Pad the time axis of attention caches by ``extra`` decode slots.
+
+    Spec-driven replacement for the old ``ndim >= 4`` guess in
+    ``launch/serve.py``: which leaves carry a time axis comes from the
+    adapter's declared streams, so SSM recurrent states pass through
+    untouched by construction (including the SSM half of hybrid caches).
+    Leaves are stacked (L, b, t, *feat) — time is axis 2.
+    """
+    if extra <= 0:
+        return caches
+
+    def pad_streams(tree, streams):
+        assert set(tree) == set(streams), (
+            f"cache leaves {sorted(tree)} != declared streams {sorted(streams)}"
+        )
+        def pad(a):
+            pads = [(0, 0)] * a.ndim
+            pads[2] = (0, extra)
+            return jnp.pad(a, pads)
+
+        return {name: pad(tree[name]) for name in tree}
+
+    if cfg.family == "ssm":
+        return caches
+    if cfg.family == "hybrid":
+        ssm_caches, shared = caches
+        grown = pad_streams(shared, dense_gqa_adapter(cfg).streams)
+        return (ssm_caches, grown)
+    return pad_streams(caches, default_adapter(cfg).streams)

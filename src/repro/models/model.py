@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.qgemm import QuantConfig
 from repro.parallel.sharding import constrain
+from .cache import default_adapter, grow_caches
 from .layers import (
     Param,
     QuantCtx,
@@ -40,9 +41,14 @@ REMAT_POLICIES = {
 
 
 class Model:
-    def __init__(self, cfg: ModelConfig, remat_policy: str = "nothing"):
+    def __init__(self, cfg: ModelConfig, remat_policy: str = "nothing",
+                 cache_adapter=None):
         self.cfg = cfg
         self.remat_policy = remat_policy
+        # Decode-cache adapter (models/cache.py): dense bf16 by default;
+        # the serving engine installs quantized paged adapters here.
+        self.adapter = (cache_adapter if cache_adapter is not None
+                        else default_adapter(cfg))
 
     # ------------------------------------------------------------------ params
     def _top_defs(self) -> Dict[str, Any]:
@@ -131,7 +137,8 @@ class Model:
         def layer(x, p_l, cache_l, idx):
             lctx = QuantCtx(ctx.cfg, jax.random.fold_in(ctx.key, idx))
             return attn_ffn_block_apply(
-                p_l, x, positions, lctx, cfg, cache_l, decode_pos
+                p_l, x, positions, lctx, cfg, cache_l, decode_pos,
+                self.adapter,
             )
 
         if mode == "train":
@@ -217,7 +224,8 @@ class Model:
             )
             sctx = QuantCtx(ctx.cfg, jax.random.fold_in(ctx.key, 10_000 + gidx))
             x, new_shared, _ = attn_ffn_block_apply(
-                shared, x, positions, sctx, cfg, shared_cache_g, decode_pos
+                shared, x, positions, sctx, cfg, shared_cache_g, decode_pos,
+                self.adapter,
             )
             return x, new_ssm, new_shared
 
@@ -326,6 +334,11 @@ class Model:
         logits = self._lm_head(params, x, ctx)
         return logits, new_caches
 
+    def grow_caches(self, caches, extra: int):
+        """Pad prefill caches' time axis by ``extra`` decode slots
+        (spec-driven; SSM recurrent states pass through untouched)."""
+        return grow_caches(self.cfg, caches, extra)
+
     # ------------------------------------------------------------------ specs
     def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
         """ShapeDtypeStruct stand-ins for every model input of this cell."""
@@ -372,7 +385,10 @@ class Model:
         """Stacked cache ShapeDtypeStructs for decode cells."""
         cfg = self.cfg
         b, s = shape.global_batch, shape.seq_len
-        per_layer = block_cache_spec(cfg, b, s)
+        if cfg.family not in ("ssm", "hybrid"):
+            per_layer = self.adapter.layer_spec(b, s)
+        else:
+            per_layer = block_cache_spec(cfg, b, s)
         stacked = jax.tree.map(
             lambda sds: jax.ShapeDtypeStruct((cfg.num_layers,) + sds.shape, sds.dtype),
             per_layer,

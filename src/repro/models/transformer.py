@@ -64,15 +64,16 @@ def attn_ffn_block_apply(
     cfg: ModelConfig,
     cache: Optional[Dict] = None,
     decode_pos: Optional[jax.Array] = None,
+    adapter=None,
 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
     """Pre-norm attention + FFN/MoE block. Returns (x, new_cache, aux)."""
     h = rms_norm(x, p["ln1"])
     if cfg.attention == "mla":
         a, new_cache = mla_apply(p["attn"], h, positions, ctx.child(1), cfg,
-                                 cache, decode_pos)
+                                 cache, decode_pos, adapter)
     else:
         a, new_cache = gqa_apply(p["attn"], h, positions, ctx.child(1), cfg,
-                                 cache, decode_pos)
+                                 cache, decode_pos, adapter)
     x = x + a
     h = rms_norm(x, p["ln2"])
     if "moe" in p:

@@ -1,0 +1,19 @@
+"""Continuous-batching serving subsystem (engine, scheduler, paged KV cache).
+
+Public surface::
+
+    from repro.serve import Engine, EngineConfig, Request
+    eng = Engine(model, params, EngineConfig(kv_cache="fp4-centered"))
+    rid = eng.submit(prompt, max_new_tokens=32, temperature=0.8, top_k=40)
+    finished = eng.drain()
+"""
+from .engine import Engine, EngineConfig
+from .kvcache import QuantizedKVAdapter, make_adapter
+from .metrics import ServeMetrics
+from .sampling import sample_tokens
+from .scheduler import QueueFull, Request, Scheduler
+
+__all__ = [
+    "Engine", "EngineConfig", "QuantizedKVAdapter", "make_adapter",
+    "ServeMetrics", "sample_tokens", "QueueFull", "Request", "Scheduler",
+]

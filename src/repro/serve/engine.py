@@ -1,0 +1,260 @@
+"""Continuous-batching inference engine: ``submit() / step() / drain()``.
+
+One engine owns a fixed batch of decode slots over a slotted KV cache
+(dense bf16 or paged mean-centered NVFP4 — see ``kvcache.py``). Each
+``step()`` interleaves prefill and decode:
+
+  1. *admission*: waiting requests are placed into free slots (FIFO, at most
+     ``max_prefills_per_step`` per step). Each admitted request is prefilled
+     at its natural prompt length (a per-length jit cache), its K/V inserted
+     into the slot, and its first token sampled from the prefill logits.
+  2. *decode*: one fused jitted step advances every active slot — embed the
+     slot's last token, attend over its slot cache at its own position, and
+     sample the next token with per-slot temperature/top-k/seed.
+
+Requests retire on EOS, on reaching ``max_new_tokens``, or at cache
+capacity; their slots return to the free list for the next admission.
+
+All jitted shapes are fixed by (n_slots, max_len) except prefill, which
+compiles once per distinct prompt length.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.qgemm import recipe
+from repro.models.layers import QuantCtx
+from repro.models.model import Model
+
+from .kvcache import QuantizedKVAdapter, make_adapter
+from .metrics import ServeMetrics
+from .sampling import sample_tokens
+from .scheduler import Request, Scheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 4                 # fixed decode batch width
+    max_len: int = 256               # per-slot cache horizon (prompt + gen)
+    kv_cache: str = "bf16"           # bf16 | fp4 | fp4-centered
+    page_size: int = 64              # tokens per quantized cache page
+    quant_mode: str = "nvfp4"        # weight-GeMM recipe (core/qgemm)
+    max_prefills_per_step: int = 1   # admission budget per step
+    max_waiting: int = 256           # waiting-queue backpressure bound
+    seed: int = 0
+
+
+class Engine:
+    """Continuous-batching engine over a ``Model`` + params."""
+
+    def __init__(self, model: Model, params, config: EngineConfig = EngineConfig()):
+        cfg = model.cfg
+        if not cfg.is_decoder:
+            raise ValueError(f"{cfg.name} is encoder-only — nothing to serve")
+        if cfg.family in ("ssm", "hybrid"):
+            raise NotImplementedError(
+                "the continuous-batching engine currently serves attention "
+                "caches (dense/MoE families); SSM/hybrid use --static")
+        if cfg.input_mode != "tokens":
+            raise NotImplementedError(
+                "the engine serves token-input models; embedding-input "
+                f"frontends ({cfg.name}: input_mode={cfg.input_mode!r}) "
+                "have no prefill wiring here")
+        self.config = config
+        self.adapter = make_adapter(cfg, config.kv_cache, config.page_size)
+        # Fresh Model instance so the caller's adapter choice is untouched.
+        self.model = Model(cfg, model.remat_policy, cache_adapter=self.adapter)
+        self.params = params
+        self.capacity = self.adapter.capacity(config.max_len)
+
+        self.scheduler = Scheduler(config.n_slots, config.max_waiting)
+        self.reset_metrics()
+
+        b = config.n_slots
+        self.caches = self.adapter.blank(cfg.num_layers, b, config.max_len)
+        # host-side slot state
+        self._tokens = np.zeros(b, np.int32)
+        self._pos = np.zeros(b, np.int32)
+        self._active = np.zeros(b, bool)
+        self._temps = np.zeros(b, np.float32)
+        self._topks = np.zeros(b, np.int32)
+        self._seeds = np.zeros(b, np.int32)
+        self._gencnt = np.zeros(b, np.int32)   # tokens generated per slot
+
+        self._rid = 0
+        self._step_idx = 0
+        self._base_key = jax.random.key(config.seed)
+        self._recipe = recipe(config.quant_mode)
+
+        self._prefill = jax.jit(self._prefill_impl)         # per-length cache
+        # Donate the cache tree: the engine rebinds self.caches to the output
+        # immediately, so XLA may update the (large) cache buffers in place
+        # instead of copying them every step. (No-op on backends without
+        # donation support, e.g. CPU.)
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._insert_fns: Dict[int, object] = {}            # per-length jits
+
+    def reset_metrics(self) -> None:
+        """Fresh metrics window (e.g. after a jit-compile warmup drain)."""
+        self.metrics = ServeMetrics(
+            cache_bytes_per_token=self.adapter.bytes_per_token(),
+            num_layers=self.model.cfg.num_layers,
+        )
+
+    # ------------------------------------------------------------------ jitted
+    def _ctx(self, step_idx) -> QuantCtx:
+        return QuantCtx(self._recipe,
+                        jax.random.fold_in(self._base_key, step_idx))
+
+    def _prefill_impl(self, params, tokens, temp, topk, seed, step_idx):
+        ctx = self._ctx(step_idx)
+        logits, caches = self.model.prefill(params, {"tokens": tokens}, ctx)
+        # token index 0 of the request; keys depend only on (seed, index)
+        first = sample_tokens(logits[:, -1], temp, topk, self._base_key, seed)
+        return first, caches
+
+    def _decode_impl(self, params, caches, tokens, pos, temps, topks, seeds,
+                     gencnt, step_idx):
+        ctx = self._ctx(step_idx)
+        logits, caches = self.model.decode_step(
+            params, {"token": tokens}, pos, caches, ctx)
+        nxt = sample_tokens(logits[:, 0], temps, topks, self._base_key, seeds,
+                            gencnt)
+        return nxt, caches
+
+    def _insert(self, caches, prefill_caches, slot: int, length: int):
+        if length not in self._insert_fns:
+            adapter = self.adapter
+            self._insert_fns[length] = jax.jit(
+                lambda c, pf, s: adapter.insert(c, pf, s, length),
+                donate_argnums=(0,))
+        return self._insert_fns[length](caches, prefill_caches,
+                                        jnp.int32(slot))
+
+    # ------------------------------------------------------------------ public
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               eos_id: Optional[int] = None, temperature: float = 0.0,
+               top_k: int = 0, seed: Optional[int] = None) -> int:
+        """Queue one request; returns its request id.
+
+        Raises ``scheduler.QueueFull`` when the waiting queue is at capacity
+        (backpressure — callers retry or shed load).
+        """
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if prompt.size + max_new_tokens > self.capacity:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds cache capacity {self.capacity}")
+        rid = self._rid
+        self._rid += 1
+        req = Request(
+            rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
+            eos_id=eos_id, temperature=temperature, top_k=top_k,
+            seed=seed if seed is not None else rid,
+            submit_time=self.metrics.now(),
+        )
+        self.scheduler.submit(req)
+        return rid
+
+    def step(self) -> List[Request]:
+        """Admit + prefill new requests, decode one token for active slots.
+
+        Returns the requests that finished during this step.
+        """
+        t_start = self.metrics.now()
+        finished: List[Request] = []
+
+        for slot, req in self.scheduler.admit(self.config.max_prefills_per_step):
+            self._admit(slot, req, finished)
+
+        n_active = int(self._active.sum())
+        if n_active:
+            nxt, self.caches = self._decode(
+                self.params, self.caches,
+                jnp.asarray(self._tokens), jnp.asarray(self._pos),
+                jnp.asarray(self._temps), jnp.asarray(self._topks),
+                jnp.asarray(self._seeds), jnp.asarray(self._gencnt),
+                self._step_idx,
+            )
+            nxt = np.asarray(jax.block_until_ready(nxt))
+            for slot in np.flatnonzero(self._active):
+                slot = int(slot)
+                req = self.scheduler.request_in(slot)
+                self._pos[slot] += 1
+                self._gencnt[slot] += 1
+                tok = int(nxt[slot])
+                req.generated.append(tok)
+                self._tokens[slot] = tok
+                self._maybe_finish(slot, req, tok, finished)
+
+        self._step_idx += 1
+        self.metrics.record_step(self.metrics.now() - t_start, n_active,
+                                 self.scheduler.occupancy)
+        return finished
+
+    def drain(self, max_steps: Optional[int] = None) -> List[Request]:
+        """Run ``step()`` until all submitted work is finished."""
+        out: List[Request] = []
+        steps = 0
+        while self.scheduler.has_work:
+            out.extend(self.step())
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return out
+
+    # ------------------------------------------------------------------ intern
+    def _admit(self, slot: int, req: Request, finished: List[Request]):
+        s = req.prompt_len
+        tokens = jnp.asarray(req.prompt)[None, :]
+        first, pcaches = self._prefill(
+            self.params, tokens,
+            jnp.full((1,), req.temperature, jnp.float32),
+            jnp.full((1,), req.top_k, jnp.int32),
+            jnp.full((1,), req.seed, jnp.int32),
+            self._step_idx,
+        )
+        self.caches = self._insert(self.caches, pcaches, slot, s)
+        tok = int(jax.block_until_ready(first)[0])
+        req.first_token_time = self.metrics.now()
+        req.generated.append(tok)
+
+        self._tokens[slot] = tok
+        self._pos[slot] = s
+        self._active[slot] = True
+        self._temps[slot] = req.temperature
+        self._topks[slot] = req.top_k
+        self._seeds[slot] = req.seed
+        self._gencnt[slot] = 1    # the prefill-sampled token was index 0
+        self._maybe_finish(slot, req, tok, finished)
+
+    def _maybe_finish(self, slot: int, req: Request, tok: int,
+                      finished: List[Request]):
+        if req.eos_id is not None and tok == req.eos_id:
+            req.finish_reason = "eos"
+        elif len(req.generated) >= req.max_new_tokens:
+            req.finish_reason = "length"
+        elif int(self._pos[slot]) >= self.capacity:
+            req.finish_reason = "capacity"
+        if req.done:
+            req.finish_time = self.metrics.now()
+            self._active[slot] = False
+            # Reset host slot state so the (masked) decode of a free slot
+            # never scatters at an out-of-range position.
+            self._tokens[slot] = 0
+            self._pos[slot] = 0
+            self._temps[slot] = 0.0
+            self._topks[slot] = 0
+            self._gencnt[slot] = 0
+            self.scheduler.retire(slot)
+            self.metrics.record_finished(req)
+            finished.append(req)

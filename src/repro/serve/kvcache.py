@@ -1,0 +1,313 @@
+"""Slotted paged KV cache with an optional mean-centered NVFP4 payload mode.
+
+At serving time the KV cache is the dominant memory consumer, and it carries
+exactly the pathology the paper analyses for activations: K/V rows share a
+coherent rank-one mean component across tokens, which inflates the dynamic
+range every blockwise FP4 scale must cover. This module therefore stores K/V
+pages as *mean-centered* NVFP4 payloads — the serving-side analogue of Averis
+(``core/averis.split_mean``): per page, the token-mean is split off and kept
+in 16-bit, and only the zero-mean residual is quantized with the two-level
+NVFP4 scheme of ``core/nvfp4`` (E2M1 codes, E4M3 block scales along head_dim,
+one fp32 amax per page). "Massive Spikes in LLMs are Bias Vectors" reaches
+the same conclusion for cache quantization from the spike side.
+
+Layouts (one layer; the model scans over a stacked leading L axis):
+
+  codes  (b, n_pages, P, 2, n_kv, hd//2)  uint8   two E2M1 codes per byte
+  scales (b, n_pages, P, 2, n_kv, hd//16) f8e4m3  per-16-block decode scales
+  pamax  (b, n_pages, 2)                  f32     per-page per-stream amax
+  mean   (b, n_pages, 2, n_kv, hd)        bf16    per-page token mean (centered)
+  tail   (b, P, 2, n_kv, hd)              bf16    current partial page
+
+The ``2`` axis is the (k, v) stream pair. Decode writes land in the bf16
+tail; when a page fills it is quantized and committed, so dequantize-on-read
+covers committed pages while the in-flight page stays exact. Storage per
+committed token is 0.5 B/elem codes + 1/16 B/elem scales (+ 2/P B/elem mean
+when centered) vs 2 B/elem for bf16 — ~0.28-0.30x.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import (
+    BLOCK_SIZE,
+    E2M1_GRID,
+    E2M1_MAX,
+    TENSOR_SCALE_DENOM,
+)
+from repro.core.nvfp4 import round_e2m1_rn
+
+_EPS = 1e-30
+
+
+# --------------------------------------------------------------------------
+# Page codec: mean-centered two-level NVFP4 encode / decode
+# --------------------------------------------------------------------------
+
+def encode_pages(kv: jax.Array, *, centered: bool,
+                 block_size: int = BLOCK_SIZE):
+    """Quantize full pages. ``kv``: (..., P, 2, n_kv, hd) float.
+
+    Returns (codes u8 (..., P, 2, n_kv, hd//2),
+             scales f8e4m3 (..., P, 2, n_kv, hd//block),
+             pamax f32 (..., 2),
+             mean f32 (..., 2, n_kv, hd) — zeros when not centered).
+    Blocks run along hd; the token mean is taken over the page's P tokens
+    (the ``split_mean`` token axis restricted to one page).
+    """
+    x = kv.astype(jnp.float32)
+    hd = x.shape[-1]
+    assert hd % block_size == 0, f"head_dim {hd} must be {block_size}-aligned"
+    mu = jnp.mean(x, axis=-4, keepdims=True)  # over P
+    if not centered:
+        mu = jnp.zeros_like(mu)
+    res = x - mu
+
+    pamax = jnp.max(jnp.abs(res), axis=(-4, -2, -1))          # (..., 2)
+    s_t = jnp.maximum(pamax / TENSOR_SCALE_DENOM, _EPS)        # (..., 2)
+    rb = res.reshape(res.shape[:-1] + (hd // block_size, block_size))
+    bamax = jnp.max(jnp.abs(rb), axis=-1)                      # (..., P,2,n,nb)
+    s_t_b = s_t[..., None, :, None, None]                      # align to bamax
+    s_b = jnp.clip(bamax / (E2M1_MAX * s_t_b), 0.0, 448.0)
+    s_b_f8 = s_b.astype(jnp.float8_e4m3fn)
+    scale = s_b_f8.astype(jnp.float32) * s_t_b                 # effective
+
+    a = jnp.where(scale[..., None] > 0,
+                  jnp.abs(rb) / jnp.maximum(scale[..., None], _EPS), 0.0)
+    q = round_e2m1_rn(a)
+    idx = jnp.searchsorted(jnp.asarray(E2M1_GRID), q).astype(jnp.uint8)
+    sign = (rb < 0).astype(jnp.uint8)
+    code = sign * jnp.uint8(8) + idx                            # 4-bit code
+    flat = code.reshape(code.shape[:-2] + (hd,))
+    packed = flat[..., 0::2] | (flat[..., 1::2] << 4)           # (..., hd//2)
+    return packed, s_b_f8, pamax, mu[..., 0, :, :, :]
+
+
+def decode_pages(codes: jax.Array, scales: jax.Array, pamax: jax.Array,
+                 mean: Optional[jax.Array], *, block_size: int = BLOCK_SIZE,
+                 dtype=jnp.bfloat16) -> jax.Array:
+    """Inverse of :func:`encode_pages` -> (..., P, 2, n_kv, hd) in ``dtype``."""
+    grid = jnp.asarray(E2M1_GRID)
+    lo = (codes & 0x0F).astype(jnp.int32)
+    hi = (codes >> 4).astype(jnp.int32)
+    flat = jnp.stack([lo, hi], axis=-1).reshape(codes.shape[:-1] +
+                                                (2 * codes.shape[-1],))
+    hd = flat.shape[-1]
+    mag = grid[flat & 7]
+    sign = jnp.where(flat >= 8, -1.0, 1.0)
+    s_t = jnp.maximum(pamax / TENSOR_SCALE_DENOM, _EPS)
+    scale = scales.astype(jnp.float32) * s_t[..., None, :, None, None]
+    rb = (sign * mag).reshape(flat.shape[:-1] + (hd // block_size, block_size))
+    res = (rb * scale[..., None]).reshape(flat.shape[:-1] + (hd,))
+    if mean is not None:
+        res = res + mean.astype(jnp.float32)[..., None, :, :, :]
+    return res.astype(dtype)
+
+
+def page_roundtrip_error(kv: jax.Array, *, centered: bool) -> jax.Array:
+    """Relative Frobenius error of one encode/decode cycle (test helper)."""
+    kvp = kv[..., None, :, :, :, :] if kv.ndim == 4 else kv  # ensure pages dim
+    codes, scales, pamax, mu = encode_pages(kvp, centered=centered)
+    deq = decode_pages(codes, scales, pamax, mu if centered else None,
+                       dtype=jnp.float32)
+    x = kvp.astype(jnp.float32)
+    return jnp.linalg.norm(deq - x) / jnp.maximum(jnp.linalg.norm(x), _EPS)
+
+
+# --------------------------------------------------------------------------
+# Quantized paged cache adapter (same protocol as models/cache.py adapters)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedKVAdapter:
+    """Paged NVFP4 KV cache for GQA decode; ``centered`` adds the mean split.
+
+    Presents the models/cache.py adapter protocol: ``update`` writes the new
+    token into the bf16 tail, commits a full page as quantized payload, and
+    returns dense (dequantized) K/V views for ``attention_core`` — the model
+    code is unchanged between bf16 and FP4 cache modes.
+    """
+
+    num_kv_heads: int
+    head_dim: int
+    page_size: int = 64
+    centered: bool = True
+    block_size: int = BLOCK_SIZE
+    dtype_name: str = "bfloat16"
+
+    streams = ("k", "v")
+
+    def __post_init__(self):
+        assert self.head_dim % self.block_size == 0, (
+            f"head_dim {self.head_dim} not divisible by NVFP4 block "
+            f"{self.block_size} — quantized KV cache unsupported")
+
+    @property
+    def kind(self) -> str:
+        return "fp4-centered" if self.centered else "fp4"
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.dtype_name)
+
+    def n_pages(self, max_len: int) -> int:
+        return -(-max_len // self.page_size)
+
+    def capacity(self, max_len: int) -> int:
+        return self.n_pages(max_len) * self.page_size
+
+    def _shapes(self, batch: int, max_len: int) -> Dict[str, Tuple]:
+        np_, p = self.n_pages(max_len), self.page_size
+        n, hd, bs = self.num_kv_heads, self.head_dim, self.block_size
+        shapes = {
+            "codes": ((batch, np_, p, 2, n, hd // 2), jnp.uint8),
+            "scales": ((batch, np_, p, 2, n, hd // bs), jnp.float8_e4m3fn),
+            "pamax": ((batch, np_, 2), jnp.float32),
+            "tail": ((batch, p, 2, n, hd), self.dtype),
+        }
+        if self.centered:
+            shapes["mean"] = ((batch, np_, 2, n, hd), self.dtype)
+        return shapes
+
+    def layer_spec(self, batch: int, max_len: int) -> Dict[str, Any]:
+        return {k: jax.ShapeDtypeStruct(s, d)
+                for k, (s, d) in self._shapes(batch, max_len).items()}
+
+    def blank(self, num_layers: int, batch: int, max_len: int):
+        return {k: jnp.zeros((num_layers,) + s, d)
+                for k, (s, d) in self._shapes(batch, max_len).items()}
+
+    # ------------------------------------------------------------------ ops
+    def _mean_or_none(self, cache):
+        return cache["mean"] if self.centered else None
+
+    def update(self, cache, toks, pos):
+        """Write one token per slot at ``pos``; return dense K/V views."""
+        k_tok, v_tok = toks
+        b = k_tok.shape[0]
+        p = self.page_size
+        bidx = jnp.arange(b)
+        tidx = pos % p
+        pidx = pos // p
+        tok = jnp.stack([k_tok, v_tok], axis=1).astype(self.dtype)  # (b,2,n,hd)
+
+        tail = cache["tail"].at[bidx, tidx].set(tok)
+
+        # Commit the page for slots whose tail just filled. A commit happens
+        # only once per page_size steps per slot, so the (expensive) encode
+        # runs under a batch-wide lax.cond and is skipped on most steps.
+        commit = tidx == p - 1                                     # (b,)
+        page_keys = ("codes", "scales", "pamax") + (
+            ("mean",) if self.centered else ())
+
+        def commit_pages(ops):
+            codes_new, scales_new, pamax_new, mu_new = encode_pages(
+                tail, centered=self.centered, block_size=self.block_size)
+            news = {"codes": codes_new, "scales": scales_new,
+                    "pamax": pamax_new}
+            if self.centered:
+                news["mean"] = mu_new.astype(self.dtype)
+
+            def scatter(leaf, new):
+                cur = leaf[bidx, pidx]
+                m = commit.reshape((b,) + (1,) * (cur.ndim - 1))
+                return leaf.at[bidx, pidx].set(jnp.where(m, new, cur))
+
+            return tuple(scatter(leaf, news[k])
+                         for k, leaf in zip(page_keys, ops))
+
+        committed = jax.lax.cond(
+            jnp.any(commit), commit_pages, lambda ops: ops,
+            tuple(cache[k] for k in page_keys))
+
+        new = dict(cache)
+        new["tail"] = tail
+        new.update(zip(page_keys, committed))
+
+        # Dense attendable view: dequantize committed pages, overlay the
+        # exact bf16 tail over the current page's span (stale tail entries
+        # land at future positions and are causally masked).
+        deq = decode_pages(new["codes"], new["scales"], new["pamax"],
+                           self._mean_or_none(new), dtype=self.dtype,
+                           block_size=self.block_size)
+        n_pages = deq.shape[1]
+        cap = n_pages * p
+        dense = deq.reshape((b, cap) + deq.shape[3:])              # (b,cap,2,n,hd)
+        span = pidx[:, None] * p + jnp.arange(p)[None, :]          # (b,P)
+        dense = dense.at[bidx[:, None], span].set(tail)
+        return (dense[:, :, 0], dense[:, :, 1]), new
+
+    def insert(self, caches, prefill, slot, length: int):
+        """Place one request's prefill K/V into ``slot`` (stacked L leaves)."""
+        p = self.page_size
+        kv = jnp.stack([prefill["k"][:, 0], prefill["v"][:, 0]], axis=2)
+        kv = kv.astype(self.dtype)                                 # (L,s,2,n,hd)
+        nl = kv.shape[0]
+        n_full = length // p
+        rem = length - n_full * p
+
+        rows = {k: jnp.zeros((a.shape[0],) + a.shape[2:], a.dtype)
+                for k, a in caches.items()}
+        if n_full:
+            full = kv[:, : n_full * p].reshape((nl, n_full, p) + kv.shape[2:])
+            codes, scales, pamax, mu = encode_pages(
+                full, centered=self.centered, block_size=self.block_size)
+            rows["codes"] = rows["codes"].at[:, :n_full].set(codes)
+            rows["scales"] = rows["scales"].at[:, :n_full].set(scales)
+            rows["pamax"] = rows["pamax"].at[:, :n_full].set(pamax)
+            if self.centered:
+                rows["mean"] = rows["mean"].at[:, :n_full].set(
+                    mu.astype(self.dtype))
+        if rem:
+            rows["tail"] = rows["tail"].at[:, :rem].set(kv[:, n_full * p:])
+
+        return {k: caches[k].at[:, slot].set(rows[k]) for k in caches}
+
+    # ------------------------------------------------------------------ cost
+    def bytes_per_token(self) -> float:
+        """Marginal storage per committed cached token (k+v, one layer)."""
+        n, hd, p, bs = (self.num_kv_heads, self.head_dim, self.page_size,
+                        self.block_size)
+        bytes_ = (
+            2 * n * hd / 2        # packed E2M1 codes (k and v streams)
+            + 2 * n * hd / bs     # E4M3 block scales
+            + 2 * 4.0 / p         # fp32 page amax, amortized over the page
+        )
+        if self.centered:
+            # per-page mean vectors, amortized over the page's tokens
+            bytes_ += 2 * n * hd * self.dtype.itemsize / p
+        return float(bytes_)
+
+    def overhead_bytes_per_slot(self) -> float:
+        """Constant per-slot working storage (the bf16 tail page, one layer)."""
+        return float(self.page_size * 2 * self.num_kv_heads * self.head_dim
+                     * self.dtype.itemsize)
+
+
+def make_adapter(cfg, kv_cache: str, page_size: int = 64):
+    """Build the cache adapter for a serving cache mode.
+
+    kv_cache: ``bf16`` (dense), ``fp4`` (paged NVFP4), ``fp4-centered``
+    (paged NVFP4 with the per-page mean split — the paper-informed mode).
+    """
+    from repro.models.cache import default_adapter
+
+    if kv_cache == "bf16":
+        return default_adapter(cfg)
+    if kv_cache in ("fp4", "fp4-centered"):
+        if cfg.family in ("ssm", "hybrid") or cfg.attention != "gqa":
+            raise NotImplementedError(
+                f"quantized KV cache requires a GQA attention cache; "
+                f"{cfg.name} is family={cfg.family}/attention={cfg.attention}")
+        return QuantizedKVAdapter(
+            num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim,
+            page_size=page_size,
+            centered=kv_cache == "fp4-centered",
+            dtype_name=cfg.compute_dtype,
+        )
+    raise ValueError(f"unknown kv cache mode {kv_cache!r}")

@@ -1,0 +1,63 @@
+"""Serving metrics: throughput, TTFT, per-step latency, cache occupancy.
+
+Collected on the host around the jitted steps; ``summary()`` condenses a run
+into the fields ``benchmarks/bench_serve.py`` reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .scheduler import Request
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    cache_bytes_per_token: float = 0.0    # per layer, set by the engine
+    num_layers: int = 0
+
+    step_latencies_s: List[float] = dataclasses.field(default_factory=list)
+    step_active: List[int] = dataclasses.field(default_factory=list)
+    step_occupancy: List[float] = dataclasses.field(default_factory=list)
+    finished: List[Request] = dataclasses.field(default_factory=list)
+    _t0: Optional[float] = None
+    _t1: Optional[float] = None
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def record_step(self, latency_s: float, n_active: int, occupancy: float):
+        if self._t0 is None:
+            self._t0 = time.perf_counter() - latency_s
+        self._t1 = time.perf_counter()
+        self.step_latencies_s.append(latency_s)
+        self.step_active.append(n_active)
+        self.step_occupancy.append(occupancy)
+
+    def record_finished(self, req: Request):
+        self.finished.append(req)
+
+    # ------------------------------------------------------------------ views
+    @property
+    def total_generated(self) -> int:
+        return sum(len(r.generated) for r in self.finished)
+
+    def summary(self) -> Dict[str, float]:
+        lat = np.asarray(self.step_latencies_s or [0.0])
+        wall = ((self._t1 - self._t0)
+                if self._t0 is not None and self._t1 is not None else 0.0)
+        ttfts = [r.first_token_time - r.submit_time
+                 for r in self.finished if r.first_token_time is not None]
+        return {
+            "requests": float(len(self.finished)),
+            "generated_tokens": float(self.total_generated),
+            "throughput_tok_s": (self.total_generated / wall) if wall else 0.0,
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "p50_step_ms": float(np.percentile(lat, 50) * 1e3),
+            "p95_step_ms": float(np.percentile(lat, 95) * 1e3),
+            "mean_occupancy": float(np.mean(self.step_occupancy or [0.0])),
+            "cache_bytes_per_token": self.cache_bytes_per_token * self.num_layers,
+        }

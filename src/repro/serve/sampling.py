@@ -1,0 +1,56 @@
+"""Token sampling for the serving engine: greedy, temperature, top-k.
+
+Everything is batched over decode slots with *per-slot* parameters, so one
+fused jitted step serves heterogeneous requests: slots with temperature 0
+take the argmax, the rest sample from the (optionally top-k-truncated)
+temperature-scaled distribution. Per-slot PRNG streams fold the request seed
+and the request's own token index into a fixed base key, so the *sampling*
+draw depends only on (seed, token index), not on admission timing or batch
+composition. (Full generation invariance additionally requires deterministic
+logits, i.e. a non-stochastic quant recipe: under SR recipes the quant noise
+is keyed by the engine step index, and blockwise tensor scales couple slots.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def apply_top_k(logits: jax.Array, top_k: jax.Array) -> jax.Array:
+    """Mask ``logits`` (b, V) to each row's top ``top_k`` entries.
+
+    ``top_k``: (b,) int32; 0 disables truncation for that row.
+    """
+    b, v = logits.shape
+    sorted_desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    kth = jnp.clip(top_k - 1, 0, v - 1)
+    thresh = sorted_desc[jnp.arange(b), kth]                   # (b,)
+    keep = logits >= thresh[:, None]
+    masked = jnp.where(keep, logits, NEG_INF)
+    return jnp.where((top_k > 0)[:, None], masked, logits)
+
+
+def sample_tokens(
+    logits: jax.Array,        # (b, V) final-position logits
+    temperature: jax.Array,   # (b,) float; <= 0 => greedy
+    top_k: jax.Array,         # (b,) int32; 0 => full support
+    key: jax.Array,           # base PRNG key (fixed per engine)
+    seeds: jax.Array,         # (b,) int32 per-slot request seeds
+    offsets: jax.Array = None,  # (b,) int32 per-slot token index in request
+) -> jax.Array:
+    """Sample one token per slot. Returns (b,) int32."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32)
+    lg = apply_top_k(lg, top_k)
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    if offsets is None:
+        offsets = jnp.zeros(seeds.shape, jnp.int32)
+    keys = jax.vmap(
+        lambda s, o: jax.random.fold_in(jax.random.fold_in(key, s), o)
+    )(seeds, offsets)
+    sampled = jax.vmap(
+        lambda k, row: jax.random.categorical(k, row)
+    )(keys, lg / temp).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)

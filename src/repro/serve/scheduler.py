@@ -1,0 +1,116 @@
+"""Request scheduler: FIFO admission of variable-length requests into a
+fixed set of decode slots, with waiting-queue backpressure.
+
+The engine owns the numerics; this module owns the bookkeeping — which
+request sits in which slot, who waits, who retired and why. It is pure host
+Python (no jax) so its invariants are directly unit-testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class QueueFull(RuntimeError):
+    """Raised by ``submit`` when the waiting queue is at capacity."""
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its accumulated serving state."""
+
+    rid: int
+    prompt: np.ndarray                    # (s,) int32 token ids
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    temperature: float = 0.0              # 0 => greedy
+    top_k: int = 0                        # 0 => no truncation
+    seed: int = 0
+
+    # -- filled in during serving ------------------------------------------
+    generated: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[str] = None   # "eos" | "length" | "capacity"
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return self.finish_reason is not None
+
+
+class Scheduler:
+    """Slot table + FIFO waiting queue.
+
+    Invariants (tested):
+      * a slot is either free or holds exactly one live request;
+      * admission is FIFO over the waiting queue, bounded by free slots;
+      * retiring a slot frees it for reuse;
+      * ``submit`` raises :class:`QueueFull` past ``max_waiting`` entries.
+    """
+
+    def __init__(self, n_slots: int, max_waiting: int = 256):
+        assert n_slots > 0
+        self.n_slots = n_slots
+        self.max_waiting = max_waiting
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self._waiting: Deque[Request] = deque()
+        self._active: Dict[int, Request] = {}
+
+    # ------------------------------------------------------------------ state
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self._waiting)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._active or self._waiting)
+
+    @property
+    def occupancy(self) -> float:
+        return self.n_active / self.n_slots
+
+    def active_items(self) -> List[Tuple[int, Request]]:
+        return sorted(self._active.items())
+
+    def request_in(self, slot: int) -> Request:
+        return self._active[slot]
+
+    # ------------------------------------------------------------------ ops
+    def submit(self, req: Request) -> None:
+        if len(self._waiting) >= self.max_waiting:
+            raise QueueFull(
+                f"waiting queue full ({self.max_waiting}); retry later")
+        self._waiting.append(req)
+
+    def admit(self, max_admit: Optional[int] = None) -> List[Tuple[int, Request]]:
+        """Move waiting requests into free slots (FIFO). Returns placements."""
+        placed: List[Tuple[int, Request]] = []
+        budget = max_admit if max_admit is not None else self.n_slots
+        while self._free and self._waiting and len(placed) < budget:
+            slot = self._free.pop()
+            req = self._waiting.popleft()
+            self._active[slot] = req
+            placed.append((slot, req))
+        return placed
+
+    def retire(self, slot: int) -> Request:
+        req = self._active.pop(slot)
+        assert req.done, f"retiring slot {slot} with unfinished request {req.rid}"
+        self._free.append(slot)
+        return req

@@ -1,0 +1,67 @@
+"""Import hypothesis, or fall back to a tiny fixed-sample shim.
+
+A missing dev dependency must not abort collection of the whole tier-1 suite
+(`pip install -r requirements-dev.txt` restores real property testing). The
+fallback runs each ``@given`` test over a deterministic sample of draws —
+weaker than hypothesis's shrinking search, but it keeps the invariants
+exercised on a clean environment.
+
+Usage (drop-in for ``from hypothesis import ...``)::
+
+    from _hypothesis_compat import given, settings, st
+"""
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - exercised on clean envs
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _N_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            # log-uniform when the range spans decades (scale-like params)
+            import math
+
+            if min_value > 0 and max_value / min_value > 100:
+                lo, hi = math.log(min_value), math.log(max_value)
+                return _Strategy(lambda rng: math.exp(rng.uniform(lo, hi)))
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: rng.choice(options))
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper():
+                rng = random.Random(0)
+                for _ in range(_N_EXAMPLES):
+                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+
+            # NOT functools.wraps: copying __wrapped__ would make pytest
+            # resolve the inner signature's params as fixtures.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

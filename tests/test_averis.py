@@ -3,7 +3,8 @@ mechanism (residual fidelity preserved under planted mean bias)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.averis import (
     averis_forward,

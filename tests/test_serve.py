@@ -1,0 +1,373 @@
+"""Serving subsystem: scheduler invariants, quantized-cache round trip,
+sampling determinism, spec-driven cache growth, and an end-to-end engine
+smoke test (continuous batching == static batch, token-for-token)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import reduced
+from repro.models.cache import (
+    default_adapter,
+    dense_gqa_adapter,
+    dense_mla_adapter,
+    grow_caches,
+)
+from repro.models.model import Model
+from repro.models.transformer import block_cache_spec, shared_block_cache_spec
+from repro.serve import Engine, EngineConfig, QueueFull, Request, Scheduler
+from repro.serve.kvcache import decode_pages, encode_pages, make_adapter
+from repro.serve.sampling import sample_tokens
+
+
+def _req(rid, s=8, gen=4, **kw):
+    return Request(rid=rid, prompt=np.zeros(s, np.int32),
+                   max_new_tokens=gen, **kw)
+
+
+# --------------------------------------------------------------------------
+# Scheduler
+# --------------------------------------------------------------------------
+
+def test_scheduler_fifo_admission_and_slot_reuse():
+    sch = Scheduler(n_slots=2)
+    for i in range(5):
+        sch.submit(_req(i))
+    placed = sch.admit()
+    assert [r.rid for _, r in placed] == [0, 1]
+    assert sch.n_active == 2 and sch.n_waiting == 3 and sch.n_free == 0
+    assert sch.admit() == []                     # no free slots -> no admission
+
+    slot0 = placed[0][0]
+    sch.request_in(slot0).finish_reason = "length"
+    sch.retire(slot0)
+    assert sch.n_free == 1
+    placed2 = sch.admit()
+    assert len(placed2) == 1
+    assert placed2[0][0] == slot0                # the freed slot is reused
+    assert placed2[0][1].rid == 2                # FIFO order preserved
+
+
+def test_scheduler_admit_budget_and_occupancy():
+    sch = Scheduler(n_slots=4)
+    for i in range(4):
+        sch.submit(_req(i))
+    assert len(sch.admit(max_admit=1)) == 1
+    assert sch.occupancy == 0.25
+    assert len(sch.admit()) == 3
+
+
+def test_scheduler_backpressure():
+    sch = Scheduler(n_slots=1, max_waiting=2)
+    sch.submit(_req(0))
+    sch.submit(_req(1))
+    with pytest.raises(QueueFull):
+        sch.submit(_req(2))
+
+
+def test_scheduler_refuses_retiring_unfinished():
+    sch = Scheduler(n_slots=1)
+    sch.submit(_req(0))
+    (slot, _), = sch.admit()
+    with pytest.raises(AssertionError):
+        sch.retire(slot)
+
+
+# --------------------------------------------------------------------------
+# Quantized page codec / adapter
+# --------------------------------------------------------------------------
+
+def _pages(bias_scale=0.0, seed=0, n_pages=2, p=16, n=2, hd=32):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n_pages, p, 2, n, hd)).astype(np.float32)
+    if bias_scale:
+        mu = (rng.standard_t(df=2, size=(2, n, hd)) * bias_scale)
+        x = x + mu[None, None].astype(np.float32)
+    return jnp.asarray(x)
+
+
+def _roundtrip_err(x, centered):
+    codes, scales, pamax, mu = encode_pages(x, centered=centered)
+    deq = decode_pages(codes, scales, pamax, mu if centered else None,
+                       dtype=jnp.float32)
+    x = np.asarray(x, np.float32)
+    return float(np.linalg.norm(np.asarray(deq) - x) / np.linalg.norm(x))
+
+
+def test_page_codec_roundtrip_error_bound():
+    # zero-mean Gaussian pages: both modes sit at the NVFP4 error floor
+    x = _pages()
+    assert _roundtrip_err(x, centered=False) < 0.15
+    assert _roundtrip_err(x, centered=True) < 0.15
+
+
+def test_centered_strictly_tighter_on_biased_pages():
+    """The paper's mechanism on the KV cache: a coherent mean component
+    inflates blockwise-FP4 dynamic range; splitting it off removes the
+    inflation. Centered must be strictly tighter than uncentered."""
+    x = _pages(bias_scale=8.0, seed=1)
+    e_unc = _roundtrip_err(x, centered=False)
+    e_cen = _roundtrip_err(x, centered=True)
+    assert e_cen < e_unc * 0.5, (e_cen, e_unc)
+
+
+def test_uncentered_codec_matches_core_nvfp4():
+    """The stored payload is bit-faithful to core/nvfp4.nvfp4_qdq given the
+    same (per-page, per-stream) tensor amax."""
+    from repro.core.nvfp4 import nvfp4_qdq
+
+    x = _pages(seed=2, n_pages=1)
+    codes, scales, pamax, _ = encode_pages(x, centered=False)
+    deq = np.asarray(decode_pages(codes, scales, pamax, None,
+                                  dtype=jnp.float32))
+    hd = x.shape[-1]
+    for s in range(2):
+        ref = nvfp4_qdq(x[0, :, s].reshape(-1, hd), axis=-1,
+                        tensor_amax=jnp.max(jnp.abs(x[0, :, s])))
+        np.testing.assert_array_equal(deq[0, :, s].reshape(-1, hd),
+                                      np.asarray(ref))
+
+
+def test_quantized_adapter_bytes_below_bf16():
+    cfg = reduced("qwen3-0.6b")
+    dense = dense_gqa_adapter(cfg)
+    for kind in ("fp4", "fp4-centered"):
+        quant = make_adapter(cfg, kind, page_size=64)
+        ratio = quant.bytes_per_token() / dense.bytes_per_token()
+        assert ratio <= 0.31, (kind, ratio)
+
+
+def test_quantized_adapter_update_insert_consistency():
+    """insert(prefill) followed by update() must reproduce the dense history
+    (exactly for the bf16 tail, within FP4 error for committed pages)."""
+    cfg = reduced("qwen3-0.6b")
+    adapter = make_adapter(cfg, "fp4-centered", page_size=8)
+    n, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    L, b, s, cap = 2, 2, 12, 24
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(size=(L, 1, s, n, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(L, 1, s, n, hd)).astype(np.float32))
+
+    caches = adapter.blank(L, b, cap)
+    caches = adapter.insert(caches, {"k": k, "v": v}, 1, s)
+    layer0 = {key: a[0] for key, a in caches.items()}
+    tok_k = jnp.asarray(rng.normal(size=(b, n, hd)).astype(np.float32))
+    tok_v = jnp.asarray(rng.normal(size=(b, n, hd)).astype(np.float32))
+    pos = jnp.asarray([0, s], jnp.int32)
+    (dk, dv), _ = adapter.update(layer0, (tok_k, tok_v), pos)
+    assert dk.shape == (b, cap, n, hd) and dv.shape == (b, cap, n, hd)
+
+    # slot 1: committed page [0:8) within FP4 error, tail [8:12) near-exact,
+    # the new token at pos=12 exact (bf16).
+    ref = np.asarray(k[0, 0], np.float32)
+    got = np.asarray(dk[1], np.float32)
+    page_err = (np.linalg.norm(got[:8] - ref[:8])
+                / np.linalg.norm(ref[:8]))
+    assert page_err < 0.15
+    np.testing.assert_allclose(got[8:12], ref[8:12], rtol=1e-2, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(dk[1, 12]),
+                               np.asarray(tok_k[1]), rtol=1e-2, atol=1e-2)
+    # slot 0 (empty insert) sees only its fresh token at pos=0
+    np.testing.assert_allclose(np.asarray(dk[0, 0]),
+                               np.asarray(tok_k[0]), rtol=1e-2, atol=1e-2)
+
+
+# --------------------------------------------------------------------------
+# Spec-driven cache growth (extend_caches replacement)
+# --------------------------------------------------------------------------
+
+def _zeros_from_spec(spec, num_layers):
+    return jax.tree.map(
+        lambda s: jnp.zeros((num_layers,) + s.shape, s.dtype), spec)
+
+
+def test_grow_caches_pads_attention_time_axis():
+    cfg = reduced("qwen3-0.6b")
+    caches = _zeros_from_spec(block_cache_spec(cfg, 2, 8), cfg.num_layers)
+    grown = grow_caches(cfg, caches, 4)
+    assert grown["k"].shape[2] == 12 and grown["v"].shape[2] == 12
+
+
+def test_grow_caches_mla():
+    cfg = reduced("minicpm3-4b")
+    caches = _zeros_from_spec(block_cache_spec(cfg, 2, 8), cfg.num_layers)
+    grown = grow_caches(cfg, caches, 4)
+    assert grown["c"].shape[2] == 12 and grown["kr"].shape[2] == 12
+
+
+def test_grow_caches_ssm_states_pass_through_unpadded():
+    cfg = reduced("mamba2-780m")
+    caches = _zeros_from_spec(block_cache_spec(cfg, 2, 8), cfg.num_layers)
+    grown = grow_caches(cfg, caches, 4)
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: a.shape == b.shape, caches, grown))
+
+
+def test_grow_caches_hybrid_grows_only_shared_attention():
+    cfg = reduced("zamba2-2.7b")
+    ssm = _zeros_from_spec(block_cache_spec(cfg, 2, 8), cfg.num_layers)
+    groups = cfg.num_layers // cfg.hybrid_attn_every
+    shared = _zeros_from_spec(shared_block_cache_spec(cfg, 2, 8), groups)
+    g_ssm, g_shared = grow_caches(cfg, (ssm, shared), 4)
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: a.shape == b.shape, ssm, g_ssm))
+    assert g_shared["k"].shape[2] == 12
+
+
+def test_default_adapter_variants():
+    assert default_adapter(reduced("qwen3-0.6b")).streams == ("k", "v")
+    assert default_adapter(reduced("minicpm3-4b")).streams == ("c", "kr")
+    assert default_adapter(reduced("mamba2-780m")) is None
+    assert default_adapter(reduced("zamba2-2.7b")).streams == ("k", "v")
+
+
+# --------------------------------------------------------------------------
+# Sampling
+# --------------------------------------------------------------------------
+
+def test_sampling_greedy_and_top_k_support():
+    logits = jnp.asarray([[0.0, 3.0, 1.0, 2.0]] * 2)
+    out = sample_tokens(logits, jnp.zeros(2), jnp.zeros(2, jnp.int32),
+                        jax.random.key(0), jnp.arange(2, dtype=jnp.int32))
+    assert out.tolist() == [1, 1]
+    # top_k=2 restricts support to argsort-top ids {1, 3}
+    temps = jnp.ones(2) * 5.0
+    topk = jnp.full(2, 2, jnp.int32)
+    for seed in range(6):
+        out = sample_tokens(logits, temps, topk, jax.random.key(seed),
+                            jnp.arange(2, dtype=jnp.int32))
+        assert set(out.tolist()) <= {1, 3}
+
+
+def test_sampling_seeded_determinism():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+    temps = jnp.ones(4)
+    topk = jnp.full(4, 8, jnp.int32)
+    seeds = jnp.arange(4, dtype=jnp.int32)
+    a = sample_tokens(logits, temps, topk, jax.random.key(7), seeds)
+    b = sample_tokens(logits, temps, topk, jax.random.key(7), seeds)
+    assert a.tolist() == b.tolist()
+    # different base keys must change at least one draw across a few tries
+    others = [sample_tokens(logits, temps, topk, jax.random.key(k), seeds)
+              for k in range(8, 13)]
+    assert any(o.tolist() != a.tolist() for o in others)
+    # and different per-slot offsets (token indices) re-key the draw too
+    offs = sample_tokens(logits, temps, topk, jax.random.key(7), seeds,
+                         jnp.full(4, 3, jnp.int32))
+    others_off = [sample_tokens(logits, temps, topk, jax.random.key(7), seeds,
+                                jnp.full(4, o, jnp.int32))
+                  for o in range(1, 6)]
+    assert any(o.tolist() != a.tolist() for o in others_off + [offs])
+
+
+# --------------------------------------------------------------------------
+# End-to-end engine
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_served():
+    cfg = reduced("qwen3-0.6b", remat=False)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(1), (4, 16), 0, cfg.vocab_size), np.int32)
+    return cfg, model, params, prompts
+
+
+def _run_engine(model, params, prompts, gen=8, **cfg_kw):
+    eng = Engine(model, params, EngineConfig(**cfg_kw))
+    for i, p in enumerate(prompts):
+        eng.submit(p, gen, seed=i)
+    finished = eng.drain()
+    assert len(finished) == len(prompts)
+    return eng, np.asarray(
+        [r.generated for r in sorted(finished, key=lambda r: r.rid)])
+
+
+def test_engine_matches_static_greedy_bf16(tiny_served):
+    """Continuous batching (2 slots, 4 requests -> slot reuse + queueing)
+    reproduces the static-batch greedy generation token-for-token."""
+    from repro.launch.serve import generate
+
+    cfg, model, params, prompts = tiny_served
+    static = np.asarray(generate(model, params, jnp.asarray(prompts), 8,
+                                 "bf16"))
+    eng, out = _run_engine(model, params, prompts, n_slots=2, max_len=24,
+                           kv_cache="bf16", quant_mode="bf16")
+    np.testing.assert_array_equal(out, static)
+    assert eng.metrics.summary()["requests"] == 4.0
+
+
+def test_engine_fp4_centered_cache_e2e(tiny_served):
+    cfg, model, params, prompts = tiny_served
+    eng, out = _run_engine(model, params, prompts, n_slots=2, max_len=32,
+                           kv_cache="fp4-centered", page_size=16,
+                           quant_mode="bf16")
+    assert out.shape == (4, 8)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
+    summ = eng.metrics.summary()
+    dense_bpt = (dense_gqa_adapter(cfg).bytes_per_token() * cfg.num_layers)
+    assert summ["cache_bytes_per_token"] < 0.35 * dense_bpt
+
+
+def test_engine_staggered_groups_and_eos(tiny_served):
+    cfg, model, params, prompts = tiny_served
+    eng = Engine(model, params, EngineConfig(
+        n_slots=2, max_len=32, kv_cache="bf16", quant_mode="bf16"))
+    eng.submit(prompts[0], 8, seed=0)
+    eng.submit(prompts[1], 8, seed=1)
+    for _ in range(3):
+        eng.step()
+    # second staggered group joins mid-flight
+    eng.submit(prompts[2], 4, seed=2)
+    eng.submit(prompts[3], 4, seed=3)
+    finished = eng.drain()
+    assert sorted(len(r.generated) for r in finished) == [4, 4, 8, 8]
+    assert all(r.finish_reason == "length" for r in finished)
+    # eos retirement
+    eng2 = Engine(model, params, EngineConfig(
+        n_slots=1, max_len=32, kv_cache="bf16", quant_mode="bf16"))
+    eng2.submit(prompts[0], 8, seed=0, eos_id=-1)   # unreachable eos
+    (r,) = eng2.drain()
+    assert r.finish_reason == "length"
+
+
+def test_engine_sampled_determinism(tiny_served):
+    """Same (engine seed, request seed) => same generation — including when
+    the second request is admitted later: sampling keys depend only on the
+    request seed and its own token index, not on admission timing."""
+    cfg, model, params, prompts = tiny_served
+    kw = dict(n_slots=2, max_len=24, kv_cache="bf16", quant_mode="bf16",
+              seed=11)
+    outs = []
+    for stagger in (0, 0, 2):
+        eng = Engine(model, params, EngineConfig(**kw))
+        eng.submit(prompts[0], 6, temperature=0.9, top_k=16, seed=100)
+        for _ in range(stagger):
+            eng.step()
+        eng.submit(prompts[1], 6, temperature=0.9, top_k=16, seed=101)
+        fin = sorted(eng.drain(), key=lambda r: r.rid)
+        outs.append([r.generated for r in fin])
+    assert outs[0] == outs[1]          # exact replay
+    assert outs[0] == outs[2]          # admission-timing invariance
+
+
+def test_engine_rejects_oversized_and_ssm():
+    cfg = reduced("qwen3-0.6b", remat=False)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = Engine(model, params, EngineConfig(n_slots=1, max_len=16,
+                                             kv_cache="bf16"))
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(12, np.int32), 8)     # 12 + 8 > 16
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(4, np.int32), 0)      # max_new_tokens < 1
+    ssm_cfg = reduced("mamba2-780m", remat=False)
+    with pytest.raises(NotImplementedError):
+        Engine(Model(ssm_cfg), None, EngineConfig())
+    with pytest.raises(NotImplementedError):
+        make_adapter(ssm_cfg, "fp4-centered")
+    vlm_cfg = reduced("qwen2-vl-7b", remat=False)  # embedding-input decoder
+    with pytest.raises(NotImplementedError):
+        Engine(Model(vlm_cfg), None, EngineConfig())
