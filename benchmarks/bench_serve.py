@@ -1,14 +1,19 @@
 """Serving-engine benchmark: decode throughput and cache bytes/token for the
-bf16, fp4, and fp4-centered KV-cache modes on the reduced paper config.
+bf16, fp4, and fp4-centered KV-cache modes on the reduced paper config, plus
+a shared-system-prompt workload comparing the prefix page cache on/off.
 
 Rows (name,us_per_call,derived):
   serve_<kind>            mean decode-step latency; derived tok_s=..
   serve_cache_<kind>      cache bytes/token (all layers); derived ratio vs bf16
+  serve_prefix_off_<kind> prefill tokens computed without the prefix cache
+  serve_prefix_on_<kind>  ditto with it; derived hit_rate=..;compiles=..;
+                          static_agree=.. (greedy tokens vs the --static path)
 """
 from __future__ import annotations
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 
 from .common import emit
 
@@ -51,6 +56,58 @@ def run() -> None:
         ratio = bpt / bytes_bf16
         emit(f"serve_cache_{kind}", 0.0,
              f"bytes_per_token={bpt:.1f};vs_bf16={ratio:.3f}")
+
+    _run_prefix_workload(cfg, model, params)
+
+
+def _run_prefix_workload(cfg, model, params) -> None:
+    """Shared system prompt + distinct user tails: the prefix cache must
+    report hit-rate > 0, compute strictly fewer prefill tokens, and keep
+    greedy outputs token-identical to the --static reference."""
+    from repro.launch.serve import generate
+    from repro.serve import Engine, EngineConfig
+
+    rng = np.random.default_rng(7)
+    page = 16
+    system = rng.integers(0, cfg.vocab_size, 3 * page).astype(np.int32)
+    tails = [rng.integers(0, cfg.vocab_size, t).astype(np.int32)
+             for t in (7, 19, 11, 25)]
+    prompts = [np.concatenate([system, t]) for t in tails]
+    gen = 8
+
+    # --static greedy reference, one run per distinct prompt length
+    static = {}
+    for p in prompts:
+        out = generate(model, params, jnp.asarray(p)[None, :], gen, "bf16")
+        static[len(p)] = np.asarray(out)[0].tolist()
+
+    for kind in ("bf16", "fp4-centered"):
+        results = {}
+        for prefix in (False, True):
+            eng = Engine(model, params, EngineConfig(
+                n_slots=2, max_len=128, kv_cache=kind, page_size=page,
+                quant_mode="bf16", prefill_chunk=32, prefix_cache=prefix))
+            for i, p in enumerate(prompts):
+                eng.submit(p, gen, seed=i)
+            fin = sorted(eng.drain(), key=lambda r: r.rid)
+            results[prefix] = (eng.metrics.summary(), fin)
+        (s_off, _), (s_on, fin_on) = results[False], results[True]
+        agree = float(np.mean([
+            r.generated == static[r.prompt_len] for r in fin_on]))
+        emit(f"serve_prefix_off_{kind}",
+             float(s_off["prefill_tokens_computed"]),
+             f"prefill_tokens={int(s_off['prefill_tokens_computed'])}")
+        emit(f"serve_prefix_on_{kind}",
+             float(s_on["prefill_tokens_computed"]),
+             f"prefill_tokens={int(s_on['prefill_tokens_computed'])};"
+             f"hit_rate={s_on['prefix_hit_rate']:.2f};"
+             f"compiles={int(s_on['compile_count'])};"
+             f"static_agree={agree:.2f}")
+        assert s_on["prefix_hit_rate"] > 0.0
+        assert (s_on["prefill_tokens_computed"]
+                < s_off["prefill_tokens_computed"])
+        if kind == "bf16":
+            assert agree == 1.0, "greedy outputs diverged from --static"
 
 
 if __name__ == "__main__":

@@ -2,10 +2,13 @@
 ``--static``. All weight GeMMs run under the selected FP4 recipe (the paper's
 "NVFP4 forward evaluation" deployment mode); the KV cache is dense bf16 or
 paged mean-centered NVFP4 (``--kv-cache fp4-centered``, see repro.serve).
+Prompts prefill in bucketed chunks interleaved with decode
+(``--prefill-chunk``/``--prefill-budget``); ``--prefix-cache`` shares
+committed KV pages across requests with equal page-aligned prompt prefixes.
 
     # continuous batching over staggered request groups, FP4 KV cache
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
-        --kv-cache fp4-centered
+        --kv-cache fp4-centered --prefill-chunk 32 --prefix-cache
 
     # legacy fixed-shape batch path
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
@@ -94,6 +97,9 @@ def run_engine(args) -> None:
     eng = Engine(model, params, EngineConfig(
         n_slots=args.slots, max_len=max_len, kv_cache=args.kv_cache,
         page_size=args.page_size, quant_mode=args.quant, seed=args.seed,
+        prefill_chunk=args.prefill_chunk,
+        prefill_token_budget=args.prefill_budget,
+        prefix_cache=args.prefix_cache,
     ))
     tokens = np.asarray(_prompts(args, cfg, args.requests))
 
@@ -124,6 +130,11 @@ def run_engine(args) -> None:
           f"occupancy {summ['mean_occupancy']:.2f}")
     print(f"kv-cache bytes/token (all layers): "
           f"{summ['cache_bytes_per_token']:.0f}")
+    print(f"prefill tokens computed {int(summ['prefill_tokens_computed'])} "
+          f"(padded {int(summ['prefill_tokens_padded'])}), "
+          f"prefix hit-rate {summ['prefix_hit_rate']:.2f} "
+          f"({int(summ['prefix_hit_tokens'])} tokens reused), "
+          f"prefill compiles {int(summ['compile_count'])}")
     by_rid = sorted(finished, key=lambda r: r.rid)
     print("sample:", by_rid[0].generated[:12])
 
@@ -147,6 +158,15 @@ def main() -> None:
     ap.add_argument("--kv-cache", default="bf16",
                     choices=["bf16", "fp4", "fp4-centered"])
     ap.add_argument("--page-size", type=int, default=64)
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="chunked-prefill chunk size (jit shapes come from "
+                         "the power-of-two bucket grid up to this size)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="prompt tokens prefilled per engine step "
+                         "(0 = one chunk per step)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="reuse committed KV pages across requests that "
+                         "share a page-aligned prompt prefix")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=0,
                     help="cache horizon (0 = prompt+gen)")

@@ -132,13 +132,22 @@ def gqa_apply(
     cache: Optional[Dict[str, jax.Array]] = None,
     decode_pos: Optional[jax.Array] = None,   # (b,) write index when decoding
     adapter=None,                             # cache adapter (decode only)
+    chunk_valid: Optional[jax.Array] = None,  # scalar: valid chunk tokens
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Returns (output (b,s,d), new_cache_or_None).
 
     Modes: train (cache=None), prefill (cache=None but caller keeps k/v via
-    gqa_prefill), decode (cache given, s==1, decode_pos given). In decode the
-    cache write + attendable read go through ``adapter`` (see models/cache.py)
-    so dense bf16 and quantized paged layouts share this code path.
+    gqa_prefill), decode (cache given, s==1, decode_pos given), chunked
+    prefill (cache given, chunk_valid given). In decode the cache write +
+    attendable read go through ``adapter`` (see models/cache.py) so dense
+    bf16 and quantized paged layouts share this code path. In chunked
+    prefill the cache is a *dense per-request context buffer* whose slot j
+    holds the K/V of absolute token j: the chunk's K/V rows are written at
+    their absolute positions (zeros past ``chunk_valid``, so the buffer
+    stays clean for later chunks and the final paged insert), then the
+    chunk queries attend over the whole buffer under plain causal masking
+    — buffer slots at or past the chunk end hold zeros whose positions are
+    causally masked for every valid query.
     """
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -157,6 +166,20 @@ def gqa_apply(
         out = attention_core(q, k, v, qpos, kpos, cfg.causal,
                              softmax_dtype=smd)
         new_cache = {"k": k, "v": v}
+    elif chunk_valid is not None:
+        # Chunked prefill over the dense context buffer (b, cap, n_kv, hd).
+        qpos = positions if positions.ndim == 2 else positions[:, 0, :]
+        cap = cache["k"].shape[1]
+        keep = (jnp.arange(s) < chunk_valid)[None, :, None, None]
+        kw = jnp.where(keep, k, 0).astype(cache["k"].dtype)
+        vw = jnp.where(keep, v, 0).astype(cache["v"].dtype)
+        bidx = jnp.arange(b)[:, None]
+        span = qpos                                  # (b, s) absolute slots
+        ck = cache["k"].at[bidx, span].set(kw, mode="drop")
+        cv = cache["v"].at[bidx, span].set(vw, mode="drop")
+        new_cache = {"k": ck, "v": cv}
+        out = attention_core(q, ck, cv, qpos, jnp.arange(cap), causal=True,
+                             softmax_dtype=smd)
     else:
         assert s == 1 and decode_pos is not None
         if adapter is None:

@@ -22,9 +22,14 @@ Adapter protocol (duck-typed; all shapes static except array data):
   update(cache, toks, pos)        -> ((dense per stream, ...), new_cache)
         toks: one (b, *feat) array per stream; pos: (b,) write positions.
         Returns dense attendable views of length capacity.
-  insert(caches, prefill, slot, length) -> caches
-        prefill: {stream: (L, 1, length, *feat)} from ``Model.prefill``;
-        slot/length are host ints (each request is placed individually).
+  insert_from_buffer(caches, buf, slot, length) -> caches
+        buf: {stream: (L, 1, B, *feat)} prefill context, valid in
+        [0, length); slot/length may be traced scalars, so jit shapes
+        depend only on B (the serving engine's bucket-grid compile fix).
+  prefill_buffer(num_layers, max_len) -> zeroed chunked-prefill buffer
+
+Prefix-cache hooks (extract/write/load page payloads) ride along on the
+same adapters — see the serving engine (``repro.serve.engine``).
 """
 from __future__ import annotations
 
@@ -75,14 +80,53 @@ class DenseCacheAdapter:
         }
         return tuple(new[name] for name in self.streams), new
 
-    def insert(self, caches, prefill, slot: int, length: int):
+    # ------------------------------------------------- chunked/bucketed path
+    def prefill_buffer(self, num_layers: int, max_len: int):
+        """Zeroed dense context buffer for one request's chunked prefill."""
+        return self.blank(num_layers, 1, self.capacity(max_len))
+
+    def insert_from_buffer(self, caches, buf, slot, length):
+        """Masked insert of a (possibly bucket-padded) prefill buffer.
+
+        ``buf``: {stream: (L, 1, B, *feat)} with valid data in [0, length);
+        ``slot`` and ``length`` may be traced scalars — jit shapes depend
+        only on B, not on the prompt length (the bucket-grid compile fix).
+        """
         out = dict(caches)
         for name in self.streams:
             c = caches[name]
+            src = buf[name][:, 0].astype(c.dtype)
+            m = min(src.shape[1], c.shape[2])
+            mask = (jnp.arange(m) < length).reshape(
+                (1, m) + (1,) * (src.ndim - 2))
             row = jnp.zeros((c.shape[0],) + c.shape[2:], c.dtype)
-            row = row.at[:, :length].set(prefill[name][:, 0].astype(c.dtype))
+            row = row.at[:, :m].set(jnp.where(mask, src[:, :m], 0))
             out[name] = c.at[:, slot].set(row)
         return out
+
+    # ------------------------------------------------- prefix-page hooks
+    # A "page" of a dense cache is a span of ``page_size`` consecutive
+    # tokens; payloads are plain K/V slices, so sharing them across slots
+    # skips the prefill FLOPs (there is no re-quantization to skip).
+    def extract_page_payload(self, caches, slot: int, page_idx: int,
+                             page_size: int):
+        lo = page_idx * page_size
+        return {name: caches[name][:, slot, lo:lo + page_size]
+                for name in self.streams}
+
+    def write_page_payload(self, caches, slot, start, payload):
+        """Write one page payload at token offset ``start`` (traced ok)."""
+        out = dict(caches)
+        for name in self.streams:
+            c = caches[name]
+            pl = payload[name].astype(c.dtype)[:, None]      # (L, 1, P, *feat)
+            idx = (jnp.int32(0), slot, start) + (0,) * (pl.ndim - 3)
+            out[name] = jax.lax.dynamic_update_slice(c, pl, idx)
+        return out
+
+    def payload_to_dense(self, payload):
+        """Dense {stream: (L, P, *feat)} view of a page payload (identity)."""
+        return dict(payload)
 
     def bytes_per_token(self) -> float:
         """Marginal cache storage per cached token (one layer)."""

@@ -118,9 +118,10 @@ class Model:
         x: jax.Array,
         positions: jax.Array,
         ctx: QuantCtx,
-        mode: str,                       # train | prefill | decode
+        mode: str,                       # train | prefill | decode | chunk
         caches: Optional[Dict] = None,   # stacked (L,...) / hybrid dict
         decode_pos: Optional[jax.Array] = None,
+        chunk_valid: Optional[jax.Array] = None,
     ):
         cfg = self.cfg
         if cfg.family == "ssm":
@@ -129,16 +130,17 @@ class Model:
             return self._run_hybrid(params, x, positions, ctx, mode, caches,
                                     decode_pos)
         return self._run_attn(params, x, positions, ctx, mode, caches,
-                              decode_pos)
+                              decode_pos, chunk_valid)
 
-    def _run_attn(self, params, x, positions, ctx, mode, caches, decode_pos):
+    def _run_attn(self, params, x, positions, ctx, mode, caches, decode_pos,
+                  chunk_valid=None):
         cfg = self.cfg
 
         def layer(x, p_l, cache_l, idx):
             lctx = QuantCtx(ctx.cfg, jax.random.fold_in(ctx.key, idx))
             return attn_ffn_block_apply(
                 p_l, x, positions, lctx, cfg, cache_l, decode_pos,
-                self.adapter,
+                self.adapter, chunk_valid,
             )
 
         if mode == "train":
@@ -309,6 +311,55 @@ class Model:
         x, caches, _ = self._run_stack(params, x, positions, ctx, mode="prefill")
         logits = self._lm_head(params, x[:, -1:, :], ctx)
         return logits, caches
+
+    def prefill_padded(self, params, batch, valid, ctx: QuantCtx):
+        """Prefill over bucket-padded tokens; logits taken at ``valid - 1``.
+
+        ``valid`` (scalar int32, may be traced) counts real prompt tokens;
+        the rest of the batch's time axis is padding whose keys are causally
+        invisible to valid queries (padding sits at later positions). Caches
+        cover the padded span — the caller masks them down to ``valid`` when
+        inserting into slot storage. One jit per bucket size instead of one
+        per distinct prompt length.
+        """
+        x, positions = self._embed_inputs(params, batch)
+        x, caches, _ = self._run_stack(params, x, positions, ctx, mode="prefill")
+        x_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
+        logits = self._lm_head(params, x_last, ctx)
+        return logits, caches
+
+    def prefill_chunk(self, params, batch, start, valid, ctx_caches,
+                      ctx: QuantCtx):
+        """One chunk of an incremental prefill (GQA attention families only).
+
+        ``batch["tokens"]``: (b, B) bucket-padded chunk; ``start`` (scalar)
+        is the chunk's absolute offset in the prompt; ``valid`` (scalar) the
+        number of real tokens in the chunk; ``ctx_caches`` the stacked dense
+        context buffers {"k","v"}: (L, b, cap, n_kv, hd) holding tokens
+        [0, start). Returns (logits at the chunk's last valid position,
+        updated buffers). All shapes are fixed by (B, cap): jit compiles
+        once per chunk bucket, never per prompt length.
+        """
+        cfg = self.cfg
+        if cfg.family in ("ssm", "hybrid") or cfg.attention != "gqa":
+            raise NotImplementedError(
+                f"chunked prefill requires a GQA attention stack; {cfg.name} "
+                f"is family={cfg.family}/attention={cfg.attention}")
+        if cfg.rope_type == "mrope":
+            raise NotImplementedError("chunked prefill: mrope positions are "
+                                      "prompt-global; use whole-prompt prefill")
+        x, _ = self._embed_inputs(params, batch)
+        b, s = x.shape[:2]
+        positions = (jnp.asarray(start, jnp.int32)
+                     + jnp.arange(s, dtype=jnp.int32))[None, :]
+        positions = jnp.broadcast_to(positions, (b, s))
+        x, new_caches, _ = self._run_stack(
+            params, x, positions, ctx, mode="chunk", caches=ctx_caches,
+            chunk_valid=valid,
+        )
+        x_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
+        logits = self._lm_head(params, x_last, ctx)
+        return logits, new_caches
 
     def decode_step(self, params, inputs, pos, caches, ctx: QuantCtx):
         """One decode step. inputs: {"token": (b,)} or {"embedding": (b,1,d)};

@@ -65,15 +65,17 @@ def attn_ffn_block_apply(
     cache: Optional[Dict] = None,
     decode_pos: Optional[jax.Array] = None,
     adapter=None,
+    chunk_valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
     """Pre-norm attention + FFN/MoE block. Returns (x, new_cache, aux)."""
     h = rms_norm(x, p["ln1"])
     if cfg.attention == "mla":
+        assert chunk_valid is None, "chunked prefill is GQA-only"
         a, new_cache = mla_apply(p["attn"], h, positions, ctx.child(1), cfg,
                                  cache, decode_pos, adapter)
     else:
         a, new_cache = gqa_apply(p["attn"], h, positions, ctx.child(1), cfg,
-                                 cache, decode_pos, adapter)
+                                 cache, decode_pos, adapter, chunk_valid)
     x = x + a
     h = rms_norm(x, p["ln2"])
     if "moe" in p:

@@ -7,13 +7,19 @@ Public surface::
     rid = eng.submit(prompt, max_new_tokens=32, temperature=0.8, top_k=40)
     finished = eng.drain()
 """
-from .engine import Engine, EngineConfig
-from .kvcache import QuantizedKVAdapter, make_adapter
+from .engine import Engine, EngineConfig, chunk_buckets
+from .kvcache import (
+    PagePool,
+    QuantizedKVAdapter,
+    make_adapter,
+    prefix_page_keys,
+)
 from .metrics import ServeMetrics
 from .sampling import sample_tokens
 from .scheduler import QueueFull, Request, Scheduler
 
 __all__ = [
-    "Engine", "EngineConfig", "QuantizedKVAdapter", "make_adapter",
+    "Engine", "EngineConfig", "chunk_buckets", "PagePool",
+    "QuantizedKVAdapter", "make_adapter", "prefix_page_keys",
     "ServeMetrics", "sample_tokens", "QueueFull", "Request", "Scheduler",
 ]

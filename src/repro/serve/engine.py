@@ -2,26 +2,45 @@
 
 One engine owns a fixed batch of decode slots over a slotted KV cache
 (dense bf16 or paged mean-centered NVFP4 — see ``kvcache.py``). Each
-``step()`` interleaves prefill and decode:
+``step()`` interleaves *chunked prefill* with decode:
 
-  1. *admission*: waiting requests are placed into free slots (FIFO, at most
-     ``max_prefills_per_step`` per step). Each admitted request is prefilled
-     at its natural prompt length (a per-length jit cache), its K/V inserted
-     into the slot, and its first token sampled from the prefill logits.
-  2. *decode*: one fused jitted step advances every active slot — embed the
-     slot's last token, attend over its slot cache at its own position, and
-     sample the next token with per-slot temperature/top-k/seed.
+  1. *prefill*: up to ``prefill_token_budget`` prompt tokens are streamed
+     through fixed-size, length-bucketed chunk jits — admitted requests hold
+     a slot in the scheduler's ``prefill`` phase and accumulate exact K/V in
+     a dense per-request context buffer across steps, so a long prompt never
+     stalls decode for its full length and jit shapes come from a small
+     bucket grid (no per-prompt-length recompiles). When the prompt
+     completes, the buffer is inserted into the slot cache (quantized modes
+     commit full pages once, from exact values), the first token is sampled
+     from the last prompt position, and the slot joins the decode batch.
+  2. *decode*: one fused jitted step advances every decode-phase slot —
+     embed the slot's last token, attend over its slot cache at its own
+     position, and sample the next token with per-slot temperature/top-k/
+     seed.
+
+With ``prefix_cache`` enabled, committed KV pages are content-addressed by
+chained (prompt-prefix, page-index) hashes in a ref-counted :class:`PagePool`
+(``kvcache.py``): an admitted request whose page-aligned prefix matches a
+pooled page reuses the payload verbatim — skipping both the prefill FLOPs and
+(for FP4 modes) the re-quantization — while divergent continuations write
+their own tails and commit fresh pages (copy-on-write at page granularity).
 
 Requests retire on EOS, on reaching ``max_new_tokens``, or at cache
-capacity; their slots return to the free list for the next admission.
+capacity; their slots return to the free list and their pinned pool pages
+are released.
 
 All jitted shapes are fixed by (n_slots, max_len) except prefill, which
-compiles once per distinct prompt length.
+compiles once per chunk bucket (GQA chunked path; the non-GQA whole-prompt
+fallback pads to a power-of-two grid instead — one compile per pow2 size
+used, log-bounded rather than grid-bounded) —
+``ServeMetrics.summary()['compile_count']`` tracks the distinct prefill
+shapes actually compiled.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -31,10 +50,40 @@ from repro.core.qgemm import recipe
 from repro.models.layers import QuantCtx
 from repro.models.model import Model
 
-from .kvcache import QuantizedKVAdapter, make_adapter
+from .kvcache import (
+    PagePool,
+    QuantizedKVAdapter,
+    make_adapter,
+    prefix_page_keys,
+)
 from .metrics import ServeMetrics
 from .sampling import sample_tokens
 from .scheduler import Request, Scheduler
+
+
+def chunk_buckets(chunk: int, min_bucket: int = 16) -> Tuple[int, ...]:
+    """Power-of-two bucket grid for chunk padding, capped at ``chunk``.
+
+    E.g. chunk=64 -> (16, 32, 64): a prompt's full chunks run at size 64 and
+    its remainder is padded up to the smallest covering bucket, so prefill
+    compiles at most ``len(chunk_buckets(chunk))`` distinct shapes no matter
+    how odd the prompt lengths are.
+    """
+    assert chunk >= 1
+    sizes = []
+    b = min(min_bucket, chunk)
+    while b < chunk:
+        sizes.append(b)
+        b *= 2
+    sizes.append(chunk)
+    return tuple(sizes)
+
+
+def _bucket_for(n: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if b >= n:
+            return b
+    return buckets[-1]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,11 +91,28 @@ class EngineConfig:
     n_slots: int = 4                 # fixed decode batch width
     max_len: int = 256               # per-slot cache horizon (prompt + gen)
     kv_cache: str = "bf16"           # bf16 | fp4 | fp4-centered
-    page_size: int = 64              # tokens per quantized cache page
+    page_size: int = 64              # tokens per cache page (quantized
+                                     # payload granularity AND prefix-cache
+                                     # sharing granularity)
     quant_mode: str = "nvfp4"        # weight-GeMM recipe (core/qgemm)
-    max_prefills_per_step: int = 1   # admission budget per step
+    prefill_chunk: int = 64          # chunk size for incremental prefill
+    prefill_token_budget: int = 0    # prompt tokens per step (0 -> chunk)
+    prefix_cache: bool = False       # shared-prefix page reuse
+    prefix_cache_pages: int = 1024   # PagePool capacity (committed pages)
+    record_prefill_logits: bool = False   # keep last-prompt-position logits
+                                          # on each Request (tests/debug)
     max_waiting: int = 256           # waiting-queue backpressure bound
     seed: int = 0
+
+
+@dataclasses.dataclass
+class _PrefillState:
+    """Host-side progress of one partially-prefilled request."""
+    req: Request
+    slot: int
+    buf: Any                                   # dense context buffer (chunked)
+    acquired: List[Tuple[bytes, Any]]          # pinned (key, payload) hits
+    keys: List[bytes]                          # full-page keys of the prompt
 
 
 class Engine:
@@ -72,8 +138,16 @@ class Engine:
         self.params = params
         self.capacity = self.adapter.capacity(config.max_len)
 
+        # Chunked prefill needs the dense-context attention branch (GQA with
+        # position-local rope); MLA falls back to whole-prompt prefill padded
+        # to a power-of-two grid — still a bounded compile set.
+        self._chunked = cfg.attention == "gqa" and cfg.rope_type != "mrope"
+        self._buckets = chunk_buckets(config.prefill_chunk)
+        self._prefix_enabled = bool(config.prefix_cache) and self._chunked
+        self.pool = (PagePool(config.prefix_cache_pages)
+                     if self._prefix_enabled else None)
+
         self.scheduler = Scheduler(config.n_slots, config.max_waiting)
-        self.reset_metrics()
 
         b = config.n_slots
         self.caches = self.adapter.blank(cfg.num_layers, b, config.max_len)
@@ -91,13 +165,24 @@ class Engine:
         self._base_key = jax.random.key(config.seed)
         self._recipe = recipe(config.quant_mode)
 
-        self._prefill = jax.jit(self._prefill_impl)         # per-length cache
-        # Donate the cache tree: the engine rebinds self.caches to the output
-        # immediately, so XLA may update the (large) cache buffers in place
-        # instead of copying them every step. (No-op on backends without
-        # donation support, e.g. CPU.)
+        self._prefilling: "OrderedDict[int, _PrefillState]" = OrderedDict()
+        self._page_refs: Dict[int, List[bytes]] = {}   # slot -> pinned keys
+
+        # jit caches. Prefill compiles once per bucket (the per-prompt-length
+        # blowup fix); insert once per buffer time-size; decode/page ops once.
+        self._chunk_fns: Dict[int, Any] = {}
+        self._pad_prefill_fns: Dict[int, Any] = {}
+        self._insert_fns: Dict[int, Any] = {}
+        self._prefill_shapes = set()
+        # Donate the cache tree / context buffers: the engine rebinds them to
+        # the jit output immediately, so XLA may update the (large) buffers
+        # in place instead of copying them every step. (No-op on backends
+        # without donation support, e.g. CPU.)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
-        self._insert_fns: Dict[int, object] = {}            # per-length jits
+        self._write_page = jax.jit(self._write_page_impl, donate_argnums=(0,))
+        self._load_page = jax.jit(self._load_page_impl, donate_argnums=(0,))
+
+        self.reset_metrics()
 
     def reset_metrics(self) -> None:
         """Fresh metrics window (e.g. after a jit-compile warmup drain)."""
@@ -105,18 +190,31 @@ class Engine:
             cache_bytes_per_token=self.adapter.bytes_per_token(),
             num_layers=self.model.cfg.num_layers,
         )
+        self.metrics.prefill_compiles = len(self._prefill_shapes)
 
     # ------------------------------------------------------------------ jitted
     def _ctx(self, step_idx) -> QuantCtx:
         return QuantCtx(self._recipe,
                         jax.random.fold_in(self._base_key, step_idx))
 
-    def _prefill_impl(self, params, tokens, temp, topk, seed, step_idx):
+    def _chunk_impl(self, params, tokens, start, valid, buf, temp, topk,
+                    seed, step_idx):
         ctx = self._ctx(step_idx)
-        logits, caches = self.model.prefill(params, {"tokens": tokens}, ctx)
-        # token index 0 of the request; keys depend only on (seed, index)
-        first = sample_tokens(logits[:, -1], temp, topk, self._base_key, seed)
-        return first, caches
+        logits, buf = self.model.prefill_chunk(
+            params, {"tokens": tokens}, start, valid, buf, ctx)
+        # token index 0 of the request; keys depend only on (seed, index).
+        # Only the final chunk's sample is used (it sees the last prompt
+        # position's logits); earlier chunks' samples are discarded.
+        first = sample_tokens(logits[:, 0], temp, topk, self._base_key, seed)
+        return first, logits[:, 0], buf
+
+    def _pad_prefill_impl(self, params, tokens, valid, temp, topk, seed,
+                          step_idx):
+        ctx = self._ctx(step_idx)
+        logits, caches = self.model.prefill_padded(
+            params, {"tokens": tokens}, valid, ctx)
+        first = sample_tokens(logits[:, 0], temp, topk, self._base_key, seed)
+        return first, logits[:, 0], caches
 
     def _decode_impl(self, params, caches, tokens, pos, temps, topks, seeds,
                      gencnt, step_idx):
@@ -127,14 +225,33 @@ class Engine:
                             gencnt)
         return nxt, caches
 
-    def _insert(self, caches, prefill_caches, slot: int, length: int):
-        if length not in self._insert_fns:
+    def _write_page_impl(self, caches, slot, start, payload):
+        return self.adapter.write_page_payload(caches, slot, start, payload)
+
+    def _load_page_impl(self, buf, payload, start):
+        dense = self.adapter.payload_to_dense(payload)
+        out = dict(buf)
+        for name, page in dense.items():
+            page = page.astype(buf[name].dtype)[:, None]   # (L, 1, P, *feat)
+            idx = (0, 0, start) + (0,) * (page.ndim - 3)
+            out[name] = jax.lax.dynamic_update_slice(buf[name], page, idx)
+        return out
+
+    def _get_prefill_fn(self, fns, size: int, impl, donate=()):
+        if size not in fns:
+            fns[size] = jax.jit(impl, donate_argnums=donate)
+            self._prefill_shapes.add((impl.__name__, size))
+            self.metrics.prefill_compiles = len(self._prefill_shapes)
+        return fns[size]
+
+    def _get_insert_fn(self, tdim: int):
+        if tdim not in self._insert_fns:
             adapter = self.adapter
-            self._insert_fns[length] = jax.jit(
-                lambda c, pf, s: adapter.insert(c, pf, s, length),
+            self._insert_fns[tdim] = jax.jit(
+                lambda c, buf, slot, length:
+                    adapter.insert_from_buffer(c, buf, slot, length),
                 donate_argnums=(0,))
-        return self._insert_fns[length](caches, prefill_caches,
-                                        jnp.int32(slot))
+        return self._insert_fns[tdim]
 
     # ------------------------------------------------------------------ public
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
@@ -166,15 +283,19 @@ class Engine:
         return rid
 
     def step(self) -> List[Request]:
-        """Admit + prefill new requests, decode one token for active slots.
+        """Run one engine step: budgeted prefill chunks, then one decode.
 
         Returns the requests that finished during this step.
         """
         t_start = self.metrics.now()
         finished: List[Request] = []
 
-        for slot, req in self.scheduler.admit(self.config.max_prefills_per_step):
-            self._admit(slot, req, finished)
+        budget = self.config.prefill_token_budget or self.config.prefill_chunk
+        while budget > 0:
+            st = self._next_prefill()
+            if st is None:
+                break
+            budget -= self._prefill_chunk_step(st, budget, finished)
 
         n_active = int(self._active.sum())
         if n_active:
@@ -213,20 +334,125 @@ class Engine:
         return out
 
     # ------------------------------------------------------------------ intern
-    def _admit(self, slot: int, req: Request, finished: List[Request]):
+    def _next_prefill(self) -> Optional[_PrefillState]:
+        """The request whose prompt advances next (FIFO), admitting a
+        waiting request into a free slot when none is mid-prefill."""
+        slots = self.scheduler.prefill_slots()
+        if slots:
+            return self._prefilling[slots[0]]
+        placed = self.scheduler.admit(1)
+        if not placed:
+            return None
+        (slot, req), = placed
+        return self._begin_prefill(slot, req)
+
+    def _begin_prefill(self, slot: int, req: Request) -> _PrefillState:
+        p = self.config.page_size
+        buf = (self.model.adapter.prefill_buffer(self.model.cfg.num_layers,
+                                                 self.config.max_len)
+               if self._chunked else None)
+        keys: List[bytes] = []
+        acquired: List[Tuple[bytes, Any]] = []
+        if self._prefix_enabled:
+            keys = prefix_page_keys(req.prompt, p)
+            # Leave at least one prompt token to compute: the first generated
+            # token is sampled from the last prompt position's logits.
+            reusable = (req.prompt_len - 1) // p
+            for key in keys[:reusable]:
+                payload = self.pool.acquire(key)
+                if payload is None:
+                    break
+                acquired.append((key, payload))
+            for i, (_, payload) in enumerate(acquired):
+                buf = self._load_page(buf, payload, jnp.int32(i * p))
+            req.prefill_pos = len(acquired) * p
+            req.prefix_hit_tokens = req.prefill_pos
+            self.metrics.record_prefix_lookup(len(acquired), reusable, p)
+        st = _PrefillState(req=req, slot=slot, buf=buf, acquired=acquired,
+                           keys=keys)
+        self._prefilling[slot] = st
+        return st
+
+    def _prefill_chunk_step(self, st: _PrefillState, budget: int,
+                            finished: List[Request]) -> int:
+        """Advance one request's prefill by one chunk; returns tokens used.
+
+        The chunk is clipped to ``budget`` (jit shapes still come from the
+        bucket grid — only the valid-token count shrinks), so the per-step
+        token budget is honored even below ``prefill_chunk``. The non-GQA
+        whole-prompt fallback cannot split and may overshoot the budget by
+        up to the prompt length."""
+        req = st.req
         s = req.prompt_len
-        tokens = jnp.asarray(req.prompt)[None, :]
-        first, pcaches = self._prefill(
-            self.params, tokens,
-            jnp.full((1,), req.temperature, jnp.float32),
-            jnp.full((1,), req.top_k, jnp.int32),
-            jnp.full((1,), req.seed, jnp.int32),
-            self._step_idx,
-        )
-        self.caches = self._insert(self.caches, pcaches, slot, s)
+        temp = jnp.full((1,), req.temperature, jnp.float32)
+        topk = jnp.full((1,), req.top_k, jnp.int32)
+        seed = jnp.full((1,), req.seed, jnp.int32)
+
+        if self._chunked:
+            take = min(self.config.prefill_chunk, budget,
+                       s - req.prefill_pos)
+            bucket = _bucket_for(take, self._buckets)
+            tokens = np.zeros((1, bucket), np.int32)
+            tokens[0, :take] = req.prompt[req.prefill_pos:req.prefill_pos + take]
+            fn = self._get_prefill_fn(self._chunk_fns, bucket,
+                                      self._chunk_impl, donate=(4,))
+            first, logits, st.buf = fn(
+                self.params, jnp.asarray(tokens),
+                jnp.int32(req.prefill_pos), jnp.int32(take), st.buf,
+                temp, topk, seed, self._step_idx)
+            req.prefill_pos += take
+            self.metrics.record_prefill_chunk(take, bucket)
+            if req.prefilled:
+                self._finalize_prefill(st, st.buf, first, logits, finished)
+            return take
+
+        # Whole-prompt fallback (non-GQA attention): one padded prefill.
+        bucket = _bucket_for(s, self._buckets)
+        while bucket < s:
+            bucket *= 2
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :s] = req.prompt
+        fn = self._get_prefill_fn(self._pad_prefill_fns, bucket,
+                                  self._pad_prefill_impl)
+        first, logits, pcaches = fn(self.params, jnp.asarray(tokens),
+                                    jnp.int32(s), temp, topk, seed,
+                                    self._step_idx)
+        req.prefill_pos = s
+        self.metrics.record_prefill_chunk(s, bucket)
+        self._finalize_prefill(st, pcaches, first, logits, finished)
+        return s
+
+    def _finalize_prefill(self, st: _PrefillState, buf, first, logits,
+                          finished: List[Request]) -> None:
+        """Insert the completed prompt into the slot cache, restore shared
+        page payloads, publish fresh pages, and start decoding."""
+        slot, req = st.slot, st.req
+        s = req.prompt_len
+        p = self.config.page_size
+        tdim = next(iter(buf.values())).shape[2]
+        self.caches = self._get_insert_fn(tdim)(
+            self.caches, buf, jnp.int32(slot), jnp.int32(s))
+
+        quantized = isinstance(self.adapter, QuantizedKVAdapter)
+        if quantized:
+            # The buffer's prefix-hit spans hold *dequantized* values whose
+            # re-encode may differ bitwise; restore the original payloads so
+            # a shared page is byte-identical in every slot that maps it.
+            for i, (_, payload) in enumerate(st.acquired):
+                self.caches = self._write_page(
+                    self.caches, jnp.int32(slot), jnp.int32(i * p), payload)
+        if self._prefix_enabled:
+            for i in range(len(st.acquired), s // p):
+                payload = self.adapter.extract_page_payload(
+                    self.caches, slot, i, p)
+                self.pool.publish(st.keys[i], payload)
+            self._page_refs[slot] = [key for key, _ in st.acquired]
+
         tok = int(jax.block_until_ready(first)[0])
         req.first_token_time = self.metrics.now()
         req.generated.append(tok)
+        if self.config.record_prefill_logits:
+            req.prefill_logits = np.asarray(logits[0], np.float32)
 
         self._tokens[slot] = tok
         self._pos[slot] = s
@@ -235,6 +461,8 @@ class Engine:
         self._topks[slot] = req.top_k
         self._seeds[slot] = req.seed
         self._gencnt[slot] = 1    # the prefill-sampled token was index 0
+        del self._prefilling[slot]
+        self.scheduler.begin_decode(slot)
         self._maybe_finish(slot, req, tok, finished)
 
     def _maybe_finish(self, slot: int, req: Request, tok: int,
@@ -255,6 +483,9 @@ class Engine:
             self._temps[slot] = 0.0
             self._topks[slot] = 0
             self._gencnt[slot] = 0
+            if self.pool is not None:
+                for key in self._page_refs.pop(slot, []):
+                    self.pool.release(key)
             self.scheduler.retire(slot)
             self.metrics.record_finished(req)
             finished.append(req)

@@ -28,8 +28,10 @@ when centered) vs 2 B/elem for bf16 — ~0.28-0.30x.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Any, Dict, Optional, Tuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -241,31 +243,88 @@ class QuantizedKVAdapter:
         dense = dense.at[bidx[:, None], span].set(tail)
         return (dense[:, :, 0], dense[:, :, 1]), new
 
-    def insert(self, caches, prefill, slot, length: int):
-        """Place one request's prefill K/V into ``slot`` (stacked L leaves)."""
+    def prefill_buffer(self, num_layers: int, max_len: int):
+        """Zeroed *dense bf16* context buffer for one request's chunked
+        prefill. Chunks accumulate exact K/V here; pages are quantized once,
+        at insert time — chunking never changes the committed payloads."""
+        cap = self.capacity(max_len)
+        shape = (num_layers, 1, cap, self.num_kv_heads, self.head_dim)
+        return {"k": jnp.zeros(shape, self.dtype),
+                "v": jnp.zeros(shape, self.dtype)}
+
+    def insert_from_buffer(self, caches, buf, slot, length):
+        """Quantize + place a request's dense prefill buffer into ``slot``.
+
+        ``buf``: {"k","v"}: (L, 1, cap, n_kv, hd) exact values in
+        [0, length); ``slot``/``length`` may be traced scalars, so one jit
+        covers every prompt length (full pages are committed by masking,
+        the boundary page lands in the bf16 tail).
+        """
         p = self.page_size
-        kv = jnp.stack([prefill["k"][:, 0], prefill["v"][:, 0]], axis=2)
-        kv = kv.astype(self.dtype)                                 # (L,s,2,n,hd)
-        nl = kv.shape[0]
+        kv = jnp.stack([buf["k"][:, 0], buf["v"][:, 0]], axis=2)
+        kv = kv.astype(self.dtype)                         # (L, cap, 2, n, hd)
+        nl, cap = kv.shape[0], kv.shape[1]
+        npg = cap // p
+        assert npg == caches["codes"].shape[2] and cap == npg * p, (
+            f"prefill buffer time-dim {cap} must equal the slot capacity "
+            f"{caches['codes'].shape[2] * p} (quantized inserts take the "
+            f"full-capacity chunked-prefill buffer, not a bucket-padded one)")
+        kvp = kv.reshape((nl, npg, p) + kv.shape[2:])
+        codes, scales, pamax, mu = encode_pages(
+            kvp, centered=self.centered, block_size=self.block_size)
         n_full = length // p
+
+        def mask_pages(a):
+            pv = (jnp.arange(npg) < n_full).reshape(
+                (1, npg) + (1,) * (a.ndim - 2))
+            return jnp.where(pv, a, jnp.zeros_like(a))
+
+        rows = {"codes": mask_pages(codes), "scales": mask_pages(scales),
+                "pamax": mask_pages(pamax)}
+        if self.centered:
+            rows["mean"] = mask_pages(mu.astype(self.dtype))
+        tail_kv = jnp.take(kvp, jnp.clip(n_full, 0, npg - 1), axis=1)
         rem = length - n_full * p
-
-        rows = {k: jnp.zeros((a.shape[0],) + a.shape[2:], a.dtype)
-                for k, a in caches.items()}
-        if n_full:
-            full = kv[:, : n_full * p].reshape((nl, n_full, p) + kv.shape[2:])
-            codes, scales, pamax, mu = encode_pages(
-                full, centered=self.centered, block_size=self.block_size)
-            rows["codes"] = rows["codes"].at[:, :n_full].set(codes)
-            rows["scales"] = rows["scales"].at[:, :n_full].set(scales)
-            rows["pamax"] = rows["pamax"].at[:, :n_full].set(pamax)
-            if self.centered:
-                rows["mean"] = rows["mean"].at[:, :n_full].set(
-                    mu.astype(self.dtype))
-        if rem:
-            rows["tail"] = rows["tail"].at[:, :rem].set(kv[:, n_full * p:])
-
+        tmask = (jnp.arange(p) < rem).reshape(1, p, 1, 1, 1)
+        rows["tail"] = jnp.where(tmask, tail_kv, 0).astype(self.dtype)
         return {k: caches[k].at[:, slot].set(rows[k]) for k in caches}
+
+    # ------------------------------------------------- prefix-page hooks
+    # A committed page is self-contained (codes + scales + pamax + mean), so
+    # its payload can be shared verbatim across slots: a prefix-cache hit
+    # skips the prefill FLOPs *and* the re-quantization of identical pages.
+    def extract_page_payload(self, caches, slot: int, page_idx: int,
+                             page_size: int):
+        assert page_size == self.page_size
+        out = {"codes": caches["codes"][:, slot, page_idx],
+               "scales": caches["scales"][:, slot, page_idx],
+               "pamax": caches["pamax"][:, slot, page_idx]}
+        if self.centered:
+            out["mean"] = caches["mean"][:, slot, page_idx]
+        return out
+
+    def write_page_payload(self, caches, slot, start, payload):
+        """Write one committed-page payload at token offset ``start``."""
+        i = start // self.page_size
+        out = dict(caches)
+        for name in ("codes", "scales", "pamax") + (
+                ("mean",) if self.centered else ()):
+            out[name] = caches[name].at[:, slot, i].set(
+                payload[name].astype(caches[name].dtype))
+        return out
+
+    def payload_to_dense(self, payload):
+        """Dequantized {"k","v"}: (L, P, n_kv, hd) view of a page payload.
+
+        Used to rebuild the dense prefill context on a prefix-cache hit: the
+        suffix is computed against the *dequantized* prefix — exactly what
+        decode attends over once the pages are committed, but (for FP4
+        modes) not bitwise what a cold prefill of the same prompt sees.
+        """
+        deq = decode_pages(payload["codes"], payload["scales"],
+                           payload["pamax"], payload.get("mean"),
+                           dtype=self.dtype, block_size=self.block_size)
+        return {"k": deq[:, :, 0], "v": deq[:, :, 1]}
 
     # ------------------------------------------------------------------ cost
     def bytes_per_token(self) -> float:
@@ -286,6 +345,105 @@ class QuantizedKVAdapter:
         """Constant per-slot working storage (the bf16 tail page, one layer)."""
         return float(self.page_size * 2 * self.num_kv_heads * self.head_dim
                      * self.dtype.itemsize)
+
+
+# --------------------------------------------------------------------------
+# Shared-prefix page cache: content-addressed, ref-counted committed pages
+# --------------------------------------------------------------------------
+
+def prefix_page_keys(prompt, page_size: int):
+    """Chained content keys for every *full* page of ``prompt``.
+
+    ``key_i`` commits to all tokens in [0, (i+1)*page_size) — not just page
+    i's own tokens — so equal keys imply equal full prefixes and a page is
+    shareable iff every page before it is too. Only page-aligned prefixes
+    get keys: the boundary partial page lives in a slot's private bf16 tail
+    and is never shared.
+    """
+    import hashlib
+
+    prompt = np.asarray(prompt, np.int32).reshape(-1)
+    h = hashlib.blake2b(str(page_size).encode(), digest_size=16)
+    keys = []
+    for i in range(prompt.size // page_size):
+        h.update(prompt[i * page_size:(i + 1) * page_size].tobytes())
+        keys.append(h.digest())
+    return keys
+
+
+class PagePool:
+    """Ref-counted LRU pool of committed KV-page payloads (host side).
+
+    This is the page table's backing store: entries are content-addressed by
+    :func:`prefix_page_keys`, acquired (refcount +1) when an admitted request
+    reuses a page and released when the request retires. Committed payloads
+    are immutable — a slot's divergent continuation writes its own tail and
+    commits *new* pages, never mutating a shared one (copy-on-write at page
+    granularity). Eviction is LRU over unreferenced entries only; the pool
+    may transiently exceed ``max_pages`` when everything is referenced.
+    """
+
+    def __init__(self, max_pages: int = 1024):
+        assert max_pages > 0
+        self.max_pages = max_pages
+        self._entries = OrderedDict()    # key -> [payload, refcount]
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def refcount(self, key: bytes) -> int:
+        e = self._entries.get(key)
+        return 0 if e is None else e[1]
+
+    def acquire(self, key: bytes):
+        """Look up + pin one page. Returns its payload, or None on miss."""
+        e = self._entries.get(key)
+        if e is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        e[1] += 1
+        self._entries.move_to_end(key)
+        return e[0]
+
+    def release(self, key: bytes) -> None:
+        e = self._entries.get(key)
+        assert e is not None and e[1] > 0, "release without matching acquire"
+        e[1] -= 1
+
+    def publish(self, key: bytes, payload) -> bool:
+        """Offer a freshly committed page. First writer wins: a key commits
+        to the page's source *tokens*, and any payload offered under it
+        encodes that same prefix — though under FP4 modes a hit request's
+        own suffix pages derive from the dequantized prefix, so a duplicate
+        offer need not be bitwise-identical to the stored one. Keeping the
+        first payload for the entry's lifetime guarantees every reader of a
+        pooled page sees the same bytes."""
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return False
+        self._entries[key] = [payload, 0]
+        self._evict()
+        return True
+
+    def _evict(self) -> None:
+        over = len(self._entries) - self.max_pages
+        if over <= 0:
+            return
+        # One LRU->MRU pass over unreferenced entries, sparing the MRU end
+        # (the page just published/used — evicting it would defeat the
+        # publish). Entries left pinned may keep the pool transiently over
+        # capacity.
+        for key, e in list(self._entries.items())[:-1]:
+            if over <= 0:
+                break
+            if e[1] == 0:
+                del self._entries[key]
+                self.evictions += 1
+                over -= 1
 
 
 def make_adapter(cfg, kv_cache: str, page_size: int = 64):

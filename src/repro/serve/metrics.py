@@ -23,6 +23,13 @@ class ServeMetrics:
     step_active: List[int] = dataclasses.field(default_factory=list)
     step_occupancy: List[float] = dataclasses.field(default_factory=list)
     finished: List[Request] = dataclasses.field(default_factory=list)
+    # chunked prefill + shared-prefix page cache
+    prefill_tokens_computed: int = 0   # prompt tokens run through chunk jits
+    prefill_tokens_padded: int = 0     # ditto incl. bucket padding
+    prefix_hit_tokens: int = 0         # prompt tokens served from the pool
+    prefix_hit_pages: int = 0
+    prefix_lookup_pages: int = 0       # full pages eligible for reuse
+    prefill_compiles: int = 0          # distinct prefill jit shapes compiled
     _t0: Optional[float] = None
     _t1: Optional[float] = None
 
@@ -39,6 +46,16 @@ class ServeMetrics:
 
     def record_finished(self, req: Request):
         self.finished.append(req)
+
+    def record_prefill_chunk(self, valid: int, padded: int):
+        self.prefill_tokens_computed += valid
+        self.prefill_tokens_padded += padded
+
+    def record_prefix_lookup(self, hit_pages: int, lookup_pages: int,
+                             page_size: int):
+        self.prefix_hit_pages += hit_pages
+        self.prefix_lookup_pages += lookup_pages
+        self.prefix_hit_tokens += hit_pages * page_size
 
     # ------------------------------------------------------------------ views
     @property
@@ -60,4 +77,11 @@ class ServeMetrics:
             "p95_step_ms": float(np.percentile(lat, 95) * 1e3),
             "mean_occupancy": float(np.mean(self.step_occupancy or [0.0])),
             "cache_bytes_per_token": self.cache_bytes_per_token * self.num_layers,
+            "prefill_tokens_computed": float(self.prefill_tokens_computed),
+            "prefill_tokens_padded": float(self.prefill_tokens_padded),
+            "prefix_hit_tokens": float(self.prefix_hit_tokens),
+            "prefix_hit_rate": (self.prefix_hit_pages
+                                / self.prefix_lookup_pages
+                                if self.prefix_lookup_pages else 0.0),
+            "compile_count": float(self.prefill_compiles),
         }

@@ -36,10 +36,21 @@ class Request:
     submit_time: float = 0.0
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    # chunked-prefill progress: prompt tokens already in the slot's context
+    # (prefix-cache hits count — they are never recomputed)
+    prefill_pos: int = 0
+    prefix_hit_tokens: int = 0
+    prefill_logits: Optional[object] = None   # last-prompt-position logits
+                                              # (recorded when the engine is
+                                              # configured to keep them)
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    @property
+    def prefilled(self) -> bool:
+        return self.prefill_pos >= self.prompt_len
 
     @property
     def done(self) -> bool:
@@ -47,11 +58,17 @@ class Request:
 
 
 class Scheduler:
-    """Slot table + FIFO waiting queue.
+    """Slot table + FIFO waiting queue, with per-slot prefill/decode phases.
+
+    An admitted request starts in the ``prefill`` phase: it owns a slot but
+    is only partially prefilled (the engine streams its prompt in chunks
+    under a per-step token budget). ``begin_decode`` moves it to the decode
+    phase once its whole prompt is in the slot cache.
 
     Invariants (tested):
       * a slot is either free or holds exactly one live request;
       * admission is FIFO over the waiting queue, bounded by free slots;
+      * a slot admits in phase "prefill" and retires from either phase;
       * retiring a slot frees it for reuse;
       * ``submit`` raises :class:`QueueFull` past ``max_waiting`` entries.
     """
@@ -63,6 +80,9 @@ class Scheduler:
         self._free: List[int] = list(range(n_slots - 1, -1, -1))
         self._waiting: Deque[Request] = deque()
         self._active: Dict[int, Request] = {}
+        self._phase: Dict[int, str] = {}      # slot -> "prefill" | "decode"
+                                              # (insertion-ordered: FIFO over
+                                              # admission order)
 
     # ------------------------------------------------------------------ state
     @property
@@ -91,6 +111,16 @@ class Scheduler:
     def request_in(self, slot: int) -> Request:
         return self._active[slot]
 
+    def phase_of(self, slot: int) -> str:
+        return self._phase[slot]
+
+    def prefill_slots(self) -> List[int]:
+        """Slots still streaming their prompt, FIFO by admission order."""
+        return [s for s, ph in self._phase.items() if ph == "prefill"]
+
+    def decode_slots(self) -> List[int]:
+        return [s for s, ph in self._phase.items() if ph == "decode"]
+
     # ------------------------------------------------------------------ ops
     def submit(self, req: Request) -> None:
         if len(self._waiting) >= self.max_waiting:
@@ -106,11 +136,21 @@ class Scheduler:
             slot = self._free.pop()
             req = self._waiting.popleft()
             self._active[slot] = req
+            self._phase[slot] = "prefill"
             placed.append((slot, req))
         return placed
+
+    def begin_decode(self, slot: int) -> None:
+        """Prefill finished: the slot joins the fused decode batch."""
+        assert self._phase.get(slot) == "prefill", \
+            f"slot {slot} is not prefilling"
+        assert self._active[slot].prefilled, \
+            f"slot {slot} entering decode with an incomplete prefill"
+        self._phase[slot] = "decode"
 
     def retire(self, slot: int) -> Request:
         req = self._active.pop(slot)
         assert req.done, f"retiring slot {slot} with unfinished request {req.rid}"
+        self._phase.pop(slot, None)
         self._free.append(slot)
         return req

@@ -3,3 +3,13 @@ import sys
 
 # Tests run single-device (the dry-run, and ONLY the dry-run, forces 512).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    # Long-running system/serve tests are tagged `slow`; the CI push job
+    # runs `-m "not slow"` and a scheduled job runs the full suite. A plain
+    # `pytest -x -q` (tier-1) still runs everything.
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running system/serve test (CI pushes run -m 'not slow'; "
+        "the scheduled workflow runs the full suite)")

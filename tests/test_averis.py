@@ -80,6 +80,34 @@ def test_eq10_identity_quantizers():
     np.testing.assert_allclose(np.asarray(dw), np.asarray(x.T @ d), rtol=2e-3, atol=2e-3)
 
 
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_eq10_cross_terms_vanish_exactly(seed):
+    """Eq. 10 exactness tested *directly*: with identity (fp32) quantizers
+    and dyadic-mean inputs — integer entries, power-of-two token count, so
+    ``split_mean`` is exact in fp32 — the weight-gradient cross terms are
+    bitwise zero (X_R^T 1 == 0, 1^T D_R == 0) and the split gradient
+    X_R^T D_R + l mu_X^T mu_D *equals* the unsplit X^T D: every product and
+    partial sum stays a dyadic rational inside the f32 mantissa, so the
+    analytic cancellation survives floating point with no tolerance at all.
+    """
+    rng = np.random.default_rng(seed)
+    l, m, n = 64, 24, 8
+    x = jnp.asarray(rng.integers(-8, 9, size=(l, m)).astype(np.float32))
+    d = jnp.asarray(rng.integers(-8, 9, size=(l, n)).astype(np.float32))
+    mu_x, x_r = split_mean(x, 0)
+    mu_d, d_r = split_mean(d, 0)
+    ones = np.ones((l,), np.float32)
+    assert np.all(np.asarray(x_r).T @ ones == 0.0)        # X_R^T 1 == 0
+    assert np.all(ones @ np.asarray(d_r) == 0.0)          # 1^T D_R == 0
+    # split reconstruction is exact too: x == 1 mu_x^T + X_R bitwise
+    np.testing.assert_array_equal(
+        np.asarray(mu_x)[None, :] + np.asarray(x_r), np.asarray(x))
+    dw = averis_weight_grad(x, d, _ident, _ident, _ident)
+    ref = np.asarray(x).T @ np.asarray(d)
+    np.testing.assert_array_equal(np.asarray(dw), ref)
+
+
 def test_residual_fidelity_mechanism():
     """The paper's core claim (§2.3 / Appendix C): under a coherent mean bias,
     vanilla NVFP4 destroys the token-discriminative residual while Averis

@@ -15,7 +15,16 @@ from repro.models.cache import (
 )
 from repro.models.model import Model
 from repro.models.transformer import block_cache_spec, shared_block_cache_spec
-from repro.serve import Engine, EngineConfig, QueueFull, Request, Scheduler
+from repro.serve import (
+    Engine,
+    EngineConfig,
+    PagePool,
+    QueueFull,
+    Request,
+    Scheduler,
+    chunk_buckets,
+    prefix_page_keys,
+)
 from repro.serve.kvcache import decode_pages, encode_pages, make_adapter
 from repro.serve.sampling import sample_tokens
 
@@ -138,8 +147,9 @@ def test_quantized_adapter_bytes_below_bf16():
 
 
 def test_quantized_adapter_update_insert_consistency():
-    """insert(prefill) followed by update() must reproduce the dense history
-    (exactly for the bf16 tail, within FP4 error for committed pages)."""
+    """insert_from_buffer(prefill) followed by update() must reproduce the
+    dense history (exactly for the bf16 tail, within FP4 error for committed
+    pages)."""
     cfg = reduced("qwen3-0.6b")
     adapter = make_adapter(cfg, "fp4-centered", page_size=8)
     n, hd = cfg.num_kv_heads, cfg.resolved_head_dim
@@ -149,7 +159,10 @@ def test_quantized_adapter_update_insert_consistency():
     v = jnp.asarray(rng.normal(size=(L, 1, s, n, hd)).astype(np.float32))
 
     caches = adapter.blank(L, b, cap)
-    caches = adapter.insert(caches, {"k": k, "v": v}, 1, s)
+    buf = adapter.prefill_buffer(L, cap)
+    buf = {"k": buf["k"].at[:, :, :s].set(k.astype(buf["k"].dtype)),
+           "v": buf["v"].at[:, :, :s].set(v.astype(buf["v"].dtype))}
+    caches = adapter.insert_from_buffer(caches, buf, 1, s)
     layer0 = {key: a[0] for key, a in caches.items()}
     tok_k = jnp.asarray(rng.normal(size=(b, n, hd)).astype(np.float32))
     tok_v = jnp.asarray(rng.normal(size=(b, n, hd)).astype(np.float32))
@@ -299,6 +312,7 @@ def test_engine_matches_static_greedy_bf16(tiny_served):
     assert eng.metrics.summary()["requests"] == 4.0
 
 
+@pytest.mark.slow
 def test_engine_fp4_centered_cache_e2e(tiny_served):
     cfg, model, params, prompts = tiny_served
     eng, out = _run_engine(model, params, prompts, n_slots=2, max_len=32,
@@ -311,6 +325,7 @@ def test_engine_fp4_centered_cache_e2e(tiny_served):
     assert summ["cache_bytes_per_token"] < 0.35 * dense_bpt
 
 
+@pytest.mark.slow
 def test_engine_staggered_groups_and_eos(tiny_served):
     cfg, model, params, prompts = tiny_served
     eng = Engine(model, params, EngineConfig(
@@ -333,6 +348,7 @@ def test_engine_staggered_groups_and_eos(tiny_served):
     assert r.finish_reason == "length"
 
 
+@pytest.mark.slow
 def test_engine_sampled_determinism(tiny_served):
     """Same (engine seed, request seed) => same generation — including when
     the second request is admitted later: sampling keys depend only on the
@@ -351,6 +367,275 @@ def test_engine_sampled_determinism(tiny_served):
         outs.append([r.generated for r in fin])
     assert outs[0] == outs[1]          # exact replay
     assert outs[0] == outs[2]          # admission-timing invariance
+
+
+def test_scheduler_prefill_decode_phases():
+    sch = Scheduler(n_slots=2)
+    for i in range(3):
+        sch.submit(_req(i))
+    (s0, r0), (s1, r1) = sch.admit()
+    assert sch.phase_of(s0) == "prefill" and sch.phase_of(s1) == "prefill"
+    assert sch.prefill_slots() == [s0, s1]        # FIFO by admission
+    with pytest.raises(AssertionError):
+        sch.begin_decode(s0)                      # prompt not yet prefilled
+    r0.prefill_pos = r0.prompt_len
+    sch.begin_decode(s0)
+    assert sch.phase_of(s0) == "decode"
+    assert sch.prefill_slots() == [s1] and sch.decode_slots() == [s0]
+    with pytest.raises(AssertionError):
+        sch.begin_decode(s0)                      # already decoding
+    r0.finish_reason = "length"
+    sch.retire(s0)
+    assert s0 not in dict(sch.active_items())
+    (s2, r2), = sch.admit()                       # freed slot re-admits ...
+    assert s2 == s0 and sch.phase_of(s2) == "prefill"   # ... in prefill phase
+    assert sch.prefill_slots() == [s1, s2]        # admission order preserved
+
+
+# --------------------------------------------------------------------------
+# Shared-prefix page pool (host-side)
+# --------------------------------------------------------------------------
+
+def test_prefix_page_keys_chained_and_aligned():
+    p = np.arange(40, dtype=np.int32)
+    keys = prefix_page_keys(p, 16)
+    assert len(keys) == 2                          # only full pages get keys
+    # shared prefix -> shared keys; divergence poisons every later page
+    q = p.copy()
+    q[20] += 1
+    qkeys = prefix_page_keys(q, 16)
+    assert qkeys[0] == keys[0] and qkeys[1] != keys[1]
+    # same page *content* after a different prefix must NOT collide
+    r = np.concatenate([p[16:32], p[16:32]])
+    assert prefix_page_keys(r, 16)[1] != keys[1]
+    # page size is part of the key domain
+    assert prefix_page_keys(p, 8)[0] != keys[0]
+
+
+def test_page_pool_refcount_and_lru_eviction():
+    pool = PagePool(max_pages=2)
+    assert pool.acquire(b"a") is None              # miss
+    pool.publish(b"a", "A")
+    pool.publish(b"b", "B")
+    assert pool.acquire(b"a") == "A" and pool.refcount(b"a") == 1
+    pool.publish(b"c", "C")                        # over capacity ...
+    assert len(pool) == 2 and pool.evictions == 1  # ... evicts LRU b, not
+    assert pool.acquire(b"b") is None              # pinned a
+    assert pool.acquire(b"a") == "A" and pool.refcount(b"a") == 2
+    pool.release(b"a")
+    pool.release(b"a")
+    assert pool.refcount(b"a") == 0
+    with pytest.raises(AssertionError):
+        pool.release(b"a")                         # unbalanced release
+    pool.publish(b"d", "D")                        # now a is evictable
+    assert len(pool) == 2
+    assert pool.hits == 2 and pool.misses == 2
+
+
+def test_page_pool_never_evicts_pinned_pages():
+    pool = PagePool(max_pages=1)
+    pool.publish(b"a", "A")
+    assert pool.acquire(b"a") == "A"
+    pool.publish(b"b", "B")                        # everything pinned:
+    assert len(pool) == 2                          # transient over-capacity
+    pool.release(b"a")
+    pool.publish(b"c", "C")
+    assert len(pool) == 1 or pool.refcount(b"a") > 0
+
+
+# --------------------------------------------------------------------------
+# Chunked prefill + prefix cache (engine level)
+# --------------------------------------------------------------------------
+
+def test_chunk_buckets_grid():
+    assert chunk_buckets(64) == (16, 32, 64)
+    assert chunk_buckets(16) == (16,)
+    assert chunk_buckets(8) == (8,)
+    assert chunk_buckets(48) == (16, 32, 48)
+
+
+@pytest.mark.slow
+def test_chunked_prefill_matches_static_mixed_lengths(tiny_served):
+    """Greedy chunked-prefill output is token-identical to --static for
+    prompt lengths straddling the chunk boundary {17, 64, 130}, and the
+    whole mix compiles at most len(chunk_buckets) prefill shapes."""
+    from repro.launch.serve import generate
+
+    cfg, model, params, _ = tiny_served
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (17, 64, 130)]
+    gen = 6
+    static = [np.asarray(generate(model, params, jnp.asarray(p)[None, :],
+                                  gen, "bf16"))[0].tolist() for p in prompts]
+
+    eng = Engine(model, params, EngineConfig(
+        n_slots=2, max_len=160, kv_cache="bf16", quant_mode="bf16",
+        prefill_chunk=64))
+    for i, p in enumerate(prompts):
+        eng.submit(p, gen, seed=i)
+    fin = sorted(eng.drain(), key=lambda r: r.rid)
+    assert [r.generated for r in fin] == static
+    summ = eng.metrics.summary()
+    assert summ["compile_count"] <= len(chunk_buckets(64))
+    # padding is bounded by the bucket grid: computed <= padded < 2x computed
+    assert summ["prefill_tokens_computed"] == float(sum(len(p) for p in prompts))
+    assert summ["prefill_tokens_padded"] < 2 * summ["prefill_tokens_computed"]
+
+
+@pytest.mark.slow
+def test_odd_lengths_share_bucket_compiles(tiny_served):
+    """The per-length compile blowup fix: many distinct odd prompt lengths
+    inside one bucket produce exactly one prefill compile."""
+    cfg, model, params, _ = tiny_served
+    rng = np.random.default_rng(4)
+    eng = Engine(model, params, EngineConfig(
+        n_slots=2, max_len=32, kv_cache="bf16", quant_mode="bf16",
+        prefill_chunk=16))
+    for i, s in enumerate((9, 10, 11, 13, 14, 15, 16)):
+        eng.submit(rng.integers(0, cfg.vocab_size, s).astype(np.int32), 2,
+                   seed=i)
+    eng.drain()
+    assert eng.metrics.summary()["compile_count"] == 1.0
+
+
+@pytest.mark.slow
+def test_long_prompt_prefill_does_not_stall_decode(tiny_served):
+    """Token-budget admission: while a long prompt streams in chunk-sized
+    pieces, an already-decoding request keeps generating every step."""
+    cfg, model, params, prompts = tiny_served
+    rng = np.random.default_rng(5)
+    eng = Engine(model, params, EngineConfig(
+        n_slots=2, max_len=160, kv_cache="bf16", quant_mode="bf16",
+        prefill_chunk=16))
+    eng.submit(prompts[0], 20, seed=0)             # 16-token prompt
+    eng.step()                                     # now decoding in slot 0
+    short = eng.scheduler.request_in(0)
+    assert eng.scheduler.phase_of(0) == "decode"
+    eng.submit(rng.integers(0, cfg.vocab_size, 64).astype(np.int32), 4,
+               seed=1)                             # 4 chunks of 16
+    for expect_chunks in range(1, 4):
+        n_before = len(short.generated)
+        eng.step()
+        long_req = eng.scheduler.request_in(1)
+        assert eng.scheduler.phase_of(1) == "prefill"
+        assert long_req.prefill_pos == 16 * expect_chunks
+        assert len(short.generated) == n_before + 1   # decode kept moving
+    eng.step()                                     # final chunk -> decode
+    assert eng.scheduler.phase_of(1) == "decode"
+    eng.drain()
+
+
+def test_prefill_token_budget_is_honored_below_chunk(tiny_served):
+    """A budget below the chunk size clips the chunk's valid tokens: no
+    step prefills more than ``prefill_token_budget`` prompt tokens (jit
+    shapes still come from the bucket grid)."""
+    cfg, model, params, _ = tiny_served
+    rng = np.random.default_rng(9)
+    eng = Engine(model, params, EngineConfig(
+        n_slots=1, max_len=96, kv_cache="bf16", quant_mode="bf16",
+        prefill_chunk=64, prefill_token_budget=8))
+    eng.submit(rng.integers(0, cfg.vocab_size, 40).astype(np.int32), 2,
+               seed=0)
+    progress = []
+    while eng.scheduler.has_work and len(progress) < 16:
+        eng.step()
+        req = (eng.scheduler.request_in(0)
+               if dict(eng.scheduler.active_items()) else None)
+        if req is not None and not req.prefilled:
+            progress.append(req.prefill_pos)
+    deltas = np.diff([0] + progress)
+    assert (deltas <= 8).all() and (deltas > 0).all()
+    eng.drain()
+
+
+@pytest.mark.slow
+def test_prefix_cache_hits_are_bitwise_identical_bf16(tiny_served):
+    """Prefix-cache-hit requests produce bitwise-identical last-prompt
+    logits (and tokens) to cold requests, while computing strictly fewer
+    prefill tokens at hit-rate > 0."""
+    cfg, model, params, _ = tiny_served
+    rng = np.random.default_rng(6)
+    system = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    prompts = [np.concatenate([system,
+                               rng.integers(0, cfg.vocab_size, t)
+                               .astype(np.int32)])
+               for t in (5, 9, 13)]
+
+    def run(prefix):
+        eng = Engine(model, params, EngineConfig(
+            n_slots=2, max_len=96, kv_cache="bf16", quant_mode="bf16",
+            page_size=16, prefill_chunk=32, prefix_cache=prefix,
+            record_prefill_logits=True))
+        for i, p in enumerate(prompts):
+            eng.submit(p, 6, seed=i)
+        return eng, sorted(eng.drain(), key=lambda r: r.rid)
+
+    cold_eng, cold = run(False)
+    warm_eng, warm = run(True)
+    for c, w in zip(cold, warm):
+        assert c.generated == w.generated
+        np.testing.assert_array_equal(c.prefill_logits, w.prefill_logits)
+    s_cold = cold_eng.metrics.summary()
+    s_warm = warm_eng.metrics.summary()
+    assert s_warm["prefix_hit_rate"] > 0.0
+    assert (s_warm["prefill_tokens_computed"]
+            < s_cold["prefill_tokens_computed"])
+    assert warm[0].prefix_hit_tokens == 0          # first request is cold
+    assert all(w.prefix_hit_tokens == 32 for w in warm[1:])
+    # every pinned page was released when its request retired
+    assert all(warm_eng.pool.refcount(k) == 0
+               for k in warm_eng.pool._entries)
+
+
+@pytest.mark.slow
+def test_prefix_cache_shares_quantized_pages_verbatim(tiny_served):
+    """FP4 mode: a hit slot's committed prefix pages are byte-identical to
+    the cold slot's (payload reuse skips re-quantization — and the restore
+    path guarantees a shared page is the same bytes in every slot)."""
+    cfg, model, params, _ = tiny_served
+    rng = np.random.default_rng(7)
+    system = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)  # 2 pages
+    p_a = np.concatenate([system, rng.integers(0, cfg.vocab_size, 7)
+                          .astype(np.int32)])
+    p_b = np.concatenate([system, rng.integers(0, cfg.vocab_size, 11)
+                          .astype(np.int32)])
+    eng = Engine(model, params, EngineConfig(
+        n_slots=2, max_len=64, kv_cache="fp4-centered", quant_mode="bf16",
+        page_size=16, prefill_chunk=32, prefix_cache=True))
+    eng.submit(p_a, 4, seed=0)
+    eng.submit(p_b, 4, seed=1)
+    fin = eng.drain()
+    assert len(fin) == 2
+    assert eng.metrics.summary()["prefix_hit_rate"] > 0.0
+    for leaf in ("codes", "scales", "pamax", "mean"):
+        a = np.asarray(eng.caches[leaf][:, 0, :2].astype(jnp.float32))
+        b = np.asarray(eng.caches[leaf][:, 1, :2].astype(jnp.float32))
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+def test_engine_fp4_prefix_outputs_match_cold(tiny_served):
+    """FP4 mode end-to-end: prefix-cache-on greedy generations equal the
+    prefix-cache-off ones (decode always attends dequantized committed
+    pages, so sharing the payload verbatim cannot change decode)."""
+    cfg, model, params, _ = tiny_served
+    rng = np.random.default_rng(8)
+    system = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    prompts = [np.concatenate([system, rng.integers(0, cfg.vocab_size, t)
+                               .astype(np.int32)]) for t in (3, 8, 17)]
+
+    def run(prefix):
+        eng = Engine(model, params, EngineConfig(
+            n_slots=2, max_len=96, kv_cache="fp4-centered",
+            quant_mode="bf16", page_size=16, prefill_chunk=32,
+            prefix_cache=prefix))
+        for i, p in enumerate(prompts):
+            eng.submit(p, 6, seed=i)
+        return [r.generated for r in sorted(eng.drain(),
+                                            key=lambda r: r.rid)]
+
+    assert run(False) == run(True)
 
 
 def test_engine_rejects_oversized_and_ssm():

@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow   # ~2 min subprocess; full run on schedule
+
 _SCRIPT = textwrap.dedent(
     """
     import os

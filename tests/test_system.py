@@ -17,6 +17,8 @@ from repro.models.model import Model
 from repro.optim import adamw
 from repro.train.trainer import TrainConfig, init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow   # multi-recipe training runs; full on schedule
+
 STEPS = 60
 
 
