@@ -1,0 +1,97 @@
+"""qgemm microbenchmark: per-recipe fwd and fwd+bwd wall time + compile count.
+
+The pipeline refactor's perf contract: expressing recipes as GemmPlan data
+must not regress the hot path, and the per-step quantized-weight cache must
+show up as a fwd+bwd speedup when weights are prepared once
+(``prepared_weight_stack``) instead of re-quantized inside the GeMM.
+
+Rows (name,us_per_call,derived):
+  qgemm_fwd_<mode>       jitted forward wall time        compiles=..
+  qgemm_fwdbwd_<mode>    jitted forward+backward         compiles=..
+  qgemm_prepared_<mode>  fwd+bwd with pre-quantized weights; derived
+                         speedup vs qgemm_fwdbwd_<mode>
+
+Also writes ``artifacts/BENCH_qgemm.json`` (consumed by the nightly CI job)
+with the raw timings so regressions are diffable run-over-run.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit, time_jitted
+
+ART_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts")
+
+L, M, N = 256, 512, 512
+
+
+def run() -> None:
+    from repro.core import MODES, qgemm, recipe
+    from repro.core.qgemm import prepared_weight_single
+
+    key = jax.random.key(0)
+    x = jax.random.normal(jax.random.key(1), (L, M), jnp.float32) + 1.0
+    w = jax.random.normal(jax.random.key(2), (M, N), jnp.float32) * 0.2
+    g = jax.random.normal(jax.random.key(3), (L, N), jnp.float32)
+
+    results = {"shape": [L, M, N], "modes": {}}
+    for mode in MODES:
+        cfg = recipe(mode)
+        traces = {"fwd": 0, "fwdbwd": 0, "prepared": 0}
+
+        def fwd(xx, ww):
+            traces["fwd"] += 1
+            return qgemm(xx, ww, cfg, key)
+
+        def fwdbwd(xx, ww, gg):
+            traces["fwdbwd"] += 1
+            _, vjp = jax.vjp(lambda a, b: qgemm(a, b, cfg, key), xx, ww)
+            return vjp(gg)
+
+        def fwdbwd_prepared(xx, ww, gg, prep):
+            # prep is computed ONCE outside (the per-step hoist); this times
+            # only the per-microbatch work that remains after it.
+            traces["prepared"] += 1
+            def one(a, b):
+                return qgemm(a, b, cfg, key, prepared=prep)
+            _, vjp = jax.vjp(one, xx, ww)
+            return vjp(gg)
+
+        prep = jax.jit(
+            lambda ww: prepared_weight_single(ww, cfg, x.dtype))(w)
+        jax.block_until_ready(prep)
+
+        t_fwd = time_jitted(jax.jit(fwd), x, w)
+        t_bwd = time_jitted(jax.jit(fwdbwd), x, w, g)
+        t_prep = time_jitted(jax.jit(fwdbwd_prepared), x, w, g, prep)
+
+        emit(f"qgemm_fwd_{mode}", t_fwd["mean_s"] * 1e6,
+             f"compiles={traces['fwd']}")
+        emit(f"qgemm_fwdbwd_{mode}", t_bwd["mean_s"] * 1e6,
+             f"compiles={traces['fwdbwd']}")
+        speedup = t_bwd["mean_s"] / max(t_prep["mean_s"], 1e-12)
+        emit(f"qgemm_prepared_{mode}", t_prep["mean_s"] * 1e6,
+             f"speedup_vs_inline={speedup:.2f}")
+        results["modes"][mode] = {
+            "fwd_us": t_fwd["mean_s"] * 1e6,
+            "fwd_compiles": traces["fwd"],
+            "fwdbwd_us": t_bwd["mean_s"] * 1e6,
+            "fwdbwd_compiles": traces["fwdbwd"],
+            "fwdbwd_prepared_us": t_prep["mean_s"] * 1e6,
+            "prepared_speedup": speedup,
+        }
+
+    os.makedirs(ART_DIR, exist_ok=True)
+    out = os.path.join(ART_DIR, "BENCH_qgemm.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    emit("qgemm_json", 0.0, f"wrote={os.path.relpath(out)}")
+
+
+if __name__ == "__main__":
+    run()

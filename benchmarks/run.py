@@ -17,6 +17,7 @@ from . import (
     bench_fig3,
     bench_fig4,
     bench_fig5,
+    bench_qgemm,
     bench_quant_error,
     bench_serve,
     bench_table1,
@@ -26,6 +27,7 @@ from . import (
 )
 
 BENCHES = {
+    "qgemm": bench_qgemm.run,      # per-recipe GeMM fwd/bwd + compile count
     "table1": bench_table1.run,    # loss gaps per recipe
     "table2": bench_table2.run,    # hadamard vs averis preprocessing
     "table3": bench_table3.run,    # end-to-end step overhead

@@ -65,6 +65,12 @@ class ModelConfig:
     input_mode: str = "tokens"       # tokens | embeddings (vlm/audio stubs)
     tie_embeddings: bool = False
     quantize_lm_head: bool = True    # paper: ALL GeMMs are W4A4G4
+    quant_policy: str = ""           # arch-default PrecisionPolicy spec
+                                     # (core/policy.py grammar), e.g.
+                                     # "averis;lm_head=bf16". Overridden by
+                                     # TrainConfig.quant_policy; empty means
+                                     # the launcher's --quant recipe applies
+                                     # uniformly.
 
     # --- numerics / training -------------------------------------------------
     param_dtype: str = "float32"     # master/param storage dtype

@@ -1,12 +1,35 @@
-"""Core: NVFP4 numerics, Averis mean-residual splitting, quantized GeMM."""
+"""Core: NVFP4 numerics, Averis splitting, pipelined quantized GeMM, policy."""
 from .formats import BLOCK_SIZE, E2M1_MAX, E4M3_MAX, HADAMARD_16, MODES
-from .nvfp4 import nvfp4_qdq, nvfp4_quant_error, round_e2m1_rn, round_e2m1_sr
+from .nvfp4 import (
+    decode_e2m1_codes,
+    encode_e2m1_codes,
+    nvfp4_qdq,
+    nvfp4_quant_error,
+    pack_nibbles,
+    quantize_block_scales,
+    round_e2m1_rn,
+    round_e2m1_sr,
+    unpack_nibbles,
+)
 from .hadamard import hadamard_tiles
 from .averis import (
     averis_forward,
     averis_input_grad,
     averis_weight_grad,
     split_mean,
+)
+from .pipeline import (
+    Center,
+    GemmPlan,
+    GemmTerm,
+    Hadamard,
+    Operand,
+    PLANS,
+    Quantize,
+    plan_for,
+    plan_summary,
+    register_plan,
+    reset_hadamard_skip_warnings,
 )
 from .qgemm import (
     AVERIS,
@@ -15,16 +38,25 @@ from .qgemm import (
     NVFP4,
     NVFP4_HADAMARD,
     QuantConfig,
+    gemm_plan_summary,
     qgemm,
     qgemm_expert,
     recipe,
 )
+from .policy import ROLES, PolicyClause, PrecisionPolicy
 
 __all__ = [
     "BLOCK_SIZE", "E2M1_MAX", "E4M3_MAX", "HADAMARD_16", "MODES",
     "nvfp4_qdq", "nvfp4_quant_error", "round_e2m1_rn", "round_e2m1_sr",
+    "quantize_block_scales", "encode_e2m1_codes", "decode_e2m1_codes",
+    "pack_nibbles", "unpack_nibbles",
     "hadamard_tiles",
     "averis_forward", "averis_input_grad", "averis_weight_grad", "split_mean",
+    "Center", "Hadamard", "Quantize", "Operand", "GemmTerm", "GemmPlan",
+    "PLANS", "plan_for", "plan_summary", "register_plan",
+    "reset_hadamard_skip_warnings",
     "QuantConfig", "qgemm", "qgemm_expert", "recipe",
+    "gemm_plan_summary",
     "BF16", "NVFP4", "NVFP4_HADAMARD", "AVERIS", "AVERIS_HADAMARD",
+    "ROLES", "PolicyClause", "PrecisionPolicy",
 ]

@@ -21,7 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .formats import BLOCK_SIZE, E2M1_MAX, E4M3_MAX, TENSOR_SCALE_DENOM
+from .formats import BLOCK_SIZE, E2M1_GRID, E2M1_MAX, E4M3_MAX, TENSOR_SCALE_DENOM
 
 _EPS = 1e-30
 
@@ -58,10 +58,52 @@ def round_e2m1_sr(a: jax.Array, u: jax.Array) -> jax.Array:
     return jnp.minimum(r, E2M1_MAX)
 
 
-def _quantize_scale_e4m3(s: jax.Array) -> jax.Array:
-    """Round positive block scales to E4M3 (RN via hardware-equivalent cast)."""
-    s = jnp.clip(s, 0.0, E4M3_MAX)
-    return s.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+def quantize_block_scales(block_amax: jax.Array, s_t: jax.Array) -> jax.Array:
+    """E4M3 per-block decode scales from block amax and tensor scale.
+
+    The single implementation shared by the training-side QDQ simulation
+    (:func:`nvfp4_qdq`) and the serving-side page codec
+    (``repro.serve.kvcache``): s_b = RN_e4m3(clip(amax_b / (E2M1_MAX * s_t))).
+    ``s_t`` must broadcast against ``block_amax``. Returns float8_e4m3fn.
+    """
+    s = jnp.clip(block_amax / (E2M1_MAX * s_t), 0.0, E4M3_MAX)
+    return s.astype(jnp.float8_e4m3fn)
+
+
+def encode_e2m1_codes(rb: jax.Array, scale: jax.Array) -> jax.Array:
+    """Blocked values -> 4-bit sign|magnitude E2M1 codes (uint8, low nibble).
+
+    ``rb``: (..., n_blocks, block) values; ``scale``: (..., n_blocks)
+    effective per-block decode scale (E4M3 block scale x tensor scale).
+    Codes are ``sign*8 + grid_index`` with RN-to-grid elements — the same
+    rounding the QDQ simulation uses (:func:`round_e2m1_rn`).
+    """
+    a = jnp.where(scale[..., None] > 0,
+                  jnp.abs(rb) / jnp.maximum(scale[..., None], _EPS), 0.0)
+    q = round_e2m1_rn(a)
+    idx = jnp.searchsorted(jnp.asarray(E2M1_GRID), q).astype(jnp.uint8)
+    sign = (rb < 0).astype(jnp.uint8)
+    return sign * jnp.uint8(8) + idx
+
+
+def decode_e2m1_codes(codes: jax.Array) -> jax.Array:
+    """4-bit sign|magnitude codes -> signed E2M1 grid values (float32)."""
+    grid = jnp.asarray(E2M1_GRID)
+    mag = grid[codes & 7]
+    return jnp.where(codes >= 8, -mag, mag)
+
+
+def pack_nibbles(flat: jax.Array) -> jax.Array:
+    """Pack pairs of 4-bit codes along the last axis (even length) -> uint8."""
+    return flat[..., 0::2] | (flat[..., 1::2] << 4)
+
+
+def unpack_nibbles(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_nibbles`: (..., k) uint8 -> (..., 2k) codes."""
+    lo = (packed & 0x0F).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    return jnp.stack([lo, hi], axis=-1).reshape(
+        packed.shape[:-1] + (2 * packed.shape[-1],))
 
 
 def nvfp4_qdq(
@@ -114,7 +156,8 @@ def nvfp4_qdq(
     s_t = jnp.maximum(tensor_amax.astype(jnp.float32) / TENSOR_SCALE_DENOM, _EPS)
 
     block_amax = jnp.max(absx, axis=-1, keepdims=True)
-    s_b = _quantize_scale_e4m3(block_amax.astype(jnp.float32) / (E2M1_MAX * s_t))
+    s_b = quantize_block_scales(block_amax.astype(jnp.float32), s_t).astype(
+        jnp.float32)
     scale = (s_b * s_t).astype(compute_dtype)  # effective per-block scale
 
     eps = jnp.asarray(_EPS if compute_dtype == jnp.float32 else 1e-30,

@@ -1,0 +1,206 @@
+"""PrecisionPolicy: per-site quantization recipes (tensor role x layer index).
+
+Metis (arXiv:2509.00404) and the spike-as-bias-vector analysis
+(arXiv:2606.02288) both find the winning low-bit recipe varies by tensor role
+and layer depth — a single global recipe cannot express "FP4 body, bf16
+lm_head, Hadamard on the embedding-adjacent layers". A policy maps
+
+    (role, layer index) -> QuantConfig
+
+where roles name the GeMM call-sites of the model zoo (``ROLES``) and the
+layer index is the block's position in the stack (``None`` for depth-free
+sites like the lm_head).
+
+Spec grammar (CLI ``--quant-policy``; clauses separated by ``;``, later
+clauses win on the cells they name)::
+
+    spec      := clause (";" clause)*
+    clause    := RECIPE                      # default for every site
+               | ROLE "=" RECIPE             # one role, all layers
+               | "layers." RANGE "=" RECIPE  # all roles, a layer range
+               | "layers." RANGE "." ROLE "=" RECIPE
+    RANGE     := INT | INT "-" INT           # inclusive
+
+Examples::
+
+    averis
+    averis;lm_head=bf16
+    averis;lm_head=bf16;layers.0-1=nvfp4_hadamard
+    nvfp4;layers.0-3.mlp_down=averis_hadamard
+
+Layers are executed under ``lax.scan`` over stacked parameters, so a
+layer-dependent policy cannot branch per iteration; instead
+:meth:`PrecisionPolicy.segments` partitions the stack into maximal contiguous
+runs with identical role tables and the model scans each run separately
+(``models/model.py``). A uniform policy yields one segment — the exact
+pre-policy graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from .qgemm import QuantConfig, recipe
+
+# GeMM call-site roles of the model zoo (models/{attention,layers,ssm,moe}.py
+# + the lm_head in models/model.py). "moe" covers the expert FFN GeMMs; the
+# fp32 router is never quantized.
+ROLES = (
+    "attn_qkv",   # q/k/v projections (GQA) and the MLA q/kv down+up projs
+    "attn_o",     # attention output projection
+    "mlp_up",     # dense FFN gate/up projections
+    "mlp_down",   # dense FFN down projection
+    "moe",        # MoE expert gate/up/down GeMMs
+    "ssm_in",     # Mamba2 in_proj
+    "ssm_out",    # Mamba2 out_proj
+    "lm_head",    # final vocabulary projection (layer-free)
+)
+
+_LAYER_FREE_ROLES = frozenset({"lm_head"})
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyClause:
+    """One override: ``cfg`` applies where role/layer constraints match."""
+
+    cfg: QuantConfig
+    role: Optional[str] = None                 # None -> every role
+    layers: Optional[Tuple[int, int]] = None   # inclusive (lo, hi); None -> all
+
+    def __post_init__(self):
+        if self.role is not None and self.role not in ROLES:
+            raise ValueError(f"unknown role {self.role!r}; expected one of {ROLES}")
+        if self.layers is not None:
+            lo, hi = self.layers
+            if lo < 0 or hi < lo:
+                raise ValueError(f"bad layer range {self.layers}")
+            if self.role in _LAYER_FREE_ROLES:
+                raise ValueError(f"role {self.role!r} is layer-free; a "
+                                 f"layers.* constraint can never match it")
+
+    def matches(self, role: Optional[str], layer: Optional[int]) -> bool:
+        if self.role is not None and role != self.role:
+            return False
+        if self.layers is not None:
+            if layer is None:
+                return False
+            lo, hi = self.layers
+            return lo <= layer <= hi
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Ordered clauses over a default recipe; last matching clause wins."""
+
+    default: QuantConfig
+    clauses: Tuple[PolicyClause, ...] = ()
+
+    # ------------------------------------------------------------- build
+    @staticmethod
+    def uniform(cfg: QuantConfig) -> "PrecisionPolicy":
+        return PrecisionPolicy(default=cfg)
+
+    @staticmethod
+    def parse(spec, **overrides) -> "PrecisionPolicy":
+        """Parse a spec string (grammar in the module docstring).
+
+        ``spec`` may also already be a PrecisionPolicy or QuantConfig
+        (passed through / wrapped). ``overrides`` apply to every recipe
+        lookup (e.g. ``sr_grad=False``).
+        """
+        if isinstance(spec, PrecisionPolicy):
+            return spec
+        if isinstance(spec, QuantConfig):
+            return PrecisionPolicy.uniform(spec)
+        if not isinstance(spec, str) or not spec.strip():
+            raise ValueError(f"empty policy spec {spec!r}")
+
+        default: Optional[QuantConfig] = None
+        clauses = []
+        for raw in spec.split(";"):
+            part = raw.strip()
+            if not part:
+                continue
+            if "=" not in part:
+                if default is not None:
+                    raise ValueError(
+                        f"policy spec {spec!r}: second bare recipe {part!r} "
+                        f"(only the first clause may omit a site)")
+                default = recipe(part, **overrides)
+                continue
+            lhs, _, name = part.partition("=")
+            cfg = recipe(name.strip(), **overrides)
+            lhs = lhs.strip()
+            role: Optional[str] = None
+            layers: Optional[Tuple[int, int]] = None
+            if lhs.startswith("layers."):
+                rest = lhs[len("layers."):]
+                rng, _, maybe_role = rest.partition(".")
+                if maybe_role:
+                    role = maybe_role
+                lo, _, hi = rng.partition("-")
+                try:
+                    layers = (int(lo), int(hi) if hi else int(lo))
+                except ValueError:
+                    raise ValueError(
+                        f"policy spec {spec!r}: bad layer range {rng!r}"
+                    ) from None
+            else:
+                role = lhs
+            clauses.append(PolicyClause(cfg, role=role, layers=layers))
+        if default is None:
+            raise ValueError(
+                f"policy spec {spec!r} has no default recipe (first clause "
+                f"must be a bare recipe name)")
+        return PrecisionPolicy(default=default, clauses=tuple(clauses))
+
+    # ----------------------------------------------------------- resolve
+    def resolve(self, role: Optional[str] = None,
+                layer: Optional[int] = None) -> QuantConfig:
+        """The QuantConfig governing one GeMM site. Last match wins."""
+        out = self.default
+        for c in self.clauses:
+            if c.matches(role, layer):
+                out = c.cfg
+        return out
+
+    def role_table(self, layer: Optional[int]) -> Tuple[QuantConfig, ...]:
+        """Resolved recipe per ROLE at one layer (segment signature)."""
+        return tuple(self.resolve(r, layer) for r in ROLES)
+
+    @property
+    def is_layered(self) -> bool:
+        return any(c.layers is not None for c in self.clauses)
+
+    def segments(self, num_layers: int) -> Tuple[Tuple[int, int], ...]:
+        """Maximal contiguous [start, end) layer runs with identical role
+        tables — the scan partition for stacked-parameter execution. A
+        policy with no layer clauses returns the single segment (0, n)."""
+        if num_layers <= 0:
+            return ()
+        if not self.is_layered:
+            return ((0, num_layers),)
+        segs = []
+        start = 0
+        sig = self.role_table(0)
+        for i in range(1, num_layers):
+            s = self.role_table(i)
+            if s != sig:
+                segs.append((start, i))
+                start, sig = i, s
+        segs.append((start, num_layers))
+        return tuple(segs)
+
+    def describe(self, num_layers: Optional[int] = None) -> str:
+        """Human-readable summary (logged by the launchers)."""
+        lines = [f"default={self.default.mode}"]
+        for c in self.clauses:
+            site = c.role or "*"
+            if c.layers is not None:
+                lo, hi = c.layers
+                site = f"layers.{lo}-{hi}.{site}"
+            lines.append(f"{site}={c.cfg.mode}")
+        if num_layers is not None and self.is_layered:
+            lines.append(f"segments={self.segments(num_layers)}")
+        return "; ".join(lines)

@@ -9,6 +9,12 @@ projection in this framework routes through.
   averis           NVFP4 + mean-residual splitting (paper Eqs. 8-10)
   averis_hadamard  Averis + Hadamard on the residual stream (paper "combined")
 
+Every recipe is pure data: a :class:`repro.core.pipeline.GemmPlan` naming the
+per-operand stage pipelines (Center -> Hadamard -> Quantize) and mean
+cross-terms of the forward / input-grad / weight-grad GeMMs. One executor
+(``pipeline.execute_terms``) evaluates all of them — there are no per-mode
+branches in this module.
+
 W4A4G4 scope: *both operands of every GeMM* (forward, input-grad, weight-grad)
 are quantized, blocks along the contraction dim of that GeMM; stochastic
 rounding is applied to the output-gradient operand of the backward GeMMs
@@ -16,21 +22,27 @@ rounding is applied to the output-gradient operand of the backward GeMMs
 paper's quantized gradient computation directly (Eqs. 9-10 for Averis) with
 straight-through semantics across quantizers — this IS the training algorithm,
 not autodiff through the quantizer.
+
+Weight operands are prepared *outside* the custom VJP (under
+``lax.stop_gradient``; dW flows straight-through to the raw weight), which
+makes weight QDQ hoistable: ``Model.prepare_qweights`` builds the per-step
+quantized-weight cache (via :func:`prepared_weight_stack` /
+:func:`prepared_weight_single`) once per optimizer step, outside ``jax.grad``
+and the microbatch loop, and qgemm consumes it through ``prepared`` — each
+(param, plan-operand) pair is quantized exactly once per step.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import Dict, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .averis import averis_forward, averis_input_grad, averis_weight_grad, split_mean
-from .hadamard import hadamard_tiles
-from .nvfp4 import nvfp4_qdq
 from .formats import MODES
+from .pipeline import GemmPlan, PLANS, apply_stages, execute_terms, plan_for
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,12 +59,18 @@ class QuantConfig:
     qdq_dtype: str = "float32"   # dtype of the QDQ simulation chain
 
     def __post_init__(self):
-        if self.mode not in MODES:
-            raise ValueError(f"unknown quant mode {self.mode!r}; expected one of {MODES}")
+        if self.mode not in MODES and self.mode not in PLANS:
+            raise ValueError(
+                f"unknown quant mode {self.mode!r}; expected one of {MODES} "
+                f"or a registered plan ({sorted(PLANS)})")
 
     @property
     def is_quantized(self) -> bool:
         return self.mode != "bf16"
+
+    @property
+    def plan(self) -> GemmPlan:
+        return plan_for(self.mode)
 
 
 BF16 = QuantConfig(mode="bf16")
@@ -66,152 +84,84 @@ _RECIPES = {c.mode: c for c in (BF16, NVFP4, NVFP4_HADAMARD, AVERIS, AVERIS_HADA
 
 def recipe(name: str, **overrides) -> QuantConfig:
     """Look up a recipe by name, optionally overriding fields."""
-    base = _RECIPES[name]
+    base = _RECIPES.get(name, None)
+    if base is None:
+        base = QuantConfig(mode=name)   # registered custom plan
     return dataclasses.replace(base, **overrides) if overrides else base
 
 
-def _q(cfg: QuantConfig, *, sr: bool = False, key: Optional[jax.Array] = None):
-    """Quantizer closure: (t, axis) -> QDQ(t) under this recipe's block size."""
-    def quant(t, axis=-1):
-        return nvfp4_qdq(t, axis, sr=sr, key=key, block_size=cfg.block_size,
-                         compute_dtype=jnp.dtype(cfg.qdq_dtype))
-    return quant
+# --------------------------------------------------------------------------
+# Weight preparation: pipelined (quantized) weight operands
+# --------------------------------------------------------------------------
+
+def _prepare_weight(w: jax.Array, spec, cfg: QuantConfig) -> jax.Array:
+    """One weight-operand pipeline (tests wrap this to count QDQs)."""
+    return apply_stages(w, spec, cfg)
 
 
-def _qw(cfg: QuantConfig, w: jax.Array, axis: int) -> jax.Array:
-    """Weight quantization honoring cfg.quantize_weights (W4 vs bf16 weights)."""
-    if not cfg.quantize_weights:
-        return w
-    return nvfp4_qdq(w, axis, block_size=cfg.block_size,
-                     compute_dtype=jnp.dtype(cfg.qdq_dtype))
-
-
-def _dot(a, b, acc_dtype=jnp.float32):
-    return jnp.dot(a, b, preferred_element_type=acc_dtype)
-
-
-def _had(t: jax.Array, axis: int) -> jax.Array:
-    """Tiled Hadamard along ``axis``, skipped when the axis length is not a
-    multiple of 16 (padding would break the paired-transform exactness; the
-    GeMM is then computed unrotated — correct, just unsmoothed). Only ragged
-    token counts hit this; contraction dims in the model zoo are 16-aligned.
+def _prepared_weights(
+    plan: GemmPlan,
+    gemm: str,
+    w: jax.Array,
+    cfg: QuantConfig,
+    *,
+    per_expert: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """Inline-prepared arrays for each distinct weight spec of one GeMM —
+    the fallback when no per-step cache entry was passed in (inference, or
+    direct qgemm calls). ``per_expert``: ``w`` is stacked (E, m, n); the
+    pipeline is vmapped over the expert axis so every expert keeps its own
+    tensor-level amax.
     """
-    if t.shape[axis] % 16 != 0:
-        return t
-    return hadamard_tiles(t, axis)
+    out = []
+    for spec in plan.weight_specs(gemm):
+        if per_expert:
+            val = jax.vmap(lambda we, _s=spec: _prepare_weight(we, _s, cfg))(w)
+        else:
+            val = _prepare_weight(w, spec, cfg)
+        out.append(val)
+    return tuple(out)
+
+
+def _spec_map(plan: GemmPlan, gemm: str, prepared) -> Dict:
+    return dict(zip(plan.weight_specs(gemm), prepared))
 
 
 # --------------------------------------------------------------------------
 # custom_vjp core (2-D operands; the public qgemm flattens leading dims)
 # --------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _qgemm2d(cfg: QuantConfig, x: jax.Array, w: jax.Array, key: jax.Array):
-    y, _ = _qgemm2d_fwd(cfg, x, w, key)
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _qgemm2d(plan: GemmPlan, cfg: QuantConfig, x, w, wq_fwd, wq_dx, key):
+    y, _ = _qgemm2d_fwd(plan, cfg, x, w, wq_fwd, wq_dx, key)
     return y
 
 
-def _forward(cfg: QuantConfig, x, w, key):
-    mode = cfg.mode
-    acc = jnp.dtype(cfg.comm_dtype)
-    if mode == "bf16":
-        return _dot(x, w, acc).astype(x.dtype)
-    if mode == "nvfp4":
-        xq = _q(cfg)(x, axis=-1)
-        wq = _qw(cfg, w, axis=0)
-        return _dot(xq, wq, acc).astype(x.dtype)
-    if mode == "nvfp4_hadamard":
-        xq = _q(cfg)(_had(x, -1), axis=-1)
-        wq = _qw(cfg, _had(w, 0), axis=0)
-        return _dot(xq, wq, acc).astype(x.dtype)
-    if mode == "averis":
-        wq = _qw(cfg, w, axis=0)
-        return averis_forward(x, wq, _q(cfg), _q(cfg), acc_dtype=acc)
-    if mode == "averis_hadamard":
-        # Mean path uses the plain quantized weight; the residual stream gets
-        # the paired tiled-Hadamard rotation before quantization (Eq. 8 with
-        # element-space smoothing on the residual only).
-        wq_mean = _qw(cfg, w, axis=0)
-        wq_res = _qw(cfg, _had(w, 0), axis=0)
-        mu, x_r = split_mean(x, token_axis=0)
-        mu_bar = _q(cfg)(mu, axis=-1)
-        xr_bar = _q(cfg)(_had(x_r, -1), axis=-1)
-        mean_row = _dot(mu_bar, wq_mean, acc)
-        return (_dot(xr_bar, wq_res, acc) + mean_row[None, :]).astype(x.dtype)
-    raise ValueError(mode)
+def _qgemm2d_fwd(plan, cfg, x, w, wq_fwd, wq_dx, key):
+    y = execute_terms(plan.fwd, "fwd", x, w, cfg,
+                      out_dtype=x.dtype,
+                      prepared_rhs=_spec_map(plan, "fwd", wq_fwd))
+    return y, (x, w, wq_dx, key)
 
 
-def _qgemm2d_fwd(cfg: QuantConfig, x, w, key):
-    y = _forward(cfg, x, w, key)
-    return y, (x, w, key)
-
-
-def _qgemm2d_bwd(cfg: QuantConfig, res, g):
-    x, w, key = res
-    mode = cfg.mode
-    acc = jnp.dtype(cfg.comm_dtype)
+def _qgemm2d_bwd(plan, cfg, res, g):
+    x, w, wq_dx, key = res
     g = g.astype(x.dtype)
     kdx, kdw = jax.random.split(jax.random.fold_in(key, 1))
-    sr = cfg.sr_grad
 
-    if mode == "bf16":
-        dx = _dot(g, w.T, acc).astype(x.dtype)
-        dw = _dot(x.T, g, acc).astype(w.dtype)
+    dx = execute_terms(plan.dx, "dx", g, w, cfg,
+                       out_dtype=x.dtype, sr_key=kdx,
+                       prepared_rhs=_spec_map(plan, "dx", wq_dx))
+    dw = execute_terms(plan.dw, "dw", x, g, cfg,
+                       out_dtype=w.dtype, sr_key=kdw)
 
-    elif mode == "nvfp4":
-        # dX = Q_sr(D) Q(W|n)^T     (contraction dim n)
-        gq = _q(cfg, sr=sr, key=kdx)(g, axis=-1)
-        wq_n = _qw(cfg, w, axis=1)
-        dx = _dot(gq, wq_n.T, acc).astype(x.dtype)
-        # dW = Q(X|l)^T Q_sr(D|l)   (contraction dim l)
-        xq_l = _q(cfg)(x, axis=0)
-        gq_l = _q(cfg, sr=sr, key=kdw)(g, axis=0)
-        dw = _dot(xq_l.T, gq_l, acc).astype(w.dtype)
-
-    elif mode == "nvfp4_hadamard":
-        # dX: rotate along n:  (D H_n)(H_n^T W^T)
-        gq = _q(cfg, sr=sr, key=kdx)(_had(g, -1), axis=-1)
-        wq_n = _qw(cfg, _had(w, 1), axis=1)
-        dx = _dot(gq, wq_n.T, acc).astype(x.dtype)
-        # dW: rotate along l:  (H_l X)^T (H_l D)
-        xq_l = _q(cfg)(_had(x, 0), axis=0)
-        gq_l = _q(cfg, sr=sr, key=kdw)(_had(g, 0), axis=0)
-        dw = _dot(xq_l.T, gq_l, acc).astype(w.dtype)
-
-    elif mode == "averis":
-        wq_n = _qw(cfg, w, axis=1)
-        dx = averis_input_grad(g, wq_n, _q(cfg), _q(cfg, sr=sr, key=kdx),
-                               acc_dtype=acc)
-        dw = averis_weight_grad(
-            x, g, _q(cfg), _q(cfg), _q(cfg, sr=sr, key=kdw), acc_dtype=acc
-        ).astype(w.dtype)
-
-    elif mode == "averis_hadamard":
-        # Eq. 9 with Hadamard on the residual stream (contraction n).
-        mu_d, d_r = split_mean(g, token_axis=0)
-        mud_bar = _q(cfg)(mu_d, axis=-1)
-        dr_bar = _q(cfg, sr=sr, key=kdx)(_had(d_r, -1), axis=-1)
-        wq_mean_n = _qw(cfg, w, axis=1)
-        wq_res_n = _qw(cfg, _had(w, 1), axis=1)
-        mean_row = _dot(mud_bar, wq_mean_n.T, acc)
-        dx = (_dot(dr_bar, wq_res_n.T, acc) + mean_row[None, :]).astype(x.dtype)
-        # Eq. 10 with Hadamard on the residual GeMM (contraction l):
-        # (H_l X_R)^T (H_l D_R) = X_R^T D_R exactly in infinite precision.
-        lx = x.shape[0]
-        mu_x, x_r = split_mean(x, token_axis=0)
-        mux_bar = _q(cfg)(mu_x, axis=-1)
-        xr_bar = _q(cfg)(_had(x_r, 0), axis=0)
-        drl_bar = _q(cfg, sr=sr, key=kdw)(_had(d_r, 0), axis=0)
-        rank1 = lx * jnp.outer(
-            mux_bar.astype(jnp.float32), mud_bar.astype(jnp.float32)
-        ).astype(acc)
-        dw = (_dot(xr_bar.T, drl_bar, acc) + rank1).astype(w.dtype)
-
-    else:  # pragma: no cover
-        raise ValueError(mode)
-
+    # Straight-through: dW targets the raw weight; the prepared (stop-grad)
+    # QDQ'd copies get zeros, which die at the stop_gradient boundary.
     dkey = np.zeros(key.shape, dtype=jax.dtypes.float0)
-    return dx, dw, dkey
+    return (dx, dw,
+            tuple(jnp.zeros_like(w) for _ in plan.weight_specs("fwd")),
+            tuple(jnp.zeros_like(w) for _ in plan.weight_specs("dx")),
+            dkey)
 
 
 _qgemm2d.defvjp(_qgemm2d_fwd, _qgemm2d_bwd)
@@ -221,29 +171,119 @@ _qgemm2d.defvjp(_qgemm2d_fwd, _qgemm2d_bwd)
 # Public API
 # --------------------------------------------------------------------------
 
-def qgemm(x: jax.Array, w: jax.Array, cfg: QuantConfig, key: jax.Array) -> jax.Array:
+def qgemm(x: jax.Array, w: jax.Array, cfg: QuantConfig, key: jax.Array,
+          prepared=None) -> jax.Array:
     """Quantized ``x @ w`` for ``x`` of shape (..., m) and ``w`` of (m, n).
 
     All leading dims of ``x`` are flattened into the token axis l — the Averis
     column mean is taken over every token in the GeMM, exactly as the paper
-    reshapes (b, s, m) -> (l, m).
+    reshapes (b, s, m) -> (l, m). ``w`` is the raw parameter (cast to
+    ``x.dtype`` here, not at call sites). ``prepared`` supplies externally
+    pre-quantized weight operands ``(wq_fwd_tuple, wq_dx_tuple)`` from the
+    per-step cache (see :func:`prepared_weight_stack`); without it the
+    weight pipelines run inline.
     """
     m = w.shape[0]
     if x.shape[-1] != m:
         raise ValueError(f"qgemm: x[...,{x.shape[-1]}] @ w[{m},...] mismatch")
+    plan = plan_for(cfg.mode)
     lead = x.shape[:-1]
     x2 = x.reshape((-1, m))
-    y2 = _qgemm2d(cfg, x2, w, key)
+    wc = w if w.dtype == x.dtype else w.astype(x.dtype)
+    if prepared is not None:
+        wq_fwd, wq_dx = prepared
+        assert (len(wq_fwd) == len(plan.weight_specs("fwd"))
+                and len(wq_dx) == len(plan.weight_specs("dx"))), (
+            "prepared weights do not match the plan (policy/site-map skew?)")
+    else:
+        wq_fwd = jax.lax.stop_gradient(
+            _prepared_weights(plan, "fwd", wc, cfg))
+        wq_dx = jax.lax.stop_gradient(
+            _prepared_weights(plan, "dx", wc, cfg))
+    y2 = _qgemm2d(plan, cfg, x2, wc, wq_fwd, wq_dx, key)
     return y2.reshape(lead + (w.shape[1],))
 
 
 def qgemm_expert(
-    x: jax.Array, w: jax.Array, cfg: QuantConfig, key: jax.Array
+    x: jax.Array, w: jax.Array, cfg: QuantConfig, key: jax.Array,
+    prepared=None,
 ) -> jax.Array:
     """Per-expert quantized GeMM: x (E, C, m) @ w (E, m, n) -> (E, C, n).
 
     Each expert's dispatched token group forms its own ``l`` axis, so the
-    Averis mean is computed per expert group (DESIGN.md §5, MoE row).
+    Averis mean is computed per expert group (DESIGN.md §5, MoE row). Expert
+    weights are prepared on the stacked array (vmapped, per-expert amax)
+    before the vmapped GeMM core, so the per-step cache covers experts too.
     """
+    plan = plan_for(cfg.mode)
     keys = jax.random.split(key, w.shape[0])
-    return jax.vmap(lambda xe, we, ke: _qgemm2d(cfg, xe, we, ke))(x, w, keys)
+    wc = w if w.dtype == x.dtype else w.astype(x.dtype)
+    if prepared is not None:
+        wq_fwd, wq_dx = prepared
+        assert (len(wq_fwd) == len(plan.weight_specs("fwd"))
+                and len(wq_dx) == len(plan.weight_specs("dx"))), (
+            "prepared weights do not match the plan (policy/site-map skew?)")
+    else:
+        wq_fwd = jax.lax.stop_gradient(
+            _prepared_weights(plan, "fwd", wc, cfg, per_expert=True))
+        wq_dx = jax.lax.stop_gradient(
+            _prepared_weights(plan, "dx", wc, cfg, per_expert=True))
+    return jax.vmap(
+        lambda xe, we, wqf, wqd, ke: _qgemm2d(plan, cfg, xe, we, wqf, wqd, ke)
+    )(x, wc, wq_fwd, wq_dx, keys)
+
+
+def prepared_weight_stack(
+    stacked: jax.Array,
+    seg: Tuple[int, int],
+    cfg: QuantConfig,
+    compute_dtype,
+    *,
+    per_expert: bool = False,
+):
+    """Pre-quantize one stacked (L, ...) weight leaf for a layer segment.
+
+    Returns ``(wq_fwd_tuple, wq_dx_tuple)`` whose arrays carry a leading
+    segment-layer axis — fed to ``lax.scan`` as xs so each iteration picks
+    up its layer's prepared operands. The pipeline is vmapped over the layer
+    (and expert) axes, preserving per-layer(-expert) tensor amax: slicing a
+    vmapped QDQ is bitwise the QDQ of the slice. Called by
+    ``Model.prepare_qweights`` once per optimizer step, *outside*
+    ``jax.grad`` and the microbatch loop — inside them, weights are fresh
+    per-trace tracers and nothing can be hoisted.
+    """
+    plan = plan_for(cfg.mode)
+    s0, s1 = seg
+    out = []
+    for gemm in ("fwd", "dx"):
+        vals = []
+        for spec in plan.weight_specs(gemm):
+            wseg = stacked[s0:s1].astype(compute_dtype)
+            prep = lambda we, _s=spec: _prepare_weight(we, _s, cfg)
+            if per_expert:
+                prep = jax.vmap(prep)            # expert axis under layer axis
+            vals.append(jax.lax.stop_gradient(jax.vmap(prep)(wseg)))
+        out.append(tuple(vals))
+    return tuple(out)
+
+
+def prepared_weight_single(w: jax.Array, cfg: QuantConfig, compute_dtype):
+    """Prepared ``(wq_fwd_tuple, wq_dx_tuple)`` for one unstacked weight
+    (the lm_head path of ``Model.prepare_qweights``)."""
+    plan = plan_for(cfg.mode)
+    wc = w.astype(compute_dtype)
+    return tuple(
+        tuple(jax.lax.stop_gradient(_prepare_weight(wc, spec, cfg))
+              for spec in plan.weight_specs(gemm))
+        for gemm in ("fwd", "dx")
+    )
+
+
+def gemm_plan_summary(cfg: QuantConfig, x_shape, w_shape) -> Dict:
+    """Static plan summary (stages + ``skipped_hadamard`` flags) for a recipe
+    at concrete 2-D operand shapes; see ``pipeline.plan_summary``."""
+    from .pipeline import plan_summary
+
+    lead = int(np.prod(x_shape[:-1])) if len(x_shape) > 1 else 1
+    return plan_summary(plan_for(cfg.mode), (lead, x_shape[-1]),
+                        tuple(w_shape))

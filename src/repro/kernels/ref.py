@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.core.formats import E2M1_MAX, TENSOR_SCALE_DENOM
 from repro.core.hadamard import hadamard_tiles
-from repro.core.nvfp4 import _quantize_scale_e4m3, round_e2m1_rn, round_e2m1_sr
+from repro.core.nvfp4 import quantize_block_scales, round_e2m1_rn, round_e2m1_sr
 
 _EPS = 1e-30
 
@@ -37,7 +37,9 @@ def nvfp4_qdq_2d_ref(
     xb = xf.reshape(l, -1, block_size)
     absx = jnp.abs(xb)
     s_t = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))) / TENSOR_SCALE_DENOM, _EPS)
-    s_b = _quantize_scale_e4m3(jnp.max(absx, axis=-1, keepdims=True) / (E2M1_MAX * s_t))
+    s_b = quantize_block_scales(
+        jnp.max(absx, axis=-1, keepdims=True), s_t
+    ).astype(jnp.float32)
     scale = s_b * s_t
     a = jnp.where(scale > 0, absx / jnp.maximum(scale, _EPS), 0.0)
     if bits is None:
@@ -71,7 +73,9 @@ def mean_split_qdq_2d_ref(
     xb = xr.reshape(l, -1, block_size)
     absx = jnp.abs(xb)
     s_t = jnp.maximum(residual_amax.astype(jnp.float32) / TENSOR_SCALE_DENOM, _EPS)
-    s_b = _quantize_scale_e4m3(jnp.max(absx, axis=-1, keepdims=True) / (E2M1_MAX * s_t))
+    s_b = quantize_block_scales(
+        jnp.max(absx, axis=-1, keepdims=True), s_t
+    ).astype(jnp.float32)
     scale = s_b * s_t
     a = jnp.where(scale > 0, absx / jnp.maximum(scale, _EPS), 0.0)
     if bits is None:

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ALL_ARCHS, get_config, reduced
-from repro.core.qgemm import recipe
+from repro.core.policy import PrecisionPolicy
 from repro.models.layers import QuantCtx
 from repro.models.model import Model
 from repro.serve import Engine, EngineConfig
@@ -40,7 +40,7 @@ def generate(model: Model, params, tokens, gen: int, quant_mode: str,
     ``repro.serve.sampling`` (shared with the engine).
     """
     key = key if key is not None else jax.random.key(seed)
-    ctx = QuantCtx(recipe(quant_mode), key)
+    ctx = QuantCtx(PrecisionPolicy.parse(quant_mode), key)
     b, s = tokens.shape
     temps = jnp.full((b,), temperature, jnp.float32)
     topks = jnp.full((b,), top_k, jnp.int32)

@@ -37,7 +37,12 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen3-0.6b", choices=ALL_ARCHS)
     ap.add_argument("--reduced", action="store_true",
                     help="use the reduced (CPU-sized) config")
-    ap.add_argument("--quant", default="averis")
+    ap.add_argument("--quant", default="averis",
+                    help="uniform recipe shorthand (bf16/nvfp4/averis/...)")
+    ap.add_argument("--quant-policy", default="",
+                    help="per-site PrecisionPolicy spec, overrides --quant; "
+                         "e.g. 'averis;lm_head=bf16;layers.0-1=nvfp4_hadamard'"
+                         " (grammar: repro/core/policy.py)")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
@@ -57,12 +62,16 @@ def main() -> None:
     model = Model(cfg)
     tcfg = TrainConfig(
         quant_mode=args.quant,
+        quant_policy=args.quant_policy,
         microbatches=args.micro,
         grad_compression=args.grad_compression,
         optimizer=adamw.OptimizerConfig(
             peak_lr=args.lr, warmup_steps=args.warmup, total_steps=args.steps
         ),
     )
+    from repro.train.trainer import resolve_policy
+    logging.info("precision policy: %s",
+                 resolve_policy(tcfg, model).describe(cfg.num_layers))
     stream = make_stream(cfg, DataConfig(seed=args.seed,
                                          batch_size=args.batch,
                                          seq_len=args.seq,

@@ -107,9 +107,9 @@ def gqa_defs(cfg: ModelConfig) -> Dict[str, Param]:
 def _project_qkv(p, x, ctx: QuantCtx, cfg: ModelConfig):
     b, s, _ = x.shape
     nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    q = ctx.gemm(x, p["wq"], site=1)
-    k = ctx.gemm(x, p["wk"], site=2)
-    v = ctx.gemm(x, p["wv"], site=3)
+    q = ctx.gemm(x, p["wq"], site=1, role="attn_qkv")
+    k = ctx.gemm(x, p["wk"], site=2, role="attn_qkv")
+    v = ctx.gemm(x, p["wv"], site=3, role="attn_qkv")
     if cfg.qkv_bias:
         q = q + p["bq"].astype(q.dtype)
         k = k + p["bk"].astype(k.dtype)
@@ -193,7 +193,7 @@ def gqa_apply(
                              softmax_dtype=smd)
 
     out = out.reshape(b, s, cfg.num_heads * hd)
-    y = ctx.gemm(out, p["wo"], site=4)
+    y = ctx.gemm(out, p["wo"], site=4, role="attn_o")
     return y, new_cache
 
 
@@ -224,8 +224,8 @@ def _mla_q(p, x, ctx, cfg, positions):
     b, s, _ = x.shape
     nh = cfg.num_heads
     dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
-    cq = rms_norm(ctx.gemm(x, p["wq_a"], site=1), p["q_ln"])
-    q = ctx.gemm(cq, p["wq_b"], site=2).reshape(b, s, nh, dn + dr)
+    cq = rms_norm(ctx.gemm(x, p["wq_a"], site=1, role="attn_qkv"), p["q_ln"])
+    q = ctx.gemm(cq, p["wq_b"], site=2, role="attn_qkv").reshape(b, s, nh, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     cos, sin = rope_angles(positions, dr, cfg.rope_theta)
     q_rope = apply_rope(q_rope, cos, sin)
@@ -251,12 +251,12 @@ def mla_apply(
 
     if cache is None:
         # Train / prefill: materialize per-head K, V from the latent.
-        ckv = ctx.gemm(x, p["wkv_a"], site=3)
+        ckv = ctx.gemm(x, p["wkv_a"], site=3, role="attn_qkv")
         c, k_rope = ckv[..., :rkv], ckv[..., rkv:]
         c = rms_norm(c, p["kv_ln"])
         cos, sin = rope_angles(positions, dr, cfg.rope_theta)
         k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # (b,s,1,dr)
-        kv = ctx.gemm(c, p["wkv_b"], site=4).reshape(b, s, nh, dn + dv)
+        kv = ctx.gemm(c, p["wkv_b"], site=4, role="attn_qkv").reshape(b, s, nh, dn + dv)
         k_nope, v = kv[..., :dn], kv[..., dn:]
         k = jnp.concatenate(
             [k_nope, jnp.broadcast_to(k_rope, (b, s, nh, dr))], axis=-1
@@ -265,7 +265,7 @@ def mla_apply(
         qpos = positions
         out = attention_core(q, k, v, qpos, qpos[0], cfg.causal,
                              softmax_dtype=jnp.dtype(cfg.attn_softmax_dtype))
-        y = ctx.gemm(out.reshape(b, s, nh * dv), p["wo"], site=5)
+        y = ctx.gemm(out.reshape(b, s, nh * dv), p["wo"], site=5, role="attn_o")
         new_cache = {"c": c, "kr": k_rope[:, :, 0, :]}
         return y, new_cache
 
@@ -273,7 +273,7 @@ def mla_apply(
     # einsums contract per-head (not plain 2-D GeMMs); they run in bf16 —
     # serving-path only, outside the paper's W4A4G4 training scope.
     assert s == 1 and decode_pos is not None
-    ckv = ctx.gemm(x, p["wkv_a"], site=3)
+    ckv = ctx.gemm(x, p["wkv_a"], site=3, role="attn_qkv")
     c_new, kr_new = ckv[..., :rkv], ckv[..., rkv:]
     c_new = rms_norm(c_new, p["kv_ln"])
     cos, sin = rope_angles(positions, dr, cfg.rope_theta)
@@ -300,7 +300,7 @@ def mla_apply(
                        preferred_element_type=jnp.float32).astype(x.dtype)
     out = jnp.einsum("bqnr,rnd->bqnd", ctx_c, w_v,
                      preferred_element_type=jnp.float32).astype(x.dtype)
-    y = ctx.gemm(out.reshape(b, s, nh * dv), p["wo"], site=5)
+    y = ctx.gemm(out.reshape(b, s, nh * dv), p["wo"], site=5, role="attn_o")
     return y, new_cache
 
 

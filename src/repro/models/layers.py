@@ -13,6 +13,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.policy import PrecisionPolicy
 from repro.core.qgemm import QuantConfig, qgemm
 from repro.parallel.sharding import constrain
 
@@ -82,16 +83,67 @@ def shape_tree(defs: Dict[str, Any], prepend: Tuple[int, ...] = ()):
 
 @dataclasses.dataclass
 class QuantCtx:
-    """Carries the quant recipe + a PRNG key; ``site`` disambiguates SR streams."""
+    """Routes every weight GeMM through the per-site precision policy.
 
-    cfg: QuantConfig
+    ``policy`` maps (role, layer) -> QuantConfig (a bare QuantConfig is
+    wrapped as a uniform policy for back-compat); ``key`` seeds the SR
+    streams with ``site`` disambiguating GeMMs inside one block; ``layer``
+    is the static layer index of the current scan segment (None outside the
+    stack).
+
+    ``path`` is the static tag chain accumulated through :meth:`child` —
+    together with ``site`` it addresses one GeMM call site
+    (``transformer.gemm_weight_sites``). ``prepared`` maps those addresses
+    to this layer's pre-quantized weight operands, and ``qweights`` is the
+    whole per-step quantized-weight cache (``Model.prepare_qweights``
+    output: built once per optimizer step, outside ``jax.grad`` and the
+    microbatch loop, because weight tracers inside those are per-trace and
+    nothing computed there can be hoisted).
+    """
+
+    policy: PrecisionPolicy
     key: jax.Array
+    layer: Optional[int] = None
+    path: Tuple[int, ...] = ()
+    prepared: Optional[Dict] = None
+    qweights: Optional[Dict] = None
 
-    def gemm(self, x: jax.Array, w: jax.Array, site: int) -> jax.Array:
-        return qgemm(x, w.astype(x.dtype), self.cfg, jax.random.fold_in(self.key, site))
+    def __post_init__(self):
+        if isinstance(self.policy, QuantConfig):
+            self.policy = PrecisionPolicy.uniform(self.policy)
+
+    @property
+    def cfg(self) -> QuantConfig:
+        """The policy's default recipe (site-independent back-compat view)."""
+        return self.policy.default
+
+    def resolve(self, role: Optional[str]) -> QuantConfig:
+        return self.policy.resolve(role, self.layer)
+
+    def _prep(self, site: int):
+        if self.prepared is None:
+            return None
+        return self.prepared.get(self.path + (site,))
+
+    def gemm(self, x: jax.Array, w: jax.Array, site: int,
+             role: Optional[str] = None, prepared=None) -> jax.Array:
+        return qgemm(x, w, self.resolve(role),
+                     jax.random.fold_in(self.key, site),
+                     prepared=prepared if prepared is not None
+                     else self._prep(site))
+
+    def gemm_expert(self, x: jax.Array, w: jax.Array, site: int,
+                    role: Optional[str] = None) -> jax.Array:
+        from repro.core.qgemm import qgemm_expert
+
+        return qgemm_expert(x, w, self.resolve(role),
+                            jax.random.fold_in(self.key, site),
+                            prepared=self._prep(site))
 
     def child(self, tag: int) -> "QuantCtx":
-        return QuantCtx(self.cfg, jax.random.fold_in(self.key, tag))
+        return QuantCtx(self.policy, jax.random.fold_in(self.key, tag),
+                        layer=self.layer, path=self.path + (tag,),
+                        prepared=self.prepared, qweights=self.qweights)
 
 
 # --------------------------------------------------------------------------
@@ -169,12 +221,12 @@ def ffn_defs(d_model: int, d_ff: int, ffn_type: str) -> Dict[str, Param]:
 
 def ffn_apply(p, x: jax.Array, ctx: QuantCtx, ffn_type: str) -> jax.Array:
     if ffn_type == "swiglu":
-        g = ctx.gemm(x, p["w_gate"], site=20)
-        u = ctx.gemm(x, p["w_up"], site=21)
+        g = ctx.gemm(x, p["w_gate"], site=20, role="mlp_up")
+        u = ctx.gemm(x, p["w_up"], site=21, role="mlp_up")
         h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
         h = constrain(h, ("batch", "seq", "mlp"))
-        return ctx.gemm(h, p["w_down"], site=22)
-    u = ctx.gemm(x, p["w_up"], site=21)
+        return ctx.gemm(h, p["w_down"], site=22, role="mlp_down")
+    u = ctx.gemm(x, p["w_up"], site=21, role="mlp_up")
     h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
     h = constrain(h, ("batch", "seq", "mlp"))
-    return ctx.gemm(h, p["w_down"], site=22)
+    return ctx.gemm(h, p["w_down"], site=22, role="mlp_down")

@@ -132,78 +132,171 @@ class Model:
         return self._run_attn(params, x, positions, ctx, mode, caches,
                               decode_pos, chunk_valid)
 
+    def _segments(self, ctx: QuantCtx):
+        """Policy-uniform contiguous layer runs (one run == one scan).
+
+        Layers are scanned over stacked params, so a per-layer recipe can't
+        branch inside the scan body; instead the stack is partitioned into
+        maximal runs whose (role -> recipe) table is constant and each run
+        is scanned with its own statically-resolved QuantCtx. A uniform
+        policy yields the single pre-policy scan.
+        """
+        return ctx.policy.segments(self.cfg.num_layers)
+
+    def prepare_qweights(self, params, policy) -> Dict[str, Any]:
+        """The per-step quantized-weight cache: pre-quantize every weight-GeMM
+        operand of the model once, keyed by (param site, plan operand).
+
+        Must be called *outside* ``jax.grad`` and the gradient-accumulation
+        loop (the trainer calls it once per optimizer step): inside them,
+        params are fresh per-trace tracers and weight QDQ can never be
+        reused. The returned tree is threaded through ``QuantCtx.qweights``;
+        stacked-layer entries flow into each segment's ``lax.scan`` as xs
+        (per-layer QDQ inside a scan body would otherwise re-run every
+        microbatch — the hot-path waste this cache removes). Layout::
+
+            {"segments": {(s0, s1): {site_path: (wq_fwd..., wq_dx...)}},
+             "lm_head": (wq_fwd..., wq_dx...)}        # when quantized
+
+        The hybrid (shared-attention) family keeps inline weight QDQ for its
+        scanned SSM groups (its group scan is not segment-partitioned).
+        """
+        from repro.core.policy import PrecisionPolicy
+        from repro.core.qgemm import (prepared_weight_single,
+                                      prepared_weight_stack)
+        from .transformer import gemm_weight_sites
+
+        cfg = self.cfg
+        policy = PrecisionPolicy.parse(policy)
+        cdt = jnp.dtype(cfg.compute_dtype)
+        out: Dict[str, Any] = {"segments": {}}
+        if cfg.family != "hybrid":
+            sites = gemm_weight_sites(cfg)
+            for s0, s1 in policy.segments(cfg.num_layers):
+                seg: Dict[Tuple[int, ...], Any] = {}
+                for gpath, (role, ppath, per_expert) in sites.items():
+                    leaf = params["layers"]
+                    for k in ppath:
+                        leaf = leaf[k]
+                    seg[gpath] = prepared_weight_stack(
+                        leaf, (s0, s1), policy.resolve(role, s0), cdt,
+                        per_expert=per_expert)
+                out["segments"][(s0, s1)] = seg
+        if cfg.quantize_lm_head:
+            w = params["embed"].T if cfg.tie_embeddings else params["head"]
+            out["lm_head"] = prepared_weight_single(
+                w, policy.resolve("lm_head", None), cdt)
+        return out
+
+    def _segment_qweights(self, ctx: QuantCtx, s0: int, s1: int):
+        """One segment's stacked prepared weights from the per-step cache
+        (None -> inline QDQ, the inference/no-cache path)."""
+        if ctx.qweights is None:
+            return None
+        return ctx.qweights["segments"].get((s0, s1))
+
     def _run_attn(self, params, x, positions, ctx, mode, caches, decode_pos,
                   chunk_valid=None):
         cfg = self.cfg
 
-        def layer(x, p_l, cache_l, idx):
-            lctx = QuantCtx(ctx.cfg, jax.random.fold_in(ctx.key, idx))
+        def layer(x, p_l, prep_l, cache_l, idx, seg_start):
+            lctx = QuantCtx(ctx.policy, jax.random.fold_in(ctx.key, idx),
+                            layer=seg_start, prepared=prep_l)
             return attn_ffn_block_apply(
                 p_l, x, positions, lctx, cfg, cache_l, decode_pos,
                 self.adapter, chunk_valid,
             )
 
         if mode == "train":
-            fn = self._maybe_remat(
-                lambda x, p_l, idx: layer(x, p_l, None, idx)[::2]
+            aux_total = jnp.zeros((), jnp.float32)
+            for s0, s1 in self._segments(ctx):
+                prepped = self._segment_qweights(ctx, s0, s1)
+                fn = self._maybe_remat(
+                    lambda x, p_l, prep_l, idx, _s0=s0: layer(
+                        x, p_l, prep_l, None, idx, _s0)[::2]
+                )
+
+                def body(c, xs, _fn=fn):
+                    p_l, prep_l, idx = xs
+                    xo, aux = _fn(c, p_l, prep_l, idx)
+                    return xo, aux
+
+                x, auxs = jax.lax.scan(
+                    body, x,
+                    (_slice_layers(params["layers"], s0, s1), prepped,
+                     jnp.arange(s0, s1)),
+                )
+                aux_total = aux_total + jnp.sum(auxs)
+            return x, None, aux_total
+
+        new_cache_segs, aux_total = [], jnp.zeros((), jnp.float32)
+        for s0, s1 in self._segments(ctx):
+            prepped = self._segment_qweights(ctx, s0, s1)
+
+            def body(c, xs, _s0=s0):
+                p_l, prep_l, cache_l, idx = xs
+                xo, new_cache, aux = layer(c, p_l, prep_l, cache_l, idx, _s0)
+                return xo, (new_cache, aux)
+
+            x, (nc, auxs) = jax.lax.scan(
+                body, x,
+                (_slice_layers(params["layers"], s0, s1), prepped,
+                 _slice_layers(caches, s0, s1),
+                 jnp.arange(s0, s1)),
             )
-
-            def body(c, xs):
-                p_l, idx = xs
-                xo, aux = fn(c, p_l, idx)
-                return xo, aux
-
-            x, auxs = jax.lax.scan(
-                body, x, (params["layers"], jnp.arange(cfg.num_layers))
-            )
-            return x, None, jnp.sum(auxs)
-
-        def body(c, xs):
-            p_l, cache_l, idx = xs
-            xo, new_cache, aux = layer(c, p_l, cache_l, idx)
-            return xo, (new_cache, aux)
-
-        cache_xs = (
-            caches if caches is not None
-            else _none_tree(cfg.num_layers)
-        )
-        x, (new_caches, auxs) = jax.lax.scan(
-            body, x, (params["layers"], cache_xs, jnp.arange(cfg.num_layers))
-        )
-        return x, new_caches, jnp.sum(auxs)
+            new_cache_segs.append(nc)
+            aux_total = aux_total + jnp.sum(auxs)
+        return x, _concat_layers(new_cache_segs), aux_total
 
     def _run_ssm(self, params, x, ctx, mode, caches):
         cfg = self.cfg
 
-        def layer(x, p_l, cache_l, idx):
-            lctx = QuantCtx(ctx.cfg, jax.random.fold_in(ctx.key, idx))
+        def layer(x, p_l, prep_l, cache_l, idx, seg_start):
+            lctx = QuantCtx(ctx.policy, jax.random.fold_in(ctx.key, idx),
+                            layer=seg_start, prepared=prep_l)
             return ssm_block_apply(p_l, x, lctx, cfg, cache_l)
 
         if mode == "train":
-            fn = self._maybe_remat(lambda x, p_l, idx: layer(x, p_l, None, idx)[0])
+            for s0, s1 in self._segments(ctx):
+                prepped = self._segment_qweights(ctx, s0, s1)
+                fn = self._maybe_remat(
+                    lambda x, p_l, prep_l, idx, _s0=s0: layer(
+                        x, p_l, prep_l, None, idx, _s0)[0]
+                )
 
-            def body(c, xs):
-                p_l, idx = xs
-                return fn(c, p_l, idx), None
+                def body(c, xs, _fn=fn):
+                    p_l, prep_l, idx = xs
+                    return _fn(c, p_l, prep_l, idx), None
 
-            x, _ = jax.lax.scan(
-                body, x, (params["layers"], jnp.arange(cfg.num_layers))
-            )
+                x, _ = jax.lax.scan(
+                    body, x,
+                    (_slice_layers(params["layers"], s0, s1), prepped,
+                     jnp.arange(s0, s1)),
+                )
             return x, None, jnp.zeros((), jnp.float32)
 
-        def body(c, xs):
-            p_l, cache_l, idx = xs
-            xo, new_cache = layer(c, p_l, cache_l, idx)
-            return xo, new_cache
+        new_cache_segs = []
+        for s0, s1 in self._segments(ctx):
+            def body(c, xs, _s0=s0):
+                p_l, cache_l, idx = xs
+                xo, new_cache = layer(c, p_l, None, cache_l, idx, _s0)
+                return xo, new_cache
 
-        cache_xs = caches if caches is not None else _none_tree(cfg.num_layers)
-        x, new_caches = jax.lax.scan(
-            body, x, (params["layers"], cache_xs, jnp.arange(cfg.num_layers))
-        )
-        return x, new_caches, jnp.zeros((), jnp.float32)
+            x, nc = jax.lax.scan(
+                body, x,
+                (_slice_layers(params["layers"], s0, s1),
+                 _slice_layers(caches, s0, s1),
+                 jnp.arange(s0, s1)),
+            )
+            new_cache_segs.append(nc)
+        return x, _concat_layers(new_cache_segs), jnp.zeros((), jnp.float32)
 
     def _run_hybrid(self, params, x, positions, ctx, mode, caches, decode_pos):
         cfg = self.cfg
+        if len(self._segments(ctx)) > 1:
+            raise NotImplementedError(
+                "per-layer precision policies are not supported for the "
+                "hybrid (shared-attention) stack; use role-level clauses")
         every = cfg.hybrid_attn_every
         groups = cfg.num_layers // every
         layers_g = jax.tree.map(
@@ -214,7 +307,9 @@ class Model:
         def group(x, p_g, ssm_cache_g, shared_cache_g, gidx):
             def inner(c, xs):
                 p_l, cache_l, li = xs
-                lctx = QuantCtx(ctx.cfg, jax.random.fold_in(ctx.key, gidx * every + li))
+                lctx = QuantCtx(ctx.policy,
+                                jax.random.fold_in(ctx.key, gidx * every + li),
+                                layer=0)
                 xo, new_cache = ssm_block_apply(p_l, c, lctx, cfg, cache_l)
                 return xo, new_cache
 
@@ -224,7 +319,9 @@ class Model:
             x, new_ssm = jax.lax.scan(
                 inner, x, (p_g, inner_caches, jnp.arange(every))
             )
-            sctx = QuantCtx(ctx.cfg, jax.random.fold_in(ctx.key, 10_000 + gidx))
+            sctx = QuantCtx(ctx.policy,
+                            jax.random.fold_in(ctx.key, 10_000 + gidx),
+                            layer=0)
             x, new_shared, _ = attn_ffn_block_apply(
                 shared, x, positions, sctx, cfg, shared_cache_g, decode_pos,
                 self.adapter,
@@ -280,7 +377,9 @@ class Model:
         x = rms_norm(x, params["final_norm"])
         w = params["embed"].T if cfg.tie_embeddings else params["head"]
         if cfg.quantize_lm_head:
-            logits = ctx.child(99).gemm(x, w, site=0)
+            prep = (ctx.qweights or {}).get("lm_head")
+            logits = ctx.child(99).gemm(x, w, site=0, role="lm_head",
+                                        prepared=prep)
         else:
             logits = jnp.einsum(
                 "bsd,dv->bsv", x, w.astype(x.dtype),
@@ -492,7 +591,23 @@ def _none_tree(n: int):
     return None
 
 
-def make_quant_ctx(mode: str, key: jax.Array, **overrides) -> QuantCtx:
-    from repro.core.qgemm import recipe
+def _slice_layers(tree, s0: int, s1: int):
+    """Slice a stacked (L, ...) pytree to one policy segment (None passes)."""
+    if tree is None:
+        return None
+    return jax.tree.map(lambda a: a[s0:s1], tree)
 
-    return QuantCtx(recipe(mode, **overrides), key)
+
+def _concat_layers(segs):
+    """Re-stack per-segment scan outputs along the layer axis."""
+    if len(segs) == 1:
+        return segs[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *segs)
+
+
+def make_quant_ctx(spec: str, key: jax.Array, **overrides) -> QuantCtx:
+    """QuantCtx from a recipe name or a full PrecisionPolicy spec string
+    (``"averis;lm_head=bf16;layers.0-1=nvfp4_hadamard"``)."""
+    from repro.core.policy import PrecisionPolicy
+
+    return QuantCtx(PrecisionPolicy.parse(spec, **overrides), key)

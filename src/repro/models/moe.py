@@ -21,7 +21,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.qgemm import qgemm_expert
 from repro.parallel.sharding import constrain
 from .layers import Param, QuantCtx
 
@@ -105,14 +104,11 @@ def moe_apply(
 
     # --- expert FFN (quantized; per-expert Averis mean over dispatched rows) --
     ectx = ctx.child(31)
-    h_g = qgemm_expert(x_e, p["w_gate"].astype(x.dtype), ectx.cfg,
-                       jax.random.fold_in(ectx.key, 1))
-    h_u = qgemm_expert(x_e, p["w_up"].astype(x.dtype), ectx.cfg,
-                       jax.random.fold_in(ectx.key, 2))
+    h_g = ectx.gemm_expert(x_e, p["w_gate"], site=1, role="moe")
+    h_u = ectx.gemm_expert(x_e, p["w_up"], site=2, role="moe")
     h = jax.nn.silu(h_g.astype(jnp.float32)).astype(x.dtype) * h_u
     h = constrain(h, ("expert", "moe_tokens", "mlp"))
-    y_e = qgemm_expert(h, p["w_down"].astype(x.dtype), ectx.cfg,
-                       jax.random.fold_in(ectx.key, 3))          # (e,g*cap,d)
+    y_e = ectx.gemm_expert(h, p["w_down"], site=3, role="moe")   # (e,g*cap,d)
 
     y_e = y_e.reshape(e, g, cap, d)
     # combine: <=k weighted terms per token — bf16-safe

@@ -119,7 +119,7 @@ def ssm_apply(
     b, s, _ = x.shape
     di, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
 
-    zxbcdt = ctx.gemm(x, p["in_proj"], site=10)
+    zxbcdt = ctx.gemm(x, p["in_proj"], site=10, role="ssm_in")
     z = zxbcdt[..., :di]
     xbc = zxbcdt[..., di : 2 * di + 2 * ns]
     dt_raw = zxbcdt[..., 2 * di + 2 * ns :]
@@ -167,7 +167,7 @@ def ssm_apply(
     y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(b, s, di).astype(x.dtype)
     y = gated_rms_norm(y, z, p["norm"])
-    out = ctx.gemm(y, p["out_proj"], site=11)
+    out = ctx.gemm(y, p["out_proj"], site=11, role="ssm_out")
 
     # new conv tail: last (width-1) raw xbc inputs
     width = cfg.ssm_conv_width

@@ -45,6 +45,54 @@ def block_defs(cfg: ModelConfig) -> Dict[str, Any]:
     return block
 
 
+def gemm_weight_sites(cfg: ModelConfig):
+    """Static map of every weight GeMM inside one scanned layer block.
+
+    ``(QuantCtx tag path + site) -> (role, param path in block_defs,
+    per_expert)``. This is what lets the model pre-quantize the whole layer
+    stack *outside* the ``lax.scan`` (per-step weight cache): weights seen
+    inside a scan body are per-iteration tracers, so any hoisting must
+    happen on the stacked (L, ...) params before the scan — the tag path
+    addresses each call site so the scan body can pick up its prepared
+    arrays from the scanned-in side tree. Must stay in sync with the
+    ``ctx.child(tag)`` / ``ctx.gemm(site=...)`` literals in
+    attention.py / layers.py / moe.py / ssm.py (tested in test_policy.py).
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        return {
+            (1, 10): ("ssm_in", ("mixer", "in_proj"), False),
+            (1, 11): ("ssm_out", ("mixer", "out_proj"), False),
+        }
+    sites: Dict[Tuple[int, ...], Tuple[str, Tuple[str, ...], bool]] = {}
+    if cfg.attention == "mla":
+        sites.update({
+            (1, 1): ("attn_qkv", ("attn", "wq_a"), False),
+            (1, 2): ("attn_qkv", ("attn", "wq_b"), False),
+            (1, 3): ("attn_qkv", ("attn", "wkv_a"), False),
+            (1, 4): ("attn_qkv", ("attn", "wkv_b"), False),
+            (1, 5): ("attn_o", ("attn", "wo"), False),
+        })
+    elif cfg.attention == "gqa":
+        sites.update({
+            (1, 1): ("attn_qkv", ("attn", "wq"), False),
+            (1, 2): ("attn_qkv", ("attn", "wk"), False),
+            (1, 3): ("attn_qkv", ("attn", "wv"), False),
+            (1, 4): ("attn_o", ("attn", "wo"), False),
+        })
+    if cfg.family == "moe":
+        sites.update({
+            (2, 31, 1): ("moe", ("moe", "w_gate"), True),
+            (2, 31, 2): ("moe", ("moe", "w_up"), True),
+            (2, 31, 3): ("moe", ("moe", "w_down"), True),
+        })
+    else:
+        if cfg.ffn_type == "swiglu":
+            sites[(2, 20)] = ("mlp_up", ("ffn", "w_gate"), False)
+        sites[(2, 21)] = ("mlp_up", ("ffn", "w_up"), False)
+        sites[(2, 22)] = ("mlp_down", ("ffn", "w_down"), False)
+    return sites
+
+
 def shared_block_defs(cfg: ModelConfig) -> Dict[str, Any]:
     """Zamba2's shared attention+FFN block (one copy, reused every k layers)."""
     d = cfg.d_model

@@ -46,7 +46,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.qgemm import recipe
+from repro.core.policy import PrecisionPolicy
 from repro.models.layers import QuantCtx
 from repro.models.model import Model
 
@@ -94,7 +94,9 @@ class EngineConfig:
     page_size: int = 64              # tokens per cache page (quantized
                                      # payload granularity AND prefix-cache
                                      # sharing granularity)
-    quant_mode: str = "nvfp4"        # weight-GeMM recipe (core/qgemm)
+    quant_mode: str = "nvfp4"        # weight-GeMM recipe or full
+                                     # PrecisionPolicy spec (core/policy),
+                                     # e.g. "averis;lm_head=bf16"
     prefill_chunk: int = 64          # chunk size for incremental prefill
     prefill_token_budget: int = 0    # prompt tokens per step (0 -> chunk)
     prefix_cache: bool = False       # shared-prefix page reuse
@@ -163,7 +165,7 @@ class Engine:
         self._rid = 0
         self._step_idx = 0
         self._base_key = jax.random.key(config.seed)
-        self._recipe = recipe(config.quant_mode)
+        self._policy = PrecisionPolicy.parse(config.quant_mode)
 
         self._prefilling: "OrderedDict[int, _PrefillState]" = OrderedDict()
         self._page_refs: Dict[int, List[bytes]] = {}   # slot -> pinned keys
@@ -194,7 +196,7 @@ class Engine:
 
     # ------------------------------------------------------------------ jitted
     def _ctx(self, step_idx) -> QuantCtx:
-        return QuantCtx(self._recipe,
+        return QuantCtx(self._policy,
                         jax.random.fold_in(self._base_key, step_idx))
 
     def _chunk_impl(self, params, tokens, start, valid, buf, temp, topk,

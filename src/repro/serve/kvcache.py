@@ -35,19 +35,30 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import (
-    BLOCK_SIZE,
-    E2M1_GRID,
-    E2M1_MAX,
-    TENSOR_SCALE_DENOM,
+from repro.core.averis import split_mean
+from repro.core.formats import BLOCK_SIZE, TENSOR_SCALE_DENOM
+from repro.core.nvfp4 import (
+    decode_e2m1_codes,
+    encode_e2m1_codes,
+    pack_nibbles,
+    quantize_block_scales,
+    unpack_nibbles,
 )
-from repro.core.nvfp4 import round_e2m1_rn
 
 _EPS = 1e-30
 
 
 # --------------------------------------------------------------------------
 # Page codec: mean-centered two-level NVFP4 encode / decode
+#
+# Built on the same stage primitives as the training pipeline
+# (core/pipeline.py): centering is core.averis.split_mean over the page's
+# token axis (the Center stage restricted to one page), and the residual
+# quantization uses core.nvfp4's shared block-scale/code helpers — the exact
+# arithmetic nvfp4_qdq simulates, plus physical 4-bit packing. Train and
+# serve therefore share one centering/quantize implementation; only the
+# page-level amax scope (per page+stream instead of per tensor) and the
+# storage layout live here.
 # --------------------------------------------------------------------------
 
 def encode_pages(kv: jax.Array, *, centered: bool,
@@ -64,46 +75,34 @@ def encode_pages(kv: jax.Array, *, centered: bool,
     x = kv.astype(jnp.float32)
     hd = x.shape[-1]
     assert hd % block_size == 0, f"head_dim {hd} must be {block_size}-aligned"
-    mu = jnp.mean(x, axis=-4, keepdims=True)  # over P
-    if not centered:
-        mu = jnp.zeros_like(mu)
-    res = x - mu
+    if centered:
+        mu, res = split_mean(x, token_axis=-4)     # the Center stage, per page
+    else:
+        mu, res = jnp.zeros(x.shape[:-4] + x.shape[-3:], x.dtype), x
 
     pamax = jnp.max(jnp.abs(res), axis=(-4, -2, -1))          # (..., 2)
     s_t = jnp.maximum(pamax / TENSOR_SCALE_DENOM, _EPS)        # (..., 2)
     rb = res.reshape(res.shape[:-1] + (hd // block_size, block_size))
     bamax = jnp.max(jnp.abs(rb), axis=-1)                      # (..., P,2,n,nb)
     s_t_b = s_t[..., None, :, None, None]                      # align to bamax
-    s_b = jnp.clip(bamax / (E2M1_MAX * s_t_b), 0.0, 448.0)
-    s_b_f8 = s_b.astype(jnp.float8_e4m3fn)
+    s_b_f8 = quantize_block_scales(bamax, s_t_b)
     scale = s_b_f8.astype(jnp.float32) * s_t_b                 # effective
 
-    a = jnp.where(scale[..., None] > 0,
-                  jnp.abs(rb) / jnp.maximum(scale[..., None], _EPS), 0.0)
-    q = round_e2m1_rn(a)
-    idx = jnp.searchsorted(jnp.asarray(E2M1_GRID), q).astype(jnp.uint8)
-    sign = (rb < 0).astype(jnp.uint8)
-    code = sign * jnp.uint8(8) + idx                            # 4-bit code
+    code = encode_e2m1_codes(rb, scale)                        # 4-bit codes
     flat = code.reshape(code.shape[:-2] + (hd,))
-    packed = flat[..., 0::2] | (flat[..., 1::2] << 4)           # (..., hd//2)
-    return packed, s_b_f8, pamax, mu[..., 0, :, :, :]
+    return pack_nibbles(flat), s_b_f8, pamax, mu
 
 
 def decode_pages(codes: jax.Array, scales: jax.Array, pamax: jax.Array,
                  mean: Optional[jax.Array], *, block_size: int = BLOCK_SIZE,
                  dtype=jnp.bfloat16) -> jax.Array:
     """Inverse of :func:`encode_pages` -> (..., P, 2, n_kv, hd) in ``dtype``."""
-    grid = jnp.asarray(E2M1_GRID)
-    lo = (codes & 0x0F).astype(jnp.int32)
-    hi = (codes >> 4).astype(jnp.int32)
-    flat = jnp.stack([lo, hi], axis=-1).reshape(codes.shape[:-1] +
-                                                (2 * codes.shape[-1],))
+    flat = unpack_nibbles(codes)
     hd = flat.shape[-1]
-    mag = grid[flat & 7]
-    sign = jnp.where(flat >= 8, -1.0, 1.0)
     s_t = jnp.maximum(pamax / TENSOR_SCALE_DENOM, _EPS)
     scale = scales.astype(jnp.float32) * s_t[..., None, :, None, None]
-    rb = (sign * mag).reshape(flat.shape[:-1] + (hd // block_size, block_size))
+    rb = decode_e2m1_codes(flat).reshape(
+        flat.shape[:-1] + (hd // block_size, block_size))
     res = (rb * scale[..., None]).reshape(flat.shape[:-1] + (hd,))
     if mean is not None:
         res = res + mean.astype(jnp.float32)[..., None, :, :, :]

@@ -2,20 +2,28 @@
 
 ``make_train_step`` builds the jit-able pure function
     (params, opt_state, batch, step_key) -> (params, opt_state, metrics)
-with the FP4 recipe baked in via QuantConfig. Gradient accumulation is a
-``lax.scan`` over microbatches (the standard large-batch idiom: per-step
-HBM footprint is one microbatch's activations).
+with the FP4 recipe — or a full per-site :class:`PrecisionPolicy`
+(``quant_policy`` spec strings like ``"averis;lm_head=bf16"``) — baked in.
+
+Gradient accumulation is a ``lax.scan`` over microbatches (the standard
+large-batch idiom: per-step HBM footprint is one microbatch's activations).
+Weight QDQ is hoisted out of it: ``model.prepare_qweights`` runs once per
+optimizer step, *before* ``jax.grad`` and the scan, so every (param,
+plan-operand) pair is quantized exactly once per step and enters the scan as
+a loop-invariant — the old path re-quantized every weight in every
+microbatch, pure hot-path waste since params only change at
+``apply_updates``. SR gradient streams stay keyed per-microbatch: each
+microbatch gets its own split of ``step_key``, exactly as before.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.qgemm import QuantConfig, recipe
+from repro.core.policy import PrecisionPolicy
 from repro.models.layers import QuantCtx
 from repro.models.model import Model
 from repro.optim import adamw
@@ -25,14 +33,37 @@ from repro.optim.compress import init_error_state, make_ef_int8_transform
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
     quant_mode: str = "bf16"
+    quant_policy: str = ""           # PrecisionPolicy spec; when set it
+                                     # overrides quant_mode (which remains the
+                                     # single-recipe shorthand)
     microbatches: int = 1            # gradient-accumulation factor
     optimizer: adamw.OptimizerConfig = adamw.OptimizerConfig()
     grad_compression: str = "none"   # none | ef_int8
 
 
-def make_loss_fn(model: Model, qcfg: QuantConfig):
-    def loss_fn(params, batch, key):
-        ctx = QuantCtx(qcfg, key)
+def resolve_policy(tcfg: TrainConfig, model: Optional[Model] = None
+                   ) -> PrecisionPolicy:
+    """TrainConfig (+ optional per-arch ModelConfig default) -> policy.
+
+    Precedence: tcfg.quant_policy > model.cfg.quant_policy > tcfg.quant_mode.
+    """
+    spec = tcfg.quant_policy
+    if not spec and model is not None:
+        spec = getattr(model.cfg, "quant_policy", "") or ""
+    return PrecisionPolicy.parse(spec or tcfg.quant_mode)
+
+
+def make_loss_fn(model: Model, qcfg):
+    """``qcfg``: QuantConfig or PrecisionPolicy (both accepted by QuantCtx).
+
+    ``qweights`` (optional) is the per-step quantized-weight cache from
+    ``model.prepare_qweights`` — its arrays are constants w.r.t. the grad
+    trace (straight-through dW targets the raw params, so gradients are
+    unchanged by the hoist).
+    """
+
+    def loss_fn(params, batch, key, qweights=None):
+        ctx = QuantCtx(qcfg, key, qweights=qweights)
         loss, metrics = model.loss(params, batch, ctx)
         return loss, metrics
 
@@ -42,18 +73,23 @@ def make_loss_fn(model: Model, qcfg: QuantConfig):
 def make_train_step(
     model: Model, tcfg: TrainConfig
 ) -> Callable[..., Tuple[Any, Any, Dict[str, jax.Array]]]:
-    qcfg = recipe(tcfg.quant_mode)
-    loss_fn = make_loss_fn(model, qcfg)
+    policy = resolve_policy(tcfg, model)
+    loss_fn = make_loss_fn(model, policy)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
     transform = (
         make_ef_int8_transform() if tcfg.grad_compression == "ef_int8" else None
     )
 
-    def single(params, batch, key):
-        (loss, metrics), grads = grad_fn(params, batch, key)
+    def single(params, batch, key, qweights):
+        (loss, metrics), grads = grad_fn(params, batch, key, qweights)
         return loss, metrics, grads
 
     def train_step(params, opt_state, batch, step_key):
+        # Per-step quantized-weight cache: built once here, OUTSIDE grad and
+        # the microbatch scan, so the QDQ of every weight is loop-invariant
+        # (params only change at apply_updates below). Inside the scan the
+        # cache arrays are closure constants — hoisted, not recomputed.
+        qweights = model.prepare_qweights(params, policy)
         if tcfg.microbatches > 1:
             n = tcfg.microbatches
             micro = jax.tree.map(
@@ -64,7 +100,7 @@ def make_train_step(
             def body(carry, xs):
                 g_acc, l_acc = carry
                 mb, k = xs
-                loss, _, grads = single(params, mb, k)
+                loss, _, grads = single(params, mb, k, qweights)
                 g_acc = jax.tree.map(
                     lambda a, g: a + g.astype(jnp.float32) / n, g_acc, grads
                 )
@@ -76,7 +112,7 @@ def make_train_step(
             (grads, loss), _ = jax.lax.scan(body, (g0, 0.0), (micro, keys))
             metrics: Dict[str, jax.Array] = {}
         else:
-            loss, metrics, grads = single(params, batch, step_key)
+            loss, metrics, grads = single(params, batch, step_key, qweights)
 
         params, opt_state, opt_metrics = adamw.apply_updates(
             params, grads, opt_state, tcfg.optimizer, grad_transform=transform
@@ -96,12 +132,12 @@ def init_train_state(model: Model, tcfg: TrainConfig, key: jax.Array):
 
 
 def make_eval_step(model: Model, quant_mode: str):
-    """Forward-only eval under a given recipe (the paper's 'NVFP4 forward
-    evaluation' protocol for downstream numbers)."""
-    qcfg = recipe(quant_mode)
+    """Forward-only eval under a given recipe or policy spec (the paper's
+    'NVFP4 forward evaluation' protocol for downstream numbers)."""
+    policy = PrecisionPolicy.parse(quant_mode)
 
     def eval_step(params, batch, key):
-        ctx = QuantCtx(qcfg, key)
+        ctx = QuantCtx(policy, key)
         loss, metrics = model.loss(params, batch, ctx)
         return {"loss": loss, **metrics}
 

@@ -1,0 +1,55 @@
+"""Capture bitwise reference outputs of the qgemm recipes (regression goldens).
+
+Run once against a known-good implementation:
+
+    PYTHONPATH=src python tests/goldens/capture_qgemm_goldens.py
+
+Inputs are *dyadic* (integers scaled by powers of two) over a power-of-two
+token count, so every mean reduction, Hadamard tile product, and FP4
+scale/round in the reference path is exact-deterministic — any refactor of
+the quantized-GeMM core must reproduce these arrays bit for bit
+(``tests/test_pipeline_golden.py``).
+"""
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import MODES, qgemm, recipe
+
+L, M, N = 64, 48, 32  # L power of two; M, N multiples of 16
+KEY = jax.random.key(7)
+
+
+def dyadic(rng, shape, scale_bits=4, span=48, bias=0.0):
+    """Random dyadic rationals k / 2**scale_bits with |k| <= span."""
+    k = rng.integers(-span, span + 1, size=shape)
+    return (k.astype(np.float64) / (1 << scale_bits) + bias).astype(np.float32)
+
+
+def main(out_path):
+    rng = np.random.default_rng(20260726)
+    x = jnp.asarray(dyadic(rng, (L, M), bias=2.0))
+    w = jnp.asarray(dyadic(rng, (M, N), span=16))
+    g = jnp.asarray(dyadic(rng, (L, N), span=32))
+
+    arrays = {"x": np.asarray(x), "w": np.asarray(w), "g": np.asarray(g)}
+    for mode in MODES:
+        for sr_grad in (False, True):
+            cfg = recipe(mode, sr_grad=sr_grad)
+            y, vjp = jax.vjp(lambda a, b: qgemm(a, b, cfg, KEY), x, w)
+            dx, dw = vjp(g)
+            tag = f"{mode}__sr{int(sr_grad)}"
+            arrays[f"{tag}__y"] = np.asarray(y)
+            arrays[f"{tag}__dx"] = np.asarray(dx)
+            arrays[f"{tag}__dw"] = np.asarray(dw)
+    np.savez(out_path, **arrays)
+    print(f"wrote {len(arrays)} arrays to {out_path}")
+
+
+if __name__ == "__main__":
+    here = os.path.dirname(os.path.abspath(__file__))
+    main(sys.argv[1] if len(sys.argv) > 1 else
+         os.path.join(here, "qgemm_goldens.npz"))

@@ -1,0 +1,325 @@
+"""PrecisionPolicy: spec grammar, resolution, scan segmentation, the per-step
+quantized-weight cache, and the mixed-policy training path."""
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import reduced
+from repro.core import PrecisionPolicy, QuantConfig, ROLES, recipe
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.train.trainer import (
+    TrainConfig,
+    init_train_state,
+    make_loss_fn,
+    make_train_step,
+    resolve_policy,
+)
+
+QGEMM_MOD = sys.modules["repro.core.qgemm"]
+
+
+# --------------------------------------------------------------------------
+# Grammar + resolution
+# --------------------------------------------------------------------------
+
+def test_parse_bare_recipe_is_uniform():
+    p = PrecisionPolicy.parse("averis")
+    assert p.default.mode == "averis" and not p.clauses
+    for role in ROLES:
+        for layer in (None, 0, 7):
+            assert p.resolve(role, layer).mode == "averis"
+    assert p.segments(8) == ((0, 8),)
+
+
+def test_parse_role_and_layer_clauses():
+    p = PrecisionPolicy.parse("averis;lm_head=bf16;layers.0-1=nvfp4_hadamard")
+    assert p.resolve("lm_head", None).mode == "bf16"
+    assert p.resolve("mlp_up", 0).mode == "nvfp4_hadamard"
+    assert p.resolve("mlp_up", 1).mode == "nvfp4_hadamard"
+    assert p.resolve("mlp_up", 2).mode == "averis"
+    assert p.resolve("attn_qkv", 5).mode == "averis"
+    assert p.segments(6) == ((0, 2), (2, 6))
+
+
+def test_parse_layer_role_clause_and_precedence():
+    p = PrecisionPolicy.parse(
+        "nvfp4;mlp_down=averis;layers.1-2.mlp_down=averis_hadamard")
+    assert p.resolve("mlp_down", 0).mode == "averis"
+    assert p.resolve("mlp_down", 1).mode == "averis_hadamard"  # later wins
+    assert p.resolve("mlp_down", 3).mode == "averis"
+    assert p.resolve("mlp_up", 1).mode == "nvfp4"
+    assert p.segments(4) == ((0, 1), (1, 3), (3, 4))
+    # single-layer range
+    q = PrecisionPolicy.parse("averis;layers.2=bf16")
+    assert q.resolve("attn_o", 2).mode == "bf16"
+    assert q.resolve("attn_o", 1).mode == "averis"
+
+
+def test_parse_passthrough_and_errors():
+    cfg = recipe("averis")
+    assert PrecisionPolicy.parse(cfg).default is cfg
+    p = PrecisionPolicy.parse("averis")
+    assert PrecisionPolicy.parse(p) is p
+    with pytest.raises(ValueError):
+        PrecisionPolicy.parse("")
+    with pytest.raises(ValueError):
+        PrecisionPolicy.parse("lm_head=bf16")          # no default
+    with pytest.raises(ValueError):
+        PrecisionPolicy.parse("averis;bogus_role=bf16")
+    with pytest.raises(ValueError):
+        PrecisionPolicy.parse("averis;layers.x-2=bf16")
+    with pytest.raises(ValueError):
+        PrecisionPolicy.parse("averis;nvfp4")          # second bare recipe
+    with pytest.raises(ValueError):
+        PrecisionPolicy.parse("averis;layers.0-1.lm_head=bf16")  # layer-free
+
+
+def test_overrides_apply_to_every_clause():
+    p = PrecisionPolicy.parse("averis;lm_head=nvfp4", sr_grad=False)
+    assert not p.default.sr_grad
+    assert not p.resolve("lm_head", None).sr_grad
+
+
+def test_resolve_policy_precedence():
+    cfg = reduced("qwen3-0.6b", num_layers=2, d_model=64, d_ff=192,
+                  vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=16)
+    model = Model(cfg)
+    t = TrainConfig(quant_mode="nvfp4")
+    assert resolve_policy(t, model).default.mode == "nvfp4"
+    t = TrainConfig(quant_mode="nvfp4", quant_policy="averis;lm_head=bf16")
+    assert resolve_policy(t, model).default.mode == "averis"
+    # arch-default policy (ModelConfig.quant_policy) sits between the two
+    cfg2 = reduced("qwen3-0.6b", num_layers=2, d_model=64, d_ff=192,
+                   vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=16,
+                   quant_policy="averis_hadamard")
+    assert resolve_policy(TrainConfig(quant_mode="nvfp4"),
+                          Model(cfg2)).default.mode == "averis_hadamard"
+
+
+# --------------------------------------------------------------------------
+# gemm_weight_sites stays in sync with the call sites
+# --------------------------------------------------------------------------
+
+def _count_inline_prepares(model, policy_spec, monkeypatch, batch_size=4):
+    """Trace one train step; return (#_prepare_weight calls, expected)."""
+    calls = []
+    orig = QGEMM_MOD._prepare_weight
+
+    def counting(w, spec, cfg):
+        calls.append(spec)
+        return orig(w, spec, cfg)
+
+    monkeypatch.setattr(QGEMM_MOD, "_prepare_weight", counting)
+    cfg = model.cfg
+    tcfg = TrainConfig(quant_mode="bf16", quant_policy=policy_spec,
+                       optimizer=adamw.OptimizerConfig(total_steps=2))
+    data = TokenStream(DataConfig(seed=1, batch_size=batch_size, seq_len=32,
+                                  vocab_size=cfg.vocab_size))
+    batch = jax.tree.map(jnp.asarray, data.batch(0))
+    params, opt = init_train_state(model, tcfg, jax.random.key(0))
+    jax.make_jaxpr(make_train_step(model, tcfg))(params, opt, batch,
+                                                 jax.random.key(1))
+    return len(calls)
+
+
+@pytest.mark.parametrize("arch,kw", [
+    ("qwen3-0.6b", dict(num_layers=2, d_model=64, d_ff=192, vocab_size=128,
+                        num_heads=4, num_kv_heads=2, head_dim=16,
+                        remat=False)),
+    ("minicpm3-4b", dict(num_layers=2, d_model=64, d_ff=128, vocab_size=128,
+                         remat=False)),
+    ("qwen3-7b-a1.5b", dict(num_layers=2, d_model=64, d_ff=64, vocab_size=128,
+                            num_experts=4, num_experts_per_tok=2,
+                            remat=False)),
+    ("mamba2-780m", dict(num_layers=2, d_model=64, vocab_size=128,
+                         remat=False)),
+])
+def test_every_gemm_site_uses_the_per_step_cache(arch, kw, monkeypatch):
+    """Exactly one weight QDQ per (site, GeMM) per step — nothing falls back
+    to inline quantization (which would mean gemm_weight_sites went out of
+    sync with the ctx.child/site literals at the call sites)."""
+    from repro.models.transformer import gemm_weight_sites
+
+    model = Model(reduced(arch, **kw))
+    n_sites = len(gemm_weight_sites(model.cfg))
+    lm = 1 if model.cfg.quantize_lm_head else 0
+    expected = (n_sites + lm) * 2            # fwd + dx, one spec each (averis)
+    got = _count_inline_prepares(model, "averis", monkeypatch)
+    assert got == expected, (arch, got, expected)
+
+
+def test_weight_quantized_once_per_step_under_grad_accumulation(monkeypatch):
+    """The satellite guarantee: the per-step cache makes the number of weight
+    quantizations independent of the gradient-accumulation factor."""
+    cfg = reduced("qwen3-0.6b", num_layers=2, d_model=64, d_ff=192,
+                  vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=16,
+                  remat=False)
+    model = Model(cfg)
+    counts = {}
+    calls = []
+    orig = QGEMM_MOD._prepare_weight
+
+    def counting(w, spec, qcfg):
+        calls.append(spec)
+        return orig(w, spec, qcfg)
+
+    monkeypatch.setattr(QGEMM_MOD, "_prepare_weight", counting)
+    data = TokenStream(DataConfig(seed=1, batch_size=8, seq_len=32,
+                                  vocab_size=128))
+    batch = jax.tree.map(jnp.asarray, data.batch(0))
+    for n in (1, 4):
+        calls.clear()
+        tcfg = TrainConfig(quant_mode="averis", microbatches=n,
+                           optimizer=adamw.OptimizerConfig(total_steps=2))
+        params, opt = init_train_state(model, tcfg, jax.random.key(0))
+        jax.make_jaxpr(make_train_step(model, tcfg))(
+            params, opt, batch, jax.random.key(1))
+        counts[n] = len(calls)
+    assert counts[1] == counts[4] > 0, counts
+
+
+def test_sr_gradient_streams_keyed_per_microbatch():
+    """Accumulated grads must equal the mean of per-microbatch grads taken
+    under split(step_key) — distinct SR streams per microbatch, shared
+    per-step quantized weights."""
+    cfg = reduced("qwen3-0.6b", num_layers=1, d_model=32, d_ff=64,
+                  vocab_size=64, num_heads=2, num_kv_heads=1, head_dim=16,
+                  remat=False)
+    model = Model(cfg)
+    policy = PrecisionPolicy.parse("averis")       # sr_grad=True
+    loss_fn = make_loss_fn(model, policy)
+    data = TokenStream(DataConfig(seed=3, batch_size=8, seq_len=32,
+                                  vocab_size=64))
+    batch = jax.tree.map(jnp.asarray, data.batch(0))
+    # identical halves: any per-microbatch grad difference is SR-key-driven
+    half = jax.tree.map(lambda a: a[:4], batch)
+    dup = jax.tree.map(lambda a: jnp.concatenate([a[:4], a[:4]]), batch)
+
+    tcfg = TrainConfig(quant_mode="averis", microbatches=2,
+                       optimizer=adamw.OptimizerConfig(
+                           peak_lr=1e-3, warmup_steps=0, total_steps=10))
+    params, opt = init_train_state(model, tcfg, jax.random.key(0))
+    step_key = jax.random.key(42)
+
+    @jax.jit
+    def manual(params):
+        qw = model.prepare_qweights(params, policy)
+        keys = jax.random.split(step_key, 2)
+        g = [jax.grad(lambda p, k: loss_fn(p, half, k, qw)[0])(params, k)
+             for k in keys]
+        diff = sum(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)))
+                   for a, b in zip(jax.tree.leaves(g[0]),
+                                   jax.tree.leaves(g[1])))
+        acc = jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) / 2 + b.astype(jnp.float32) / 2,
+            g[0], g[1])
+        return diff, acc
+
+    diff, g_manual = manual(params)
+    assert float(diff) > 0, "SR streams identical across microbatches"
+
+    step = jax.jit(make_train_step(model, tcfg))
+    p2, _, _ = step(params, opt, dup, step_key)
+    p2_manual, _, _ = jax.jit(
+        lambda p, o, g: adamw.apply_updates(p, g, o, tcfg.optimizer)
+    )(params, opt, g_manual)
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(p2_manual)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Mixed-policy end-to-end
+# --------------------------------------------------------------------------
+
+def test_mixed_policy_train_smoke():
+    """Acceptance: averis body + bf16 lm_head + per-layer override trains
+    end-to-end (segmented scans, per-step weight cache, microbatches)."""
+    cfg = reduced("qwen3-0.6b", num_layers=4, d_model=64, d_ff=192,
+                  vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=16,
+                  remat=False)
+    model = Model(cfg)
+    tcfg = TrainConfig(
+        quant_mode="nvfp4",
+        quant_policy="averis;lm_head=bf16;layers.0-1=nvfp4_hadamard",
+        microbatches=2,
+        optimizer=adamw.OptimizerConfig(peak_lr=3e-3, warmup_steps=3,
+                                        total_steps=12),
+    )
+    data = TokenStream(DataConfig(seed=11, batch_size=8, seq_len=64,
+                                  vocab_size=128, chain_alpha=8.0,
+                                  n_states=32))
+    params, opt = init_train_state(model, tcfg, jax.random.key(0))
+    step = jax.jit(make_train_step(model, tcfg), donate_argnums=(0, 1))
+    losses = []
+    for i in range(12):
+        params, opt, m = step(params, opt,
+                              jax.tree.map(jnp.asarray, data.batch(i)),
+                              jax.random.key(100 + i))
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses)), losses
+    assert losses[-1] < losses[0], losses
+
+
+def test_uniform_policy_matches_plain_recipe_bitwise():
+    """A uniform policy must produce the exact pre-policy graph: same loss,
+    same grads as the plain single-recipe path."""
+    cfg = reduced("qwen3-0.6b", num_layers=2, d_model=64, d_ff=192,
+                  vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=16,
+                  remat=False)
+    model = Model(cfg)
+    data = TokenStream(DataConfig(seed=5, batch_size=4, seq_len=32,
+                                  vocab_size=128))
+    batch = jax.tree.map(jnp.asarray, data.batch(0))
+    params = model.init(jax.random.key(0))
+    key = jax.random.key(9)
+
+    outs = []
+    for spec in ("averis", "averis;"):               # parsed identically
+        loss_fn = make_loss_fn(model, PrecisionPolicy.parse(spec))
+        (loss, _), g = jax.jit(
+            jax.value_and_grad(loss_fn, has_aux=True))(params, batch, key)
+        outs.append((float(loss), g))
+    assert outs[0][0] == outs[1][0]
+    for a, b in zip(jax.tree.leaves(outs[0][1]), jax.tree.leaves(outs[1][1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_policy_segments_preserve_cache_stacking():
+    """Segmented prefill/decode: a layered policy must keep the stacked
+    cache layout (concat of per-segment scans) identical in shape and the
+    decode path functional."""
+    cfg = reduced("qwen3-0.6b", num_layers=4, d_model=64, d_ff=192,
+                  vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=16,
+                  remat=False)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    from repro.models.model import make_quant_ctx
+
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0, 128)
+    ctx_u = make_quant_ctx("bf16", jax.random.key(2))
+    ctx_l = make_quant_ctx("bf16;layers.1-2=bf16", jax.random.key(2))
+    assert ctx_l.policy.segments(4) == ((0, 4),)     # same cfg -> merged
+    ctx_l = make_quant_ctx("bf16;layers.1-2=nvfp4", jax.random.key(2))
+    assert ctx_l.policy.segments(4) == ((0, 1), (1, 3), (3, 4))
+
+    lo_u, caches_u = jax.jit(
+        lambda p, t: model.prefill(p, {"tokens": t}, ctx_u))(params, tokens)
+    lo_l, caches_l = jax.jit(
+        lambda p, t: model.prefill(p, {"tokens": t}, ctx_l))(params, tokens)
+    for a, b in zip(jax.tree.leaves(caches_u), jax.tree.leaves(caches_l)):
+        assert a.shape == b.shape
+    caches_l = model.grow_caches(caches_l, 4)
+    logits, _ = jax.jit(
+        lambda p, tok, pos, c: model.decode_step(
+            p, {"token": tok}, pos, c, ctx_l))(
+        params, jnp.argmax(lo_l[:, -1], -1).astype(jnp.int32),
+        jnp.full((2,), 16, jnp.int32), caches_l)
+    assert bool(jnp.isfinite(logits).all())
