@@ -1,0 +1,107 @@
+"""Gradient-collectives microbenchmark: wire bytes/step, bucket counts, and
+reduce wall time per comm recipe vs the bf16 baseline.
+
+The W4A4G4 wire contract: an ``nvfp4_centered`` bucket ships 4-bit codes +
+one E4M3 scale per 16-block + the fp32 exact mean, which must land at
+<= 0.30x the bytes of a plain bf16 all-reduce. Wall times are the jitted
+4-virtual-shard sharded reduce on CPU (relative comparisons only).
+
+Rows (name,us_per_call,derived):
+  comm_reduce_<recipe>   jitted 4-shard encode+reduce    bytes ratio vs bf16
+
+Writes ``artifacts/BENCH_comm.json`` with the raw numbers.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit, time_jitted
+
+ART_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts")
+
+RECIPES = ["fp32", "bf16", "int8_ef", "nvfp4", "nvfp4_centered"]
+SHARDS = 4
+
+
+def run() -> None:
+    from repro.parallel import collectives as coll
+
+    rng = jax.random.key(0)
+    # A grads-shaped tree in the small-model regime: a few matrices + gains.
+    grads = {
+        "embed": jax.random.normal(jax.random.fold_in(rng, 0), (512, 256)),
+        "wq": jax.random.normal(jax.random.fold_in(rng, 1), (256, 256)),
+        "w_up": jax.random.normal(jax.random.fold_in(rng, 2), (256, 1024)),
+        "w_down": jax.random.normal(jax.random.fold_in(rng, 3), (1024, 256)),
+        "norm": jax.random.normal(jax.random.fold_in(rng, 4), (256,)),
+    }
+    # Per-shard gradient stacks, as the sharded train step sees them.
+    shard_grads = [
+        jax.tree.map(lambda a, i=i: a + 0.01 * i, grads) for i in range(SHARDS)
+    ]
+
+    results = {"shards": SHARDS, "recipes": {}}
+    baseline_us = None
+    for name in RECIPES:
+        layout = coll.build_layout(grads, default_recipe=name,
+                                   bucket_mb=1.0)
+        ws = layout.wire_summary()
+        state = coll.init_comm_state(grads, default_recipe=name,
+                                     bucket_mb=1.0, dp_shards=SHARDS)
+        ef0 = state.get("comm", {}).get("ef", {})
+
+        def reduce_fn(shard_trees, ef):
+            # the sharded train step's wire semantics minus the mesh, via
+            # the same collectives helpers it uses (encode_shard_buckets +
+            # fold_shards — shared implementation, no drift)
+            stacks = {b.name: [] for b in layout.buckets}
+            new_ef = dict(ef)
+            for s, tree in enumerate(shard_trees):
+                flats = coll.bucketize(layout, tree)
+                rows = {n: ef[n][s] for n in ef} if ef else None
+                wires, ef_s = coll.encode_shard_buckets(layout, flats, rows)
+                for n, w in wires.items():
+                    stacks[n].append(w)
+                for n, e in ef_s.items():
+                    new_ef[n] = new_ef[n].at[s].set(e)
+            acc = {n: coll.fold_shards(jnp.stack(ws), SHARDS)
+                   for n, ws in stacks.items()}
+            return coll.debucketize(layout, acc, grads), new_ef
+
+        fn = jax.jit(reduce_fn)
+        t = time_jitted(fn, shard_grads, ef0)
+        us = t["mean_s"] * 1e6
+        if name == "bf16":
+            baseline_us = us
+        results["recipes"][name] = {
+            "reduce_us": us,
+            "bytes_per_step": ws["total_bytes_per_step"],
+            "ratio_vs_bf16": ws["ratio_vs_bf16"],
+            "num_buckets": ws["num_buckets"],
+        }
+        emit(f"comm_reduce_{name}", us,
+             f"bytes_ratio_vs_bf16={ws['ratio_vs_bf16']:.3f};"
+             f"buckets={ws['num_buckets']}")
+
+    for name in RECIPES:
+        if baseline_us:
+            results["recipes"][name]["time_vs_bf16"] = (
+                results["recipes"][name]["reduce_us"] / baseline_us)
+
+    fp4 = results["recipes"]["nvfp4_centered"]["ratio_vs_bf16"]
+    assert fp4 <= 0.30, f"FP4 wire ratio {fp4} exceeds 0.30x bf16"
+
+    os.makedirs(ART_DIR, exist_ok=True)
+    out = os.path.join(ART_DIR, "BENCH_comm.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    emit("comm_json", 0.0, f"wrote={os.path.relpath(out)}")
+
+
+if __name__ == "__main__":
+    run()

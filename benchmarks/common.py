@@ -33,8 +33,13 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
 
 def train_tiny(quant_mode: str, steps: int = 80, seed: int = 0,
                peak_lr: float = 3e-3, arch: str = "qwen3-0.6b",
+               grad_compression: str = "none",
                **reduced_overrides) -> List[float]:
-    """Train the reduced paper config under a recipe; returns loss curve."""
+    """Train the reduced paper config under a recipe; returns loss curve.
+
+    ``grad_compression`` routes gradients through a comm-recipe wire codec
+    every step (repro.parallel.collectives), e.g. ``"nvfp4_centered"`` for
+    the paper's G4-on-the-wire protocol."""
     import jax.numpy as jnp
 
     from repro.configs import reduced
@@ -47,6 +52,7 @@ def train_tiny(quant_mode: str, steps: int = 80, seed: int = 0,
     model = Model(cfg)
     tcfg = TrainConfig(
         quant_mode=quant_mode,
+        grad_compression=grad_compression,
         optimizer=adamw.OptimizerConfig(peak_lr=peak_lr, warmup_steps=10,
                                         total_steps=steps, weight_decay=0.01),
     )

@@ -5,13 +5,24 @@ dry-run artifacts exist (PYTHONPATH=src python -m repro.launch.dryrun).
 
   PYTHONPATH=src python -m benchmarks.run             # everything
   PYTHONPATH=src python -m benchmarks.run table2 fig4 # subset
+
+After the selected benches run, every ``artifacts/BENCH_*.json`` the bench
+modules wrote is folded into ``artifacts/BENCH_summary.json`` and copied to
+the repo root, so cross-PR perf-trend tooling always finds the latest
+numbers at a fixed top-level location.
 """
 from __future__ import annotations
 
+import glob
+import json
+import os
+import shutil
 import sys
+import time
 import traceback
 
 from . import (
+    bench_comm,
     bench_fig1,
     bench_fig2,
     bench_fig3,
@@ -28,6 +39,7 @@ from . import (
 
 BENCHES = {
     "qgemm": bench_qgemm.run,      # per-recipe GeMM fwd/bwd + compile count
+    "comm": bench_comm.run,        # gradient-wire bytes/step + reduce time
     "table1": bench_table1.run,    # loss gaps per recipe
     "table2": bench_table2.run,    # hadamard vs averis preprocessing
     "table3": bench_table3.run,    # end-to-end step overhead
@@ -41,6 +53,38 @@ BENCHES = {
     "roofline": roofline.run,      # deliverable (g), from dry-run artifacts
 }
 
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_ART_DIR = os.path.join(_ROOT, "artifacts")
+
+
+def write_summary() -> str:
+    """Fold artifacts/BENCH_*.json into BENCH_summary.json and mirror each
+    file to the repo root (the fixed locations trend tooling watches)."""
+    summary = {}
+    for path in sorted(glob.glob(os.path.join(_ART_DIR, "BENCH_*.json"))):
+        base = os.path.basename(path)
+        if base == "BENCH_summary.json":
+            continue
+        name = base[len("BENCH_"):-len(".json")]
+        try:
+            with open(path) as f:
+                summary[name] = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            summary[name] = {"error": f"{type(e).__name__}: {e}"}
+        # stamp when each bench actually ran: a subset run folds older
+        # BENCH_*.json files too, and tooling must be able to tell fresh
+        # numbers from carried-over ones
+        if isinstance(summary[name], dict):
+            summary[name]["_written_at"] = time.strftime(
+                "%Y-%m-%dT%H:%M:%SZ", time.gmtime(os.path.getmtime(path)))
+        shutil.copy2(path, os.path.join(_ROOT, base))
+    out = os.path.join(_ART_DIR, "BENCH_summary.json")
+    os.makedirs(_ART_DIR, exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+    shutil.copy2(out, os.path.join(_ROOT, "BENCH_summary.json"))
+    return out
+
 
 def main() -> None:
     names = sys.argv[1:] or list(BENCHES)
@@ -53,6 +97,8 @@ def main() -> None:
             traceback.print_exc()
             print(f"{name},nan,FAILED:{type(e).__name__}:{e}")
             failures.append(name)
+    out = write_summary()
+    print(f"summary,0.000,wrote={os.path.relpath(out)}")
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
 

@@ -19,7 +19,11 @@ clauses win on the cells they name)::
                | ROLE "=" RECIPE             # one role, all layers
                | "layers." RANGE "=" RECIPE  # all roles, a layer range
                | "layers." RANGE "." ROLE "=" RECIPE
+               | "comm" "=" COMM             # default gradient-wire recipe
+               | "comm." PATTERN "=" COMM    # per-tensor comm override
     RANGE     := INT | INT "-" INT           # inclusive
+    PATTERN   := fnmatch glob over a param path ("layers/attn/wq") or any
+                 single path component ("wq", "*norm*", "embed")
 
 Examples::
 
@@ -27,6 +31,14 @@ Examples::
     averis;lm_head=bf16
     averis;lm_head=bf16;layers.0-1=nvfp4_hadamard
     nvfp4;layers.0-3.mlp_down=averis_hadamard
+    averis;comm=nvfp4_centered;comm.embed=bf16;comm.*norm*=fp32
+
+``comm`` clauses select **gradient-communication recipes** (registered in
+``repro.parallel.collectives``, e.g. ``fp32``/``bf16``/``int8_ef``/
+``nvfp4_centered``) for the data-parallel reduction wire, keyed by the
+parameter's tree path rather than a GeMM role. Recipe names are stored as
+strings here and validated where the wire is built (collectives cannot be
+imported from ``core`` without a cycle).
 
 Layers are executed under ``lax.scan`` over stacked parameters, so a
 layer-dependent policy cannot branch per iteration; instead
@@ -38,6 +50,7 @@ pre-policy graph.
 from __future__ import annotations
 
 import dataclasses
+from fnmatch import fnmatch
 from typing import Optional, Tuple
 
 from .qgemm import QuantConfig, recipe
@@ -91,10 +104,17 @@ class PolicyClause:
 
 @dataclasses.dataclass(frozen=True)
 class PrecisionPolicy:
-    """Ordered clauses over a default recipe; last matching clause wins."""
+    """Ordered clauses over a default recipe; last matching clause wins.
+
+    ``comm_default``/``comm_clauses`` route *gradient-wire* recipes by
+    parameter path (see module docstring); they are carried as plain strings
+    and resolved by ``repro.parallel.collectives``.
+    """
 
     default: QuantConfig
     clauses: Tuple[PolicyClause, ...] = ()
+    comm_default: str = ""                         # "" -> caller's fallback
+    comm_clauses: Tuple[Tuple[str, str], ...] = ()  # (path pattern, recipe)
 
     # ------------------------------------------------------------- build
     @staticmethod
@@ -118,9 +138,32 @@ class PrecisionPolicy:
 
         default: Optional[QuantConfig] = None
         clauses = []
+        comm_default = ""
+        comm_clauses = []
         for raw in spec.split(";"):
             part = raw.strip()
             if not part:
+                continue
+            if part == "comm" or part.startswith(("comm=", "comm.")):
+                lhs, eq, name = part.partition("=")
+                name = name.strip()
+                if not eq or not name:
+                    raise ValueError(
+                        f"policy spec {spec!r}: comm clause {part!r} needs "
+                        f"'comm=RECIPE' or 'comm.PATTERN=RECIPE'")
+                if lhs == "comm":
+                    if comm_default:
+                        raise ValueError(
+                            f"policy spec {spec!r}: second default comm "
+                            f"recipe {name!r}")
+                    comm_default = name
+                else:
+                    pattern = lhs[len("comm."):].strip()
+                    if not pattern:
+                        raise ValueError(
+                            f"policy spec {spec!r}: empty comm pattern in "
+                            f"{part!r}")
+                    comm_clauses.append((pattern, name))
                 continue
             if "=" not in part:
                 if default is not None:
@@ -153,7 +196,9 @@ class PrecisionPolicy:
             raise ValueError(
                 f"policy spec {spec!r} has no default recipe (first clause "
                 f"must be a bare recipe name)")
-        return PrecisionPolicy(default=default, clauses=tuple(clauses))
+        return PrecisionPolicy(default=default, clauses=tuple(clauses),
+                               comm_default=comm_default,
+                               comm_clauses=tuple(comm_clauses))
 
     # ----------------------------------------------------------- resolve
     def resolve(self, role: Optional[str] = None,
@@ -163,6 +208,23 @@ class PrecisionPolicy:
         for c in self.clauses:
             if c.matches(role, layer):
                 out = c.cfg
+        return out
+
+    def comm_override(self, path: str) -> Optional[str]:
+        """The last ``comm.<pattern>=`` clause matching one parameter path
+        (None when no clause matches — the caller's resolved default
+        applies). A pattern matches the full ``/``-joined path or any
+        single path component (``"embed"`` hits the top-level embed table;
+        ``"*norm*"`` hits every norm gain). This is the ONLY per-path
+        resolution: the wire's *default* recipe comes from
+        ``trainer.resolve_comm_recipe`` (flag > ``comm_default`` > legacy
+        ``grad_compression``), deliberately not duplicated here."""
+        out = None
+        comps = path.split("/")
+        for pattern, name in self.comm_clauses:
+            if fnmatch(path, pattern) or any(fnmatch(c, pattern)
+                                             for c in comps):
+                out = name
         return out
 
     def role_table(self, layer: Optional[int]) -> Tuple[QuantConfig, ...]:
@@ -203,4 +265,8 @@ class PrecisionPolicy:
             lines.append(f"{site}={c.cfg.mode}")
         if num_layers is not None and self.is_layered:
             lines.append(f"segments={self.segments(num_layers)}")
+        if self.comm_default:
+            lines.append(f"comm={self.comm_default}")
+        for pattern, name in self.comm_clauses:
+            lines.append(f"comm.{pattern}={name}")
         return "; ".join(lines)

@@ -1,2 +1,7 @@
-"""Optimizers: AdamW + schedules + gradient compression."""
-from . import adamw, compress
+"""Optimizers: AdamW + schedules.
+
+Gradient compression moved to ``repro.parallel.collectives`` (the former
+``optim.compress`` int8 error-feedback hook is its registered ``int8_ef``
+comm recipe — see ``collectives.make_comm_transform``).
+"""
+from . import adamw

@@ -3,8 +3,8 @@
 Hand-written (optax is not available in this environment) with the features a
 large-scale run needs: fp32 moments regardless of param dtype, global-norm
 clipping, bias correction, cosine/linear/constant schedules with warmup, and
-a pluggable gradient transform hook (used by the int8 error-feedback
-compression in ``compress.py``).
+a pluggable gradient transform hook (used by the wire-format gradient
+compression in ``repro.parallel.collectives``).
 """
 from __future__ import annotations
 

@@ -1,4 +1,7 @@
-"""Distribution: logical-axis sharding rules and mesh utilities."""
+"""Distribution: logical-axis sharding rules, mesh utilities, and the
+gradient-communication (wire-format collectives) subsystem."""
+from . import collectives
 from .sharding import ShardingRules, active_rules, constrain, use_rules
 
-__all__ = ["ShardingRules", "active_rules", "constrain", "use_rules"]
+__all__ = ["ShardingRules", "active_rules", "collectives", "constrain",
+           "use_rules"]

@@ -1,0 +1,502 @@
+"""Gradient-communication subsystem: bucketed, policy-routed wire codecs.
+
+The paper's recipe is W4A4**G4** and its central claim — the rank-one mean
+component drives FP4 dynamic-range inflation, so split it off at the source
+and quantize the residual — applies to the data-parallel gradient all-reduce
+exactly as it does to the GeMMs. This module makes the gradient wire a
+first-class quantization site built from the *same* stage primitives as the
+GeMM core (``repro.core.pipeline``):
+
+    nvfp4_centered bucket codec
+        mean   : Operand(Center(0, "mean"))        all-reduced exactly in fp32
+        payload: Operand(Center(0, "residual"), Quantize(-1))   NVFP4 QDQ
+
+so ``Center``/``Quantize`` are the single source of quant truth for GeMMs,
+KV pages, and collectives alike.
+
+Gradients are flattened into **buckets** (flat fp32 buffers of up to
+``bucket_mb`` MiB, the classic DDP fusion-buffer idiom) and each bucket is
+encoded with a registered :class:`CommRecipe`:
+
+    fp32            lossless wire (identity; the exact baseline)
+    bf16            cast round-trip (2 bytes/elem)
+    int8_ef         per-tensor symmetric int8 + error feedback — the former
+                    ``optim/compress.py`` transform, numerics preserved
+    nvfp4           blockwise NVFP4 QDQ of the raw bucket + error feedback
+    nvfp4_centered  exact fp32 bucket mean + NVFP4 QDQ of the centered
+                    residual + error feedback (the paper's G4-on-the-wire)
+
+Per-tensor routing comes from the ``comm=``/``comm.<pattern>=`` clauses of a
+:class:`repro.core.policy.PrecisionPolicy` spec (e.g.
+``averis;comm=nvfp4_centered;comm.embed=bf16;comm.*norm*=fp32``); tensors
+sharing a (recipe, dtype) pair are packed together, ``per_tensor`` recipes
+(int8_ef) get one bucket per tensor so their per-tensor scales are preserved.
+
+Error feedback (1-bit-Adam / EF-SGD lineage) is carried in the optimizer
+state under ``state["comm"]["ef"]`` and stored in the **gradient dtype** —
+not a second full fp32 copy of the params. The codec simulates the wire with
+quantize–dequantize, so numerics are exactly what a real low-bit collective
+would deliver; :func:`bucket_wire_bytes` accounts the bytes that *would*
+travel (payload + scales + the fp32 mean side-channel).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from fnmatch import fnmatch
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipeline import Center, Operand, Quantize, apply_stages
+from repro.core.qgemm import QuantConfig
+
+# QuantConfig consumed by apply_stages for wire payloads: blockwise NVFP4,
+# RN elements (error feedback de-biases; the wire carries no SR stream).
+_WIRE_QCFG = QuantConfig(mode="nvfp4", sr_grad=False)
+
+# The stage pipelines of the centered wire — shared-split Center exactly as
+# in the GeMM executor (one mean reduction per bucket).
+MEAN_OP = Operand((Center(0, "mean"),))
+RESIDUAL_NVFP4_OP = Operand((Center(0, "residual"), Quantize(-1)))
+RAW_NVFP4_OP = Operand((Quantize(-1),))
+
+
+# --------------------------------------------------------------------------
+# Recipes
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CommRecipe:
+    """One gradient-wire format.
+
+    ``payload`` names the element encoding of the (possibly centered)
+    bucket; ``center`` adds the exact-fp32-mean side channel; ``per_tensor``
+    forces one bucket per tensor (per-tensor scales, int8_ef compat);
+    ``ef_dtype`` overrides the error-feedback storage dtype (default: the
+    gradient dtype of the bucket).
+    """
+
+    name: str
+    payload: str = "fp32"            # fp32 | bf16 | int8 | nvfp4
+    center: bool = False
+    error_feedback: bool = False
+    per_tensor: bool = False
+    ef_dtype: Optional[str] = None
+
+    def __post_init__(self):
+        assert self.payload in ("fp32", "bf16", "int8", "nvfp4"), self.payload
+
+    @property
+    def is_identity(self) -> bool:
+        return self.payload == "fp32" and not self.center
+
+
+COMM_RECIPES: Dict[str, CommRecipe] = {}
+
+
+def register_comm_recipe(r: CommRecipe) -> None:
+    COMM_RECIPES[r.name] = r
+
+
+for _r in (
+    CommRecipe("fp32"),
+    CommRecipe("none"),                  # alias of fp32
+    CommRecipe("bf16", payload="bf16"),
+    CommRecipe("int8_ef", payload="int8", error_feedback=True,
+               per_tensor=True),
+    CommRecipe("nvfp4", payload="nvfp4", error_feedback=True),
+    CommRecipe("nvfp4_centered", payload="nvfp4", center=True,
+               error_feedback=True),
+):
+    register_comm_recipe(_r)
+
+LEGACY_ALIASES = {"ef_int8": "int8_ef"}  # old TrainConfig.grad_compression
+
+
+def get_comm_recipe(name: str) -> CommRecipe:
+    name = LEGACY_ALIASES.get(name, name)
+    try:
+        return COMM_RECIPES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown comm recipe {name!r}; known: {sorted(COMM_RECIPES)}"
+        ) from None
+
+
+# --------------------------------------------------------------------------
+# Bucket layout
+# --------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:                            # pragma: no cover
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSlot:
+    """One tensor's slice inside a bucket's flat buffer."""
+
+    path: str
+    leaf_index: int                      # position in the flattened grads tree
+    offset: int
+    size: int
+    shape: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    name: str
+    recipe: str
+    dtype: str                           # gradient dtype of the member tensors
+    slots: Tuple[BucketSlot, ...]
+
+    @property
+    def size(self) -> int:
+        return sum(s.size for s in self.slots)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommLayout:
+    """Static bucket assignment for one gradient tree structure."""
+
+    buckets: Tuple[Bucket, ...]
+    num_leaves: int
+
+    @property
+    def has_error_feedback(self) -> bool:
+        return any(get_comm_recipe(b.recipe).error_feedback
+                   for b in self.buckets)
+
+    def ef_dtypes(self) -> Dict[str, Any]:
+        """{bucket name: EF storage dtype} for EF-carrying buckets."""
+        out = {}
+        for b in self.buckets:
+            r = get_comm_recipe(b.recipe)
+            if r.error_feedback:
+                out[b.name] = jnp.dtype(r.ef_dtype or b.dtype)
+        return out
+
+    def wire_summary(self) -> Dict[str, Any]:
+        """Simulated wire bytes per step per participating shard.
+
+        ``bf16_baseline_bytes`` is what a plain bf16 all-reduce of the same
+        gradients would send; ``ratio_vs_bf16`` is the headline number the
+        bench reports (fp4 buckets land at ~0.28x).
+        """
+        per_recipe: Dict[str, Dict[str, float]] = {}
+        total = 0.0
+        elems = 0
+        for b in self.buckets:
+            r = get_comm_recipe(b.recipe)
+            nbytes = bucket_wire_bytes(r, b.size)
+            d = per_recipe.setdefault(
+                r.name, {"buckets": 0, "elems": 0, "bytes": 0.0})
+            d["buckets"] += 1
+            d["elems"] += b.size
+            d["bytes"] += nbytes
+            total += nbytes
+            elems += b.size
+        baseline = 2.0 * elems
+        return {
+            "per_recipe": per_recipe,
+            "total_bytes_per_step": total,
+            "total_elems": elems,
+            "bf16_baseline_bytes": baseline,
+            "ratio_vs_bf16": total / baseline if elems else 0.0,
+            "num_buckets": len(self.buckets),
+        }
+
+
+def bucket_wire_bytes(recipe: CommRecipe, n: int) -> float:
+    """Bytes one bucket of ``n`` gradient elements puts on the wire.
+
+    nvfp4 counts 4-bit codes + one E4M3 scale per 16-block + the fp32
+    per-bucket tensor scale; ``center`` adds the fp32 exact-mean side
+    channel (4 bytes — the 'cheap' part of the paper's split).
+    """
+    payload = {
+        "fp32": 4.0 * n,
+        "bf16": 2.0 * n,
+        "int8": 1.0 * n + 4.0,
+        "nvfp4": 0.5 * n + math.ceil(n / 16) + 4.0,
+    }[recipe.payload]
+    return payload + (4.0 if recipe.center else 0.0)
+
+
+def build_layout(grads_tree, *, default_recipe: str = "fp32",
+                 policy=None, bucket_mb: float = 4.0) -> CommLayout:
+    """Assign every gradient leaf to a bucket.
+
+    ``policy``: optional :class:`repro.core.policy.PrecisionPolicy` whose
+    ``comm.<pattern>=`` clauses route individual tensors away from
+    ``default_recipe``. ``default_recipe`` must already be the *resolved*
+    default (explicit flag > the policy's ``comm=`` clause > legacy
+    fallbacks — ``trainer.resolve_comm_recipe``); the policy's
+    ``comm_default`` is NOT re-applied here, so an explicit flag override
+    keeps its precedence. Tensors are packed in tree order
+    into buckets of at most ``bucket_mb`` MiB of gradient-dtype elements;
+    a tensor larger than the cap gets its own bucket (tensors never split
+    across buckets). ``per_tensor`` recipes always bucket singly.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(grads_tree)
+    get_comm_recipe(default_recipe)      # validate early
+    groups: Dict[Tuple[str, str], List[Tuple[str, int, Tuple[int, ...]]]] = {}
+    for i, (path, leaf) in enumerate(flat):
+        p = _path_str(path)
+        name = default_recipe
+        if policy is not None:
+            name = policy.comm_override(p) or default_recipe
+        name = LEGACY_ALIASES.get(name, name)
+        get_comm_recipe(name)
+        dt = str(jnp.dtype(leaf.dtype))
+        groups.setdefault((name, dt), []).append((p, i, tuple(leaf.shape)))
+
+    buckets: List[Bucket] = []
+    for (name, dt), members in sorted(groups.items()):
+        recipe = get_comm_recipe(name)
+        cap = max(int(bucket_mb * 2**20 / jnp.dtype(dt).itemsize), 1)
+        cur: List[BucketSlot] = []
+        cur_size = 0
+
+        def flush():
+            nonlocal cur, cur_size
+            if cur:
+                buckets.append(Bucket(
+                    name=f"{name}.{dt}.{len(buckets):03d}",
+                    recipe=name, dtype=dt, slots=tuple(cur)))
+                cur, cur_size = [], 0
+
+        for p, i, shape in members:
+            size = int(math.prod(shape)) if shape else 1
+            if recipe.per_tensor:
+                flush()
+                cur = [BucketSlot(p, i, 0, size, shape)]
+                cur_size = size
+                flush()
+                continue
+            if cur and cur_size + size > cap:
+                flush()
+            cur.append(BucketSlot(p, i, cur_size, size, shape))
+            cur_size += size
+        flush()
+    return CommLayout(buckets=tuple(buckets), num_leaves=len(flat))
+
+
+def bucketize(layout: CommLayout, grads_tree) -> Dict[str, jax.Array]:
+    """Gradient tree -> {bucket name: flat fp32 buffer} (tree-order concat)."""
+    leaves = jax.tree.leaves(grads_tree)
+    assert len(leaves) == layout.num_leaves, (len(leaves), layout.num_leaves)
+    out = {}
+    for b in layout.buckets:
+        parts = [leaves[s.leaf_index].reshape(-1).astype(jnp.float32)
+                 for s in b.slots]
+        out[b.name] = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    return out
+
+
+def debucketize(layout: CommLayout, flats: Dict[str, jax.Array], grads_tree):
+    """Inverse of :func:`bucketize`; leaves come back in their own dtype."""
+    leaves = list(jax.tree.leaves(grads_tree))
+    treedef = jax.tree.structure(grads_tree)
+    for b in layout.buckets:
+        flat = flats[b.name]
+        for s in b.slots:
+            piece = jax.lax.dynamic_slice_in_dim(flat, s.offset, s.size, 0)
+            leaves[s.leaf_index] = piece.reshape(s.shape).astype(
+                leaves[s.leaf_index].dtype)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+# --------------------------------------------------------------------------
+# Bucket codec
+# --------------------------------------------------------------------------
+
+def _q_int8(x: jax.Array) -> jax.Array:
+    """Symmetric per-bucket int8 QDQ in fp32 (the former compress.py wire).
+
+    Bit-for-bit the old ``optim/compress.py`` formula: max/round/clip are
+    permutation-invariant, so operating on the raveled tensor reproduces the
+    per-tensor transform exactly (int8_ef buckets are per-tensor).
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q * scale
+
+
+def encode_bucket(
+    recipe: CommRecipe,
+    flat: jax.Array,
+    ef: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Encode one flat fp32 bucket for the wire; return its decoded value.
+
+    Returns ``(wire_value, new_ef)`` where ``wire_value`` is what the
+    receiving side decodes (QDQ simulation — mean + quantized residual for
+    centered recipes) and ``new_ef`` the updated error-feedback residual in
+    the EF storage dtype (None when the recipe carries no EF).
+
+    The nvfp4 payloads run through the shared pipeline stages
+    (:data:`MEAN_OP` / :data:`RESIDUAL_NVFP4_OP` / :data:`RAW_NVFP4_OP`), so
+    the wire's centering + quantization is literally the GeMM core's.
+    """
+    corrected = flat
+    if ef is not None:
+        corrected = flat + ef.astype(jnp.float32)
+
+    if recipe.is_identity:
+        wire = corrected
+    elif recipe.payload == "bf16" and not recipe.center:
+        wire = corrected.astype(jnp.bfloat16).astype(jnp.float32)
+    elif recipe.payload == "int8" and not recipe.center:
+        wire = _q_int8(corrected)
+    elif recipe.payload == "nvfp4":
+        if recipe.center:
+            splits: Dict = {}
+            mu = apply_stages(corrected, MEAN_OP, _WIRE_QCFG, splits=splits)
+            res_q = apply_stages(corrected, RESIDUAL_NVFP4_OP, _WIRE_QCFG,
+                                 splits=splits)
+            wire = res_q + mu            # scalar mean broadcast, exact fp32
+        else:
+            wire = apply_stages(corrected, RAW_NVFP4_OP, _WIRE_QCFG)
+    else:                                # pragma: no cover
+        raise NotImplementedError(f"comm recipe {recipe}")
+
+    new_ef = None
+    if recipe.error_feedback:
+        ef_dt = ef.dtype if ef is not None else jnp.float32
+        new_ef = (corrected - wire).astype(ef_dt)
+    return wire, new_ef
+
+
+def encode_shard_buckets(
+    layout: CommLayout,
+    flats: Dict[str, jax.Array],
+    ef_rows: Optional[Dict[str, jax.Array]] = None,
+    *,
+    codec_on: bool = True,
+) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+    """Encode one wire participant's buckets.
+
+    ``flats``: {bucket name: flat fp32 buffer} from :func:`bucketize`;
+    ``ef_rows``: this participant's EF buffers for EF-carrying buckets.
+    Returns ``(wires, new_ef_rows)``; with ``codec_on=False`` (a single
+    participant — no wire exists) buffers pass through and EF is untouched.
+    The single implementation behind both the sharded train step and the
+    mesh-free benchmark reduce, so their semantics cannot drift.
+    """
+    wires: Dict[str, jax.Array] = {}
+    new_ef: Dict[str, jax.Array] = {}
+    for b in layout.buckets:
+        if codec_on:
+            row = (ef_rows or {}).get(b.name)
+            w, ef2 = encode_bucket(get_comm_recipe(b.recipe), flats[b.name],
+                                   row)
+        else:
+            w, ef2 = flats[b.name], None
+        wires[b.name] = w
+        if ef2 is not None:
+            new_ef[b.name] = ef2
+    return wires, new_ef
+
+
+def fold_shards(stacked: jax.Array, num_shards: int) -> jax.Array:
+    """``Σ_s stacked[s] / S`` as a fixed-order sequence of fp32 adds.
+
+    THE reduction of the wire: because every participant folds the same
+    decoded shards in the same global order, the result is bitwise
+    independent of how shards are distributed over devices. A ``lax.scan``
+    (not a tree/pairwise reduce, which would reassociate the fp32 adds, and
+    not a Python unroll, whose graph grows with the shard count) performs
+    exactly that left fold at O(1) trace size.
+    """
+    acc0 = jnp.zeros(stacked.shape[1:], jnp.float32)
+    acc, _ = jax.lax.scan(
+        lambda c, x: (c + x.astype(jnp.float32) / num_shards, None),
+        acc0, stacked)
+    return acc
+
+
+# --------------------------------------------------------------------------
+# State + transform (the optimizer-hook path; 1-participant wire)
+# --------------------------------------------------------------------------
+
+def init_comm_state(params_or_grads, *, default_recipe: str = "fp32",
+                    policy=None, bucket_mb: float = 4.0,
+                    dp_shards: Optional[int] = None) -> Dict[str, Any]:
+    """Zero EF buffers for a gradient tree; ``{}`` when no bucket carries EF.
+
+    ``dp_shards``: when set, EF buffers gain a leading shard axis (one EF
+    stream per wire participant — the sharded train step's layout); when
+    None the buffers are flat (the optimizer-transform path).
+    """
+    layout = build_layout(params_or_grads, default_recipe=default_recipe,
+                          policy=policy, bucket_mb=bucket_mb)
+    ef_dtypes = layout.ef_dtypes()
+    if not ef_dtypes:
+        return {}
+    ef = {}
+    for b in layout.buckets:
+        if b.name not in ef_dtypes:
+            continue
+        shape = (b.size,) if dp_shards is None else (dp_shards, b.size)
+        ef[b.name] = jnp.zeros(shape, ef_dtypes[b.name])
+    return {"comm": {"ef": ef}}
+
+
+def apply_comm(layout: CommLayout, grads_tree, ef_state: Dict[str, jax.Array]
+               ) -> Tuple[Any, Dict[str, jax.Array]]:
+    """Run every bucket of a gradient tree through its wire codec once.
+
+    ``ef_state``: {bucket name: flat EF buffer} (no shard axis). Returns the
+    decoded gradient tree and the updated EF buffers.
+    """
+    flats = bucketize(layout, grads_tree)
+    new_ef = dict(ef_state)
+    out = {}
+    for b in layout.buckets:
+        recipe = get_comm_recipe(b.recipe)
+        ef = ef_state.get(b.name)
+        if recipe.error_feedback and ef is None and ef_state:
+            # A present-but-mismatched EF dict means the state was built
+            # from a different tree (e.g. param dtypes instead of gradient
+            # dtypes) — dropping EF silently would violate the documented
+            # error-feedback guarantee, so fail loudly.
+            raise ValueError(
+                f"comm EF state has no buffer for bucket {b.name!r} "
+                f"(found {sorted(ef_state)}); init_comm_state must be "
+                f"built from the gradient tree, dtypes included")
+        wire, ef2 = encode_bucket(recipe, flats[b.name], ef)
+        out[b.name] = wire
+        if ef2 is not None:
+            new_ef[b.name] = ef2
+    return debucketize(layout, out, grads_tree), new_ef
+
+
+def make_comm_transform(*, recipe: str, policy=None, bucket_mb: float = 4.0):
+    """A ``grad_transform`` hook for ``optim.adamw.apply_updates``.
+
+    Simulates every step's gradients traveling the wire (the replacement of
+    the old ``optim/compress.py`` int8-EF hook — pass ``recipe="int8_ef"``
+    for its exact numerics). EF lives in ``state["comm"]["ef"]``.
+    """
+    get_comm_recipe(recipe)
+
+    def transform(grads, state):
+        layout = build_layout(grads, default_recipe=recipe, policy=policy,
+                              bucket_mb=bucket_mb)
+        ef = state.get("comm", {}).get("ef", {})
+        new_grads, new_ef = apply_comm(layout, grads, ef)
+        if not new_ef:
+            return new_grads, state
+        return new_grads, dict(state, comm={"ef": new_ef})
+
+    return transform

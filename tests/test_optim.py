@@ -1,10 +1,11 @@
-"""Optimizer: AdamW convergence, clipping, schedules, EF-int8 compression."""
+"""Optimizer: AdamW convergence, clipping, schedules, EF-int8 compression
+(now the ``int8_ef`` comm recipe of ``repro.parallel.collectives``)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.optim import adamw
-from repro.optim.compress import init_error_state, make_ef_int8_transform
+from repro.parallel.collectives import init_comm_state, make_comm_transform
 
 
 def _quadratic_problem():
@@ -66,8 +67,8 @@ def test_ef_int8_error_feedback_property():
     g_seq = [rng.normal(size=(64,)).astype(np.float32) * 10 ** rng.uniform(-3, 0)
              for _ in range(50)]
     params = {"w": jnp.zeros((64,))}
-    state = {"ef": {"w": jnp.zeros((64,), jnp.float32)}}
-    transform = make_ef_int8_transform()
+    state = init_comm_state(params, default_recipe="int8_ef")
+    transform = make_comm_transform(recipe="int8_ef")
     acc_c = np.zeros(64, np.float32)
     acc_t = np.zeros(64, np.float32)
     for g in g_seq:
@@ -86,8 +87,8 @@ def test_ef_int8_in_optimizer_loop():
     cfg = adamw.OptimizerConfig(peak_lr=0.05, warmup_steps=5, total_steps=300,
                                 weight_decay=0.0)
     state = adamw.init_state(params)
-    state.update(init_error_state(params))
-    transform = make_ef_int8_transform()
+    state.update(init_comm_state(params, default_recipe="int8_ef"))
+    transform = make_comm_transform(recipe="int8_ef")
     l0 = float(loss_fn(params))
     for _ in range(300):
         grads = jax.grad(loss_fn)(params)
