@@ -1,6 +1,8 @@
 """Serving-engine benchmark: decode throughput and cache bytes/token for the
-bf16, fp4, and fp4-centered KV-cache modes on the reduced paper config, plus
-a shared-system-prompt workload comparing the prefix page cache on/off.
+bf16, fp4, and fp4-centered KV-cache modes on the reduced paper config, a
+shared-system-prompt workload comparing the prefix page cache on/off, and a
+repetitive-text speculative-decoding workload (ngram drafting) against the
+plain one-token-per-step baseline.
 
 Rows (name,us_per_call,derived):
   serve_<kind>            mean decode-step latency; derived tok_s=..
@@ -8,8 +10,18 @@ Rows (name,us_per_call,derived):
   serve_prefix_off_<kind> prefill tokens computed without the prefix cache
   serve_prefix_on_<kind>  ditto with it; derived hit_rate=..;compiles=..;
                           static_agree=.. (greedy tokens vs the --static path)
+  serve_spec_off_<kind>   engine steps to drain the speculative workload
+  serve_spec_ngram_<kind> ditto with ngram speculation; derived accept_rate=..;
+                          tokens_per_step=..;agree=.. (tokens vs baseline)
+
+Also writes ``artifacts/BENCH_serve.json`` (speculative accept-rate and
+tokens/step per KV mode), folded into ``BENCH_summary.json`` by
+``benchmarks.run``.
 """
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 import jax
@@ -19,6 +31,8 @@ from .common import emit
 
 
 KINDS = ("bf16", "fp4", "fp4-centered")
+_ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "artifacts")
 
 
 def run() -> None:
@@ -58,6 +72,7 @@ def run() -> None:
              f"bytes_per_token={bpt:.1f};vs_bf16={ratio:.3f}")
 
     _run_prefix_workload(cfg, model, params)
+    _run_spec_workload(cfg, model, params)
 
 
 def _run_prefix_workload(cfg, model, params) -> None:
@@ -108,6 +123,58 @@ def _run_prefix_workload(cfg, model, params) -> None:
                 < s_off["prefill_tokens_computed"])
         if kind == "bf16":
             assert agree == 1.0, "greedy outputs diverged from --static"
+
+
+def _run_spec_workload(cfg, model, params) -> None:
+    """Repetitive-text speculative workload: prompt-lookup (ngram) drafting
+    must report accept-rate > 0 and > 1 token emitted per slot-step while
+    staying token-identical to the plain-decode baseline."""
+    from repro.serve import Engine, EngineConfig
+
+    rng = np.random.default_rng(9)
+    # repetitive text: a short pattern tiled, plus a distinct random tail
+    prompts = [np.concatenate([
+        np.tile(rng.integers(0, cfg.vocab_size, 4).astype(np.int32), 6),
+        rng.integers(0, cfg.vocab_size, 5).astype(np.int32)])
+        for _ in range(4)]
+    gen = 24
+
+    artifact = {}
+    for kind in KINDS:
+        results = {}
+        for spec in ("off", "ngram"):
+            eng = Engine(model, params, EngineConfig(
+                n_slots=2, max_len=64, kv_cache=kind, page_size=16,
+                quant_mode="bf16", prefill_chunk=32, speculate=spec,
+                draft_tokens=4))
+            for i, p in enumerate(prompts):
+                eng.submit(p, gen, seed=i)
+            fin = sorted(eng.drain(), key=lambda r: r.rid)
+            results[spec] = (eng.metrics.summary(),
+                             [r.generated for r in fin])
+        (s_off, out_off), (s_on, out_on) = results["off"], results["ngram"]
+        agree = float(np.mean([a == b for a, b in zip(out_off, out_on)]))
+        emit(f"serve_spec_off_{kind}", 0.0,
+             f"tokens={int(s_off['generated_tokens'])};tokens_per_step=1.00")
+        emit(f"serve_spec_ngram_{kind}", 0.0,
+             f"accept_rate={s_on['accept_rate']:.2f};"
+             f"tokens_per_step={s_on['spec_tokens_per_step']:.2f};"
+             f"agree={agree:.2f}")
+        assert s_on["accept_rate"] > 0.0
+        assert s_on["spec_tokens_per_step"] > 1.0
+        assert agree == 1.0, "speculative greedy diverged from plain decode"
+        artifact[kind] = {
+            "accept_rate": s_on["accept_rate"],
+            "tokens_per_step": s_on["spec_tokens_per_step"],
+            "spec_steps": s_on["spec_steps"],
+            "baseline_tokens_per_step": 1.0,
+            "agree_with_baseline": agree,
+        }
+
+    os.makedirs(_ART, exist_ok=True)
+    with open(os.path.join(_ART, "BENCH_serve.json"), "w") as f:
+        json.dump({"speculative_ngram_k4": artifact}, f, indent=2,
+                  sort_keys=True)
 
 
 if __name__ == "__main__":

@@ -4,7 +4,10 @@
 paged mean-centered NVFP4 (``--kv-cache fp4-centered``, see repro.serve).
 Prompts prefill in bucketed chunks interleaved with decode
 (``--prefill-chunk``/``--prefill-budget``); ``--prefix-cache`` shares
-committed KV pages across requests with equal page-aligned prompt prefixes.
+committed KV pages across requests with equal page-aligned prompt prefixes;
+``--speculate {ngram,self}`` turns on speculative decoding — K draft tokens
+per step (``--draft-tokens``) verified in one jitted call, with rejected
+drafts rolled back before any quantized page is encoded.
 
     # continuous batching over staggered request groups, FP4 KV cache
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
@@ -100,6 +103,9 @@ def run_engine(args) -> None:
         prefill_chunk=args.prefill_chunk,
         prefill_token_budget=args.prefill_budget,
         prefix_cache=args.prefix_cache,
+        speculate=args.speculate, draft_tokens=args.draft_tokens,
+        self_draft_layers=args.draft_layers,
+        draft_quant_mode=args.draft_quant,
     ))
     tokens = np.asarray(_prompts(args, cfg, args.requests))
 
@@ -134,7 +140,16 @@ def run_engine(args) -> None:
           f"(padded {int(summ['prefill_tokens_padded'])}), "
           f"prefix hit-rate {summ['prefix_hit_rate']:.2f} "
           f"({int(summ['prefix_hit_tokens'])} tokens reused), "
-          f"prefill compiles {int(summ['compile_count'])}")
+          f"compiles prefill/decode/verify/draft "
+          f"{int(summ['compile_count_prefill'])}/"
+          f"{int(summ['compile_count_decode'])}/"
+          f"{int(summ['compile_count_verify'])}/"
+          f"{int(summ['compile_count_draft'])}")
+    if args.speculate != "off":
+        print(f"speculative ({args.speculate}, K={args.draft_tokens}): "
+              f"accept-rate {summ['accept_rate']:.2f}, "
+              f"{summ['spec_tokens_per_step']:.2f} tokens/step "
+              f"over {int(summ['spec_steps'])} spec steps")
     by_rid = sorted(finished, key=lambda r: r.rid)
     print("sample:", by_rid[0].generated[:12])
 
@@ -167,6 +182,18 @@ def main() -> None:
     ap.add_argument("--prefix-cache", action="store_true",
                     help="reuse committed KV pages across requests that "
                          "share a page-aligned prompt prefix")
+    ap.add_argument("--speculate", default="off",
+                    choices=["off", "ngram", "self"],
+                    help="speculative decoding drafter: prompt-lookup "
+                         "n-gram (no extra weights) or truncated-layer "
+                         "self-draft")
+    ap.add_argument("--draft-tokens", type=int, default=4,
+                    help="draft tokens per speculative step (K)")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="self-draft depth (0 = half the layers)")
+    ap.add_argument("--draft-quant", default="",
+                    help="draft-model recipe / policy spec "
+                         "(default: same as --quant)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=0,
                     help="cache horizon (0 = prompt+gen)")

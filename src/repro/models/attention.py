@@ -181,13 +181,22 @@ def gqa_apply(
         out = attention_core(q, ck, cv, qpos, jnp.arange(cap), causal=True,
                              softmax_dtype=smd)
     else:
-        assert s == 1 and decode_pos is not None
+        assert decode_pos is not None
         if adapter is None:
             adapter = dense_gqa_adapter(cfg)
-        (ck, cv), new_cache = adapter.update(cache, (k[:, 0], v[:, 0]),
-                                             decode_pos)
+        if s == 1:
+            (ck, cv), new_cache = adapter.update(cache, (k[:, 0], v[:, 0]),
+                                                 decode_pos)
+            qpos = decode_pos[:, None]
+        else:
+            # Speculative verify: the S-token span [t0, d1..d_{S-1}] writes
+            # into per-layer scratch (committed storage untouched until the
+            # adapter's commit_span); queries attend causally over the
+            # dense view with the span overlaid at its absolute positions.
+            (ck, cv), new_cache = adapter.update_span(cache, (k, v),
+                                                      decode_pos)
+            qpos = decode_pos[:, None] + jnp.arange(s)[None, :]
         t = ck.shape[1]
-        qpos = decode_pos[:, None]
         kpos = jnp.arange(t)
         out = attention_core(q, ck, cv, qpos, kpos, causal=True,
                              softmax_dtype=smd)

@@ -80,6 +80,50 @@ class DenseCacheAdapter:
         }
         return tuple(new[name] for name in self.streams), new
 
+    # ------------------------------------------------- speculative span
+    def update_span(self, cache, toks, pos):
+        """Speculative write of S tokens per slot starting at ``pos``.
+
+        The span lands in per-stream ``spec_<name>`` scratch leaves —
+        committed storage is untouched, so rejecting draft tokens is simply
+        *not committing* them. The returned dense views overlay the scratch
+        span at [pos, pos+S) for the verify attention; positions past the
+        span hold stale/old values whose positions are causally masked.
+        """
+        b, s = toks[0].shape[:2]
+        bidx = jnp.arange(b)[:, None]
+        span = pos[:, None] + jnp.arange(s)[None, :]
+        new = dict(cache)
+        dense = []
+        for name, tok in zip(self.streams, toks):
+            tok = tok.astype(self.dtype)
+            new["spec_" + name] = tok
+            dense.append(cache[name].at[bidx, span].set(tok, mode="drop"))
+        return tuple(dense), new
+
+    def commit_span(self, caches, pos, n_commit):
+        """Commit each slot's first ``n_commit`` scratch tokens; drop the
+        rest (rollback). Operates on the STACKED (L, ...) tree returned by
+        a verify pass. Only accepted positions are scattered — rejected
+        span positions are redirected out of bounds and dropped — so the
+        committed cache is byte-identical to a never-speculated sequence of
+        single-token :meth:`update` calls from the same state, whatever
+        that state was. Scratch leaves are stripped from the result.
+        """
+        scr = {name: caches["spec_" + name] for name in self.streams}
+        s = scr[self.streams[0]].shape[2]
+        b = scr[self.streams[0]].shape[1]
+        bidx = jnp.arange(b)[:, None]
+        span = pos[:, None] + jnp.arange(s)[None, :]            # (b, S)
+        keep = jnp.arange(s)[None, :] < n_commit[:, None]       # (b, S)
+        out = {}
+        for name in self.streams:
+            c = caches[name]                                    # (L, b, t, ..)
+            spn = jnp.where(keep, span, c.shape[2])             # OOB -> drop
+            out[name] = c.at[:, bidx, spn].set(
+                scr[name].astype(c.dtype), mode="drop")
+        return out
+
     # ------------------------------------------------- chunked/bucketed path
     def prefill_buffer(self, num_layers: int, max_len: int):
         """Zeroed dense context buffer for one request's chunked prefill."""
@@ -132,6 +176,19 @@ class DenseCacheAdapter:
         """Marginal cache storage per cached token (one layer)."""
         itemsize = self.dtype.itemsize
         return float(sum(itemsize * math.prod(feat) for feat in self.feats))
+
+
+def cached_insert_fn(adapter, fns: Dict[int, Any], tdim: int):
+    """The per-buffer-time-dim jitted ``insert_from_buffer`` (donated
+    caches), memoized in ``fns``. Shared by the serving engine's slot-cache
+    insert and the self-drafter's draft-cache insert so both stay on one
+    insert code path (and one compile per distinct buffer size)."""
+    if tdim not in fns:
+        fns[tdim] = jax.jit(
+            lambda c, buf, slot, length:
+                adapter.insert_from_buffer(c, buf, slot, length),
+            donate_argnums=(0,))
+    return fns[tdim]
 
 
 def dense_gqa_adapter(cfg: ModelConfig) -> DenseCacheAdapter:

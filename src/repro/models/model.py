@@ -460,6 +460,41 @@ class Model:
         logits = self._lm_head(params, x_last, ctx)
         return logits, new_caches
 
+    def verify_step(self, params, inputs, pos, caches, ctx: QuantCtx):
+        """Score an S-token span per slot in one call (speculative verify).
+
+        ``inputs``: {"tokens": (b, S)} — each slot's current token followed
+        by S-1 draft tokens; ``pos``: (b,) the span's first write/attend
+        position. This is ``decode_step`` generalized from s==1 to a span
+        (the decode-with-cache analogue of ``prefill_chunk``): queries
+        attend causally over the slot cache with the span overlaid at its
+        absolute positions, and the span's K/V land in per-layer *scratch*
+        leaves on the returned caches — committed storage is untouched
+        until the cache adapter's ``commit_span``, so rejected draft tokens
+        roll back by simply not being committed. Returns
+        (logits (b, S, V), caches-with-scratch); ``logits[:, j]`` is the
+        target's next-token distribution after span input ``j``.
+        """
+        cfg = self.cfg
+        if cfg.family in ("ssm", "hybrid") or cfg.attention != "gqa":
+            raise NotImplementedError(
+                f"speculative verify requires a GQA attention stack; "
+                f"{cfg.name} is family={cfg.family}/attention={cfg.attention}")
+        if cfg.rope_type == "mrope":
+            raise NotImplementedError(
+                "speculative verify: mrope positions are prompt-global")
+        x, _ = self._embed_inputs(params, inputs)
+        b, s = x.shape[:2]
+        positions = (pos[:, None].astype(jnp.int32)
+                     + jnp.arange(s, dtype=jnp.int32)[None, :])
+        positions = jnp.broadcast_to(positions, (b, s))
+        x, new_caches, _ = self._run_stack(
+            params, x, positions, ctx, mode="verify", caches=caches,
+            decode_pos=pos,
+        )
+        logits = self._lm_head(params, x, ctx)
+        return logits, new_caches
+
     def decode_step(self, params, inputs, pos, caches, ctx: QuantCtx):
         """One decode step. inputs: {"token": (b,)} or {"embedding": (b,1,d)};
         pos: (b,) write/attend positions; caches as returned by cache_specs.

@@ -15,11 +15,20 @@ from .kvcache import (
     prefix_page_keys,
 )
 from .metrics import ServeMetrics
-from .sampling import sample_tokens
+from .sampling import sample_tokens, speculative_accept
 from .scheduler import QueueFull, Request, Scheduler
+from .speculative import (
+    Drafter,
+    NgramDrafter,
+    SelfDrafter,
+    StubDrafter,
+    prompt_lookup,
+)
 
 __all__ = [
     "Engine", "EngineConfig", "chunk_buckets", "PagePool",
     "QuantizedKVAdapter", "make_adapter", "prefix_page_keys",
-    "ServeMetrics", "sample_tokens", "QueueFull", "Request", "Scheduler",
+    "ServeMetrics", "sample_tokens", "speculative_accept",
+    "QueueFull", "Request", "Scheduler",
+    "Drafter", "NgramDrafter", "SelfDrafter", "StubDrafter", "prompt_lookup",
 ]

@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import PrecisionPolicy
+from repro.models.cache import cached_insert_fn
 from repro.models.layers import QuantCtx
 from repro.models.model import Model
 
@@ -57,8 +58,9 @@ from .kvcache import (
     prefix_page_keys,
 )
 from .metrics import ServeMetrics
-from .sampling import sample_tokens
+from .sampling import sample_tokens, speculative_accept
 from .scheduler import Request, Scheduler
+from .speculative import Drafter, make_drafter
 
 
 def chunk_buckets(chunk: int, min_bucket: int = 16) -> Tuple[int, ...]:
@@ -101,6 +103,13 @@ class EngineConfig:
     prefill_token_budget: int = 0    # prompt tokens per step (0 -> chunk)
     prefix_cache: bool = False       # shared-prefix page reuse
     prefix_cache_pages: int = 1024   # PagePool capacity (committed pages)
+    speculate: str = "off"           # off | ngram | self (see speculative.py)
+    draft_tokens: int = 4            # K draft tokens per speculative step
+    ngram_max: int = 3               # prompt-lookup max n-gram length
+    self_draft_layers: int = 0       # draft depth for --speculate self
+                                     # (0 -> num_layers // 2)
+    draft_quant_mode: str = ""       # draft recipe / policy spec
+                                     # ("" -> quant_mode)
     record_prefill_logits: bool = False   # keep last-prompt-position logits
                                           # on each Request (tests/debug)
     max_waiting: int = 256           # waiting-queue backpressure bound
@@ -120,7 +129,8 @@ class _PrefillState:
 class Engine:
     """Continuous-batching engine over a ``Model`` + params."""
 
-    def __init__(self, model: Model, params, config: EngineConfig = EngineConfig()):
+    def __init__(self, model: Model, params, config: EngineConfig = EngineConfig(),
+                 drafter: Optional[Drafter] = None):
         cfg = model.cfg
         if not cfg.is_decoder:
             raise ValueError(f"{cfg.name} is encoder-only — nothing to serve")
@@ -170,12 +180,34 @@ class Engine:
         self._prefilling: "OrderedDict[int, _PrefillState]" = OrderedDict()
         self._page_refs: Dict[int, List[bytes]] = {}   # slot -> pinned keys
 
+        # Speculative decoding: the drafter proposes K tokens per active
+        # slot each step; one fused verify jit scores all of them, and only
+        # the accepted prefix is committed into the cache (rejected drafts
+        # roll back — committed page payloads are never re-encoded).
+        if drafter is not None or config.speculate not in ("off", ""):
+            if not self._chunked:
+                raise NotImplementedError(
+                    "speculative decoding requires the chunked (GQA) "
+                    f"serving path; {cfg.name} uses the whole-prompt "
+                    "fallback")
+            if config.draft_tokens < 1:
+                raise ValueError(
+                    f"draft_tokens must be >= 1, got {config.draft_tokens}")
+        self.drafter = (drafter if drafter is not None else
+                        make_drafter(config.speculate, self.model, params,
+                                     config))
+        if self.drafter is not None:
+            self.drafter.bind(self)
+
         # jit caches. Prefill compiles once per bucket (the per-prompt-length
-        # blowup fix); insert once per buffer time-size; decode/page ops once.
+        # blowup fix); insert once per buffer time-size; decode/page ops and
+        # the speculative verify/accept/commit once each.
         self._chunk_fns: Dict[int, Any] = {}
         self._pad_prefill_fns: Dict[int, Any] = {}
         self._insert_fns: Dict[int, Any] = {}
         self._prefill_shapes = set()
+        self._decode_shapes = set()
+        self._verify_shapes = set()
         # Donate the cache tree / context buffers: the engine rebinds them to
         # the jit output immediately, so XLA may update the (large) buffers
         # in place instead of copying them every step. (No-op on backends
@@ -183,6 +215,15 @@ class Engine:
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._write_page = jax.jit(self._write_page_impl, donate_argnums=(0,))
         self._load_page = jax.jit(self._load_page_impl, donate_argnums=(0,))
+        self._verify = jax.jit(self._verify_impl, donate_argnums=(1,))
+        self._accept = jax.jit(self._accept_impl)
+        # Committed leaves are donated (updated in place); the scratch spans
+        # are stripped by commit_span and passed undonated.
+        self._commit = jax.jit(
+            lambda caches, scratch, pos, n_commit:
+                self.adapter.commit_span({**caches, **scratch}, pos,
+                                         n_commit),
+            donate_argnums=(0,))
 
         self.reset_metrics()
 
@@ -193,6 +234,10 @@ class Engine:
             num_layers=self.model.cfg.num_layers,
         )
         self.metrics.prefill_compiles = len(self._prefill_shapes)
+        self.metrics.decode_compiles = len(self._decode_shapes)
+        self.metrics.verify_compiles = len(self._verify_shapes)
+        if self.drafter is not None:
+            self.metrics.draft_compiles = self.drafter.compile_count
 
     # ------------------------------------------------------------------ jitted
     def _ctx(self, step_idx) -> QuantCtx:
@@ -227,6 +272,25 @@ class Engine:
                             gencnt)
         return nxt, caches
 
+    def _verify_impl(self, params, caches, tokens, pos, step_idx):
+        """Score the (b, K+1) spans [current token, K drafts] in one call.
+
+        Returns (logits (b, K+1, V), caches-with-scratch): span K/V land in
+        per-layer scratch leaves; nothing is committed until ``_commit``.
+        """
+        ctx = self._ctx(step_idx)
+        return self.model.verify_step(params, {"tokens": tokens}, pos,
+                                      caches, ctx)
+
+    def _accept_impl(self, logits, drafts, q, temps, topks, seeds, gencnt):
+        """Greedy / lossless rejection-sampling acceptance over a verified
+        span. ``q=None`` (deterministic drafters) becomes the one-hot delta
+        proposal here, inside the jit."""
+        if q is None:
+            q = jax.nn.one_hot(drafts, logits.shape[-1], dtype=jnp.float32)
+        return speculative_accept(logits, drafts, q, temps, topks,
+                                  self._base_key, seeds, gencnt)
+
     def _write_page_impl(self, caches, slot, start, payload):
         return self.adapter.write_page_payload(caches, slot, start, payload)
 
@@ -247,13 +311,7 @@ class Engine:
         return fns[size]
 
     def _get_insert_fn(self, tdim: int):
-        if tdim not in self._insert_fns:
-            adapter = self.adapter
-            self._insert_fns[tdim] = jax.jit(
-                lambda c, buf, slot, length:
-                    adapter.insert_from_buffer(c, buf, slot, length),
-                donate_argnums=(0,))
-        return self._insert_fns[tdim]
+        return cached_insert_fn(self.adapter, self._insert_fns, tdim)
 
     # ------------------------------------------------------------------ public
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
@@ -285,7 +343,8 @@ class Engine:
         return rid
 
     def step(self) -> List[Request]:
-        """Run one engine step: budgeted prefill chunks, then one decode.
+        """Run one engine step: budgeted prefill chunks, then one decode
+        (or one multi-token speculative step when a drafter is configured).
 
         Returns the requests that finished during this step.
         """
@@ -300,7 +359,10 @@ class Engine:
             budget -= self._prefill_chunk_step(st, budget, finished)
 
         n_active = int(self._active.sum())
-        if n_active:
+        if n_active and self.drafter is not None:
+            self._speculative_step(finished)
+        elif n_active:
+            self._track_compile(self._decode_shapes, ("decode", self.config.n_slots))
             nxt, self.caches = self._decode(
                 self.params, self.caches,
                 jnp.asarray(self._tokens), jnp.asarray(self._pos),
@@ -323,6 +385,87 @@ class Engine:
         self.metrics.record_step(self.metrics.now() - t_start, n_active,
                                  self.scheduler.occupancy)
         return finished
+
+    def _track_compile(self, shapes: set, key) -> None:
+        shapes.add(key)
+        self.metrics.decode_compiles = len(self._decode_shapes)
+        self.metrics.verify_compiles = len(self._verify_shapes)
+        if self.drafter is not None:
+            self.metrics.draft_compiles = self.drafter.compile_count
+
+    def _speculative_step(self, finished: List[Request]) -> None:
+        """One multi-token step: draft K, verify K+1 in one jitted call,
+        commit the accepted prefix, roll the rejected suffix back.
+
+        Per active slot: the span [t0, d1..dK] is scored at positions
+        [pos, pos+K]; acceptance (greedy exact-match or lossless rejection
+        sampling) yields n_accept in [0, K]; t0 plus the accepted drafts
+        commit into the slot cache (quantized pages encode exactly once, at
+        commit, never from rejected tokens) and n_accept + 1 tokens are
+        emitted — the last one (bonus / resample) becomes the slot's
+        current token, its K/V written by the NEXT step, exactly like plain
+        decode's one-token pipeline.
+        """
+        active = self._active.copy()
+        k = self.config.draft_tokens
+        drafts, qprobs = self.drafter.propose(self, active, k)
+        self._track_compile(self._verify_shapes, ("verify", k + 1))
+
+        tokens = np.concatenate([self._tokens[:, None], drafts], axis=1)
+        # Copy before handing to jit: on CPU, jnp.asarray may alias numpy
+        # memory zero-copy, and the host bookkeeping below mutates _pos
+        # while the (async) commit computation still reads its pos operand.
+        pos = jnp.asarray(self._pos.copy())
+        logits, caches_s = self._verify(
+            self.params, self.caches, jnp.asarray(tokens), pos,
+            self._step_idx)
+        n_acc, emitted = self._accept(
+            logits, jnp.asarray(drafts), qprobs,
+            jnp.asarray(self._temps), jnp.asarray(self._topks),
+            jnp.asarray(self._seeds), jnp.asarray(self._gencnt))
+        n_acc = np.asarray(jax.block_until_ready(n_acc))
+        emitted = np.asarray(emitted)
+
+        # Commit t0 + accepted drafts; inactive slots commit nothing. The
+        # clip to remaining capacity only bites on requests that finish
+        # this step (their slots retire and reset on reuse).
+        n_commit = np.where(active, 1 + n_acc, 0)
+        n_commit = np.minimum(n_commit, self.capacity - self._pos)
+        committed_leaves = {k: caches_s[k] for k in self.caches}
+        scratch_leaves = {k: v for k, v in caches_s.items()
+                          if k not in self.caches}
+        self.caches = self._commit(committed_leaves, scratch_leaves, pos,
+                                   jnp.asarray(n_commit))
+
+        emitted_total = 0
+        for slot in np.flatnonzero(active):
+            slot = int(slot)
+            req = self.scheduler.request_in(slot)
+            na = int(n_acc[slot])
+            req.spec_steps += 1
+            req.draft_proposed += k
+            req.draft_accepted += na
+            self._pos[slot] += int(n_commit[slot])
+            last = None
+            for tok in emitted[slot, :na + 1]:
+                if req.done:
+                    break
+                tok = int(tok)
+                req.generated.append(tok)
+                self._gencnt[slot] += 1
+                emitted_total += 1
+                last = tok
+                if req.eos_id is not None and tok == req.eos_id:
+                    req.finish_reason = "eos"
+                elif len(req.generated) >= req.max_new_tokens:
+                    req.finish_reason = "length"
+            self._tokens[slot] = last
+            self._maybe_finish(slot, req, last, finished)
+
+        n_active = int(active.sum())
+        self.metrics.record_speculation(
+            proposed=k * n_active, accepted=int(n_acc[active].sum()),
+            emitted=emitted_total, n_slots=n_active)
 
     def drain(self, max_steps: Optional[int] = None) -> List[Request]:
         """Run ``step()`` until all submitted work is finished."""
@@ -434,6 +577,11 @@ class Engine:
         tdim = next(iter(buf.values())).shape[2]
         self.caches = self._get_insert_fn(tdim)(
             self.caches, buf, jnp.int32(slot), jnp.int32(s))
+        if self.drafter is not None:
+            # e.g. SelfDrafter seeds its draft cache from the (all-layer)
+            # dense prefill buffer — layer i's K/V depend only on layers
+            # < i, so the buffer's first draft_layers ARE the draft cache.
+            self.drafter.on_insert(slot, req, buf, s)
 
         quantized = isinstance(self.adapter, QuantizedKVAdapter)
         if quantized:

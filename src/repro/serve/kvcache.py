@@ -186,24 +186,39 @@ class QuantizedKVAdapter:
     def _mean_or_none(self, cache):
         return cache["mean"] if self.centered else None
 
-    def update(self, cache, toks, pos):
-        """Write one token per slot at ``pos``; return dense K/V views."""
-        k_tok, v_tok = toks
-        b = k_tok.shape[0]
+    @property
+    def _page_keys(self):
+        return ("codes", "scales", "pamax") + (
+            ("mean",) if self.centered else ())
+
+    def _append(self, st, tok, pos, active):
+        """ONE plain-decode append, masked by ``active``: write ``tok`` into
+        the bf16 tail at ``pos``, commit the page when the tail fills.
+
+        ``st`` holds the tail + page leaves (any extra leaves pass through
+        untouched); ``tok``: (b, 2, n, hd). This is the single token-append
+        implementation — :meth:`update` (plain decode) and
+        :meth:`commit_span` (speculative commit) both run it, which is what
+        makes speculative page payloads bitwise-identical to a
+        never-speculated run by construction.
+        """
+        b = tok.shape[0]
         p = self.page_size
         bidx = jnp.arange(b)
         tidx = pos % p
         pidx = pos // p
-        tok = jnp.stack([k_tok, v_tok], axis=1).astype(self.dtype)  # (b,2,n,hd)
 
-        tail = cache["tail"].at[bidx, tidx].set(tok)
+        cur = st["tail"][bidx, tidx]
+        m_tok = active.reshape((b,) + (1,) * (cur.ndim - 1))
+        tail = st["tail"].at[bidx, tidx].set(
+            jnp.where(m_tok, tok.astype(self.dtype), cur))
 
         # Commit the page for slots whose tail just filled. A commit happens
-        # only once per page_size steps per slot, so the (expensive) encode
-        # runs under a batch-wide lax.cond and is skipped on most steps.
-        commit = tidx == p - 1                                     # (b,)
-        page_keys = ("codes", "scales", "pamax") + (
-            ("mean",) if self.centered else ())
+        # only once per page_size appends per slot, so the (expensive)
+        # encode runs under a batch-wide lax.cond and is skipped on most
+        # steps.
+        commit = active & (tidx == p - 1)                          # (b,)
+        page_keys = self._page_keys
 
         def commit_pages(ops):
             codes_new, scales_new, pamax_new, mu_new = encode_pages(
@@ -223,24 +238,86 @@ class QuantizedKVAdapter:
 
         committed = jax.lax.cond(
             jnp.any(commit), commit_pages, lambda ops: ops,
-            tuple(cache[k] for k in page_keys))
+            tuple(st[k] for k in page_keys))
 
-        new = dict(cache)
+        new = dict(st)
         new["tail"] = tail
         new.update(zip(page_keys, committed))
+        return new
 
-        # Dense attendable view: dequantize committed pages, overlay the
-        # exact bf16 tail over the current page's span (stale tail entries
-        # land at future positions and are causally masked).
-        deq = decode_pages(new["codes"], new["scales"], new["pamax"],
-                           self._mean_or_none(new), dtype=self.dtype,
+    def _dense_view(self, st, pidx):
+        """Dense attendable (b, cap, 2, n, hd) view: dequantize committed
+        pages, overlay the exact bf16 tail over the current page's span
+        (stale tail entries land at future positions and are causally
+        masked)."""
+        p = self.page_size
+        deq = decode_pages(st["codes"], st["scales"], st["pamax"],
+                           self._mean_or_none(st), dtype=self.dtype,
                            block_size=self.block_size)
-        n_pages = deq.shape[1]
+        b, n_pages = deq.shape[:2]
         cap = n_pages * p
         dense = deq.reshape((b, cap) + deq.shape[3:])              # (b,cap,2,n,hd)
         span = pidx[:, None] * p + jnp.arange(p)[None, :]          # (b,P)
-        dense = dense.at[bidx[:, None], span].set(tail)
+        return dense.at[jnp.arange(b)[:, None], span].set(st["tail"])
+
+    def update(self, cache, toks, pos):
+        """Write one token per slot at ``pos``; return dense K/V views."""
+        k_tok, v_tok = toks
+        b = k_tok.shape[0]
+        tok = jnp.stack([k_tok, v_tok], axis=1).astype(self.dtype)  # (b,2,n,hd)
+        new = self._append(cache, tok, pos, jnp.ones((b,), bool))
+        dense = self._dense_view(new, pos // self.page_size)
         return (dense[:, :, 0], dense[:, :, 1]), new
+
+    # ------------------------------------------------- speculative span
+    def update_span(self, cache, toks, pos):
+        """Speculative write of S tokens per slot starting at ``pos``.
+
+        The span lands ONLY in a ``scratch`` leaf — neither the committed
+        pages nor the bf16 tail are touched, so no page can be encoded from
+        draft tokens before they are accepted. The dense views overlay the
+        scratch span over the usual pages+tail view for the verify
+        attention.
+        """
+        k_tok, v_tok = toks                                # (b, S, n, hd)
+        b, s = k_tok.shape[:2]
+        tok = jnp.stack([k_tok, v_tok], axis=2).astype(self.dtype)
+        dense = self._dense_view(cache, pos // self.page_size)
+        span = pos[:, None] + jnp.arange(s)[None, :]
+        dense = dense.at[jnp.arange(b)[:, None], span].set(tok, mode="drop")
+        new = dict(cache)
+        new["scratch"] = tok
+        return (dense[:, :, 0], dense[:, :, 1]), new
+
+    def commit_span(self, caches, pos, n_commit):
+        """Commit each slot's first ``n_commit`` scratch tokens; drop the
+        rest (rollback). Operates on the STACKED (L, ...) tree returned by
+        a verify pass; strips the scratch leaf.
+
+        Accepted tokens replay through :meth:`_append` one at a time (a
+        ``lax.scan`` over the static span length, layers folded into the
+        batch axis), i.e. literally the plain-decode append path — tail
+        writes and page encodes happen in the same order, from the same
+        bf16 values, so committed page payloads (codes/scales/pamax/mean)
+        are byte-identical to a never-speculated run and rejected tokens
+        leave no trace.
+        """
+        scr = caches["scratch"]                    # (L, b, S, 2, n, hd)
+        nl, b, s = scr.shape[:3]
+        flat = {k: caches[k].reshape((nl * b,) + caches[k].shape[2:])
+                for k in self._page_keys + ("tail",)}
+        tok_steps = jnp.moveaxis(
+            scr.reshape((nl * b, s) + scr.shape[3:]), 1, 0)    # (S, L*b, ...)
+        posf = jnp.broadcast_to(pos[None], (nl, b)).reshape(-1)
+        ncf = jnp.broadcast_to(n_commit[None], (nl, b)).reshape(-1)
+
+        def body(st, xs):
+            tok, i = xs
+            return self._append(st, tok, posf + i, i < ncf), None
+
+        flat, _ = jax.lax.scan(body, flat, (tok_steps, jnp.arange(s)))
+        return {k: flat[k].reshape((nl, b) + flat[k].shape[1:])
+                for k in flat}
 
     def prefill_buffer(self, num_layers: int, max_len: int):
         """Zeroed *dense bf16* context buffer for one request's chunked

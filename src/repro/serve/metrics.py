@@ -29,7 +29,21 @@ class ServeMetrics:
     prefix_hit_tokens: int = 0         # prompt tokens served from the pool
     prefix_hit_pages: int = 0
     prefix_lookup_pages: int = 0       # full pages eligible for reuse
-    prefill_compiles: int = 0          # distinct prefill jit shapes compiled
+    # distinct jit shapes compiled, split by engine phase: prefill (chunk /
+    # padded-prompt shapes), decode (the fused 1-token step), verify (the
+    # fused S-token speculative step + accept/commit), draft (the drafter's
+    # own jits). Speculation with a fixed K adds a CONSTANT number of
+    # verify/draft shapes however mixed the prompt lengths are.
+    prefill_compiles: int = 0
+    decode_compiles: int = 0
+    verify_compiles: int = 0
+    draft_compiles: int = 0
+    # speculative decoding: acceptance + multi-token throughput
+    spec_steps: int = 0                # speculative (multi-token) steps run
+    spec_slot_steps: int = 0           # active slots summed over spec steps
+    draft_tokens_proposed: int = 0
+    draft_tokens_accepted: int = 0
+    spec_tokens_emitted: int = 0       # tokens emitted across spec steps
     _t0: Optional[float] = None
     _t1: Optional[float] = None
 
@@ -57,6 +71,17 @@ class ServeMetrics:
         self.prefix_lookup_pages += lookup_pages
         self.prefix_hit_tokens += hit_pages * page_size
 
+    def record_speculation(self, proposed: int, accepted: int, emitted: int,
+                           n_slots: int):
+        """One speculative step's batch totals (draft tokens proposed across
+        the ``n_slots`` active slots, accepted by the target, tokens
+        actually emitted)."""
+        self.spec_steps += 1
+        self.spec_slot_steps += n_slots
+        self.draft_tokens_proposed += proposed
+        self.draft_tokens_accepted += accepted
+        self.spec_tokens_emitted += emitted
+
     # ------------------------------------------------------------------ views
     @property
     def total_generated(self) -> int:
@@ -83,5 +108,23 @@ class ServeMetrics:
             "prefix_hit_rate": (self.prefix_hit_pages
                                 / self.prefix_lookup_pages
                                 if self.prefix_lookup_pages else 0.0),
+            # per-phase compile split; bare compile_count keeps its pre-split
+            # meaning (prefill shapes) for existing consumers
             "compile_count": float(self.prefill_compiles),
+            "compile_count_prefill": float(self.prefill_compiles),
+            "compile_count_decode": float(self.decode_compiles),
+            "compile_count_verify": float(self.verify_compiles),
+            "compile_count_draft": float(self.draft_compiles),
+            # speculative decoding
+            "spec_steps": float(self.spec_steps),
+            "accept_rate": (self.draft_tokens_accepted
+                            / self.draft_tokens_proposed
+                            if self.draft_tokens_proposed else 0.0),
+            # tokens emitted per ACTIVE SLOT per speculative step — the
+            # plain-decode baseline is exactly 1.0 by construction
+            "spec_tokens_per_step": (self.spec_tokens_emitted
+                                     / self.spec_slot_steps
+                                     if self.spec_slot_steps else 0.0),
+            "draft_tokens_proposed": float(self.draft_tokens_proposed),
+            "draft_tokens_accepted": float(self.draft_tokens_accepted),
         }

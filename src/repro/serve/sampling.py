@@ -1,4 +1,5 @@
-"""Token sampling for the serving engine: greedy, temperature, top-k.
+"""Token sampling for the serving engine: greedy, temperature, top-k, and
+speculative (draft-token) acceptance.
 
 Everything is batched over decode slots with *per-slot* parameters, so one
 fused jitted step serves heterogeneous requests: slots with temperature 0
@@ -9,6 +10,18 @@ draw depends only on (seed, token index), not on admission timing or batch
 composition. (Full generation invariance additionally requires deterministic
 logits, i.e. a non-stochastic quant recipe: under SR recipes the quant noise
 is keyed by the engine step index, and blockwise tensor scales couple slots.)
+
+Speculative acceptance (:func:`speculative_accept`) extends the same key
+discipline to multi-token verify steps: the accept-test uniform, the
+residual resample, and the draft model's own proposal draws each live on a
+tag-separated stream keyed by (request seed, emission index), so speculative
+generations inherit the admission-timing invariance of the plain path.
+Greedy acceptance is exact token comparison (token-identical to plain
+decode); stochastic acceptance is the lossless rejection-sampling rule —
+accept draft ``d`` w.p. ``min(1, p(d)/q(d))``, else resample from the
+normalized residual ``max(p - q, 0)`` — whose output provably follows the
+target distribution ``p`` for ANY proposal ``q`` (delta/one-hot ``q`` for
+deterministic drafters included).
 """
 from __future__ import annotations
 
@@ -16,6 +29,25 @@ import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+
+# Tag constants separating the speculative PRNG streams from the plain
+# sampling stream (which folds only (seed, index) into the base key).
+ACCEPT_TAG = 0x5bec_0001   # accept-test uniforms
+RESID_TAG = 0x5bec_0002    # residual (post-rejection) resamples
+DRAFT_TAG = 0x5bec_0003    # the draft model's own proposal draws
+
+
+def _stream_keys(key: jax.Array, seeds: jax.Array, offsets: jax.Array,
+                 tag=None) -> jax.Array:
+    """Per-slot keys folding (seed, token index) into ``key``. ``tag=None``
+    is THE plain sampling derivation (:func:`sample_tokens` uses it), so
+    tagged speculative streams and the full-accept bonus draw — which must
+    match what a plain decode step would fold for that emission index —
+    stay consistent with it by construction."""
+    base = key if tag is None else jax.random.fold_in(key, tag)
+    return jax.vmap(
+        lambda s, o: jax.random.fold_in(jax.random.fold_in(base, s), o)
+    )(seeds, offsets)
 
 
 def apply_top_k(logits: jax.Array, top_k: jax.Array) -> jax.Array:
@@ -47,10 +79,108 @@ def sample_tokens(
     temp = jnp.maximum(temperature, 1e-6)[:, None]
     if offsets is None:
         offsets = jnp.zeros(seeds.shape, jnp.int32)
-    keys = jax.vmap(
-        lambda s, o: jax.random.fold_in(jax.random.fold_in(key, s), o)
-    )(seeds, offsets)
+    keys = _stream_keys(key, seeds, offsets)
     sampled = jax.vmap(
         lambda k, row: jax.random.categorical(k, row)
     )(keys, lg / temp).astype(jnp.int32)
     return jnp.where(temperature > 0, sampled, greedy)
+
+
+# --------------------------------------------------------------------------
+# Speculative decoding: proposal distributions + acceptance
+# --------------------------------------------------------------------------
+
+def proposal_probs(
+    logits: jax.Array,        # (b, V) draft-model logits
+    temperature: jax.Array,   # (b,)
+    top_k: jax.Array,         # (b,)
+    chosen: jax.Array,        # (b,) the token the drafter actually proposed
+) -> jax.Array:
+    """The distribution a drafted token was ACTUALLY drawn from: the top-k +
+    temperature-scaled softmax for sampling slots, a one-hot delta at
+    ``chosen`` for greedy slots. Feeding the true ``q`` into
+    :func:`speculative_accept` is what makes the acceptance rule lossless.
+    """
+    v = logits.shape[-1]
+    lg = apply_top_k(logits.astype(jnp.float32), top_k)
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    soft = jax.nn.softmax(lg / temp, axis=-1)
+    delta = jax.nn.one_hot(chosen, v, dtype=jnp.float32)
+    return jnp.where((temperature > 0)[:, None], soft, delta)
+
+
+def speculative_accept(
+    logits: jax.Array,        # (b, S, V) target logits over [t0, d1..dK]
+    drafts: jax.Array,        # (b, K) draft tokens, K = S - 1
+    q: jax.Array,             # (b, K, V) proposal probs (one-hot for
+                              # deterministic drafters)
+    temperature: jax.Array,   # (b,)
+    top_k: jax.Array,         # (b,)
+    key: jax.Array,           # base PRNG key (fixed per engine)
+    seeds: jax.Array,         # (b,) request seeds
+    gencnt: jax.Array,        # (b,) emission index of the FIRST draft token
+):
+    """Accept a verified draft span; returns ``(n_accept, emitted)``.
+
+    ``logits[:, j]`` is the target's next-token distribution after input
+    ``j`` of the span ``[t0, d1..dK]``, i.e. the reference for draft
+    ``d_{j+1}``. Greedy slots accept ``d_i`` iff it equals the target
+    argmax (token-identical to plain decode by construction); sampling
+    slots run lossless rejection sampling against ``q``. Every step emits
+    ``n_accept`` draft tokens plus one correction/bonus token, so
+    ``emitted`` is (b, S) with ``emitted[:, :n_accept]`` the accepted
+    drafts, ``emitted[:, n_accept]`` the final token, zeros beyond. The
+    full-accept bonus draw uses the PLAIN (untagged) key for its emission
+    index, matching what a plain decode step would fold for that token.
+    """
+    b, s, v = logits.shape
+    k_draft = s - 1
+    lg = logits.astype(jnp.float32)
+    lgm = apply_top_k(lg.reshape(b * s, v),
+                      jnp.repeat(top_k, s)).reshape(b, s, v)
+    temp = jnp.maximum(temperature, 1e-6)[:, None, None]
+    p = jax.nn.softmax(lgm / temp, axis=-1)                    # (b, S, V)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)         # (b, S)
+
+    # -- per-position accept tests ------------------------------------------
+    p_d = jnp.take_along_axis(p[:, :k_draft], drafts[..., None],
+                              axis=-1)[..., 0]                 # (b, K)
+    q_d = jnp.take_along_axis(q, drafts[..., None], axis=-1)[..., 0]
+    idx = gencnt[:, None] + jnp.arange(k_draft)[None, :]       # (b, K)
+    ukeys = _stream_keys(key, jnp.repeat(seeds, k_draft),
+                         idx.reshape(-1), tag=ACCEPT_TAG)
+    u = jax.vmap(jax.random.uniform)(ukeys).reshape(b, k_draft)
+    accept_sampled = u * q_d < p_d                 # u < p/q without the div
+    accept_greedy = drafts == greedy[:, :k_draft]
+    accept = jnp.where((temperature > 0)[:, None], accept_sampled,
+                       accept_greedy)
+    lead = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
+    n_accept = lead.sum(axis=-1).astype(jnp.int32)             # (b,)
+
+    # -- correction token at span position n_accept -------------------------
+    # rejection at r < K: resample from the normalized residual max(p-q, 0)
+    res = jnp.maximum(p[:, :k_draft] - q, 0.0)
+    res = res / jnp.maximum(res.sum(-1, keepdims=True), 1e-30)
+    r = jnp.minimum(n_accept, k_draft - 1)
+    res_r = jnp.take_along_axis(res, r[:, None, None], axis=1)[:, 0]
+    rkeys = _stream_keys(key, seeds, gencnt + n_accept, tag=RESID_TAG)
+    resid_tok = jax.vmap(jax.random.categorical)(
+        rkeys, jnp.log(res_r + 1e-30)).astype(jnp.int32)
+    # full accept: bonus from the target's own next distribution, drawn with
+    # the plain-path key for that emission index
+    bkeys = _stream_keys(key, seeds, gencnt + k_draft)
+    bonus_lg = lgm[:, k_draft] / jnp.maximum(temperature, 1e-6)[:, None]
+    bonus_tok = jax.vmap(jax.random.categorical)(
+        bkeys, bonus_lg).astype(jnp.int32)
+    sampled_last = jnp.where(n_accept == k_draft, bonus_tok, resid_tok)
+    greedy_last = jnp.take_along_axis(greedy, n_accept[:, None],
+                                      axis=1)[:, 0]
+    last = jnp.where(temperature > 0, sampled_last,
+                     greedy_last).astype(jnp.int32)
+
+    ar = jnp.arange(s)[None, :]
+    dpad = jnp.concatenate([drafts, jnp.zeros((b, 1), jnp.int32)], axis=1)
+    emitted = jnp.where(
+        ar < n_accept[:, None], dpad,
+        jnp.where(ar == n_accept[:, None], last[:, None], 0))
+    return n_accept, emitted

@@ -43,6 +43,16 @@ class Request:
     prefill_logits: Optional[object] = None   # last-prompt-position logits
                                               # (recorded when the engine is
                                               # configured to keep them)
+    # speculative-decoding accounting (zero when the engine runs plain
+    # decode): per-request accepted-length bookkeeping
+    spec_steps: int = 0                   # speculative steps this request saw
+    draft_proposed: int = 0               # draft tokens proposed for it
+    draft_accepted: int = 0               # ... and accepted by the target
+
+    @property
+    def accept_rate(self) -> float:
+        return (self.draft_accepted / self.draft_proposed
+                if self.draft_proposed else 0.0)
 
     @property
     def prompt_len(self) -> int:

@@ -1,0 +1,237 @@
+"""Speculative-decoding drafters: who proposes the K draft tokens.
+
+A :class:`Drafter` proposes ``K`` continuation tokens per active decode
+slot each engine step; the engine scores them all in ONE jitted verify call
+(``Model.verify_step``) and commits only the accepted prefix into the KV
+cache (``commit_span`` — rejected drafts roll back without touching
+committed page payloads). Two production drafters ship:
+
+  * :class:`NgramDrafter` — prompt-lookup ("n-gram") drafting: the longest
+    recent n-gram suffix of the request's own context is matched against
+    earlier context and the tokens that followed it are proposed. Needs no
+    extra weights or forward passes; strong on repetitive text. Proposals
+    are deterministic, so the acceptance rule sees a one-hot proposal
+    distribution.
+  * :class:`SelfDrafter` — truncated-layer self-drafting: the target model's
+    FIRST ``draft_layers`` layers (plus the shared final norm / lm head)
+    run as a cheap autoregressive draft model under a
+    ``PrecisionPolicy``-selectable recipe. Because the first D layers of
+    the target compute exactly the draft model's K/V, the draft cache is
+    seeded for free from the target's chunked-prefill buffer (sliced to
+    D layers) — no separate draft prefill pass or extra prefill compiles.
+
+:class:`StubDrafter` is the test hook: a scripted proposal function drives
+forced-accept-all / forced-reject-all / adversarial mixed-acceptance
+scenarios deterministically.
+
+Every drafter is admission-timing invariant by construction: proposals
+depend only on the request's own tokens (and, for ``SelfDrafter``, PRNG
+streams keyed by (request seed, emission index) on a tag-separated draft
+stream).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.cache import cached_insert_fn
+
+from .sampling import DRAFT_TAG, proposal_probs, sample_tokens
+
+
+def prompt_lookup(ctx: np.ndarray, k: int, max_n: int = 3,
+                  min_n: int = 1) -> np.ndarray:
+    """Prompt-lookup proposal: longest-suffix n-gram match, most recent
+    occurrence wins; returns the k tokens that followed the match (padded
+    by repeating the last proposed token). Falls back to repeating the
+    context's last token when nothing matches.
+    """
+    ctx = np.asarray(ctx, np.int32).reshape(-1)
+    n_ctx = ctx.size
+    for n in range(min(max_n, n_ctx - 1), min_n - 1, -1):
+        pat = ctx[n_ctx - n:]
+        win = np.lib.stride_tricks.sliding_window_view(ctx[:-1], n)
+        hits = np.flatnonzero((win == pat).all(axis=1))
+        if hits.size:
+            start = int(hits[-1]) + n
+            prop = ctx[start:start + k]
+            out = np.empty(k, np.int32)
+            out[:prop.size] = prop
+            out[prop.size:] = prop[-1]
+            return out
+    return np.full(k, ctx[-1], np.int32)
+
+
+class Drafter:
+    """Drafter protocol. ``propose`` returns ``(drafts, q)`` where
+    ``drafts`` is (n_slots, K) int32 (rows of inactive slots ignored) and
+    ``q`` is the (n_slots, K, V) proposal probabilities the drafts were
+    drawn from, or ``None`` for deterministic drafters (the engine treats
+    ``None`` as one-hot at the drafted tokens — the delta distribution).
+    """
+
+    kind = "stub"
+
+    def bind(self, engine) -> None:
+        """Called once by the engine after construction."""
+
+    def on_insert(self, slot: int, req, buf, length: int) -> None:
+        """A request's prompt finished prefilling into ``slot``; ``buf`` is
+        the dense chunked-prefill context buffer (all target layers)."""
+
+    def propose(self, engine, active: np.ndarray, k: int
+                ) -> Tuple[np.ndarray, Optional[jax.Array]]:
+        raise NotImplementedError
+
+    @property
+    def compile_count(self) -> int:
+        """Distinct jit shapes this drafter has compiled (0 for host-only
+        drafters)."""
+        return 0
+
+
+class StubDrafter(Drafter):
+    """Scripted drafter for tests: ``fn(req, k) -> (k,) int32 proposals``."""
+
+    def __init__(self, fn):
+        self.fn = fn
+
+    def propose(self, engine, active, k):
+        drafts = np.zeros((active.size, k), np.int32)
+        for slot in np.flatnonzero(active):
+            req = engine.scheduler.request_in(int(slot))
+            drafts[slot] = np.asarray(self.fn(req, k), np.int32).reshape(k)
+        return drafts, None
+
+
+class NgramDrafter(Drafter):
+    """Prompt-lookup drafting over each request's own (prompt + generated)
+    context. Pure host-side numpy — zero model FLOPs, zero compiles."""
+
+    kind = "ngram"
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def propose(self, engine, active, k):
+        drafts = np.zeros((active.size, k), np.int32)
+        for slot in np.flatnonzero(active):
+            req = engine.scheduler.request_in(int(slot))
+            ctx = np.concatenate(
+                [req.prompt, np.asarray(req.generated, np.int32)])
+            drafts[slot] = prompt_lookup(ctx, k, self.max_n, self.min_n)
+        return drafts, None
+
+
+class SelfDrafter(Drafter):
+    """Truncated-layer self-draft: the target's first ``n_layers`` layers as
+    an autoregressive draft model with its own dense bf16 KV cache.
+
+    The draft cache is a slice of the information the engine already has:
+    layer i's K/V depend only on layers < i, so the target's dense
+    chunked-prefill buffer restricted to the first D layers IS the draft
+    model's prompt cache — ``on_insert`` slices and inserts it, adding no
+    prefill passes and exactly two jit shapes total (one insert, one
+    fused decode+proposal step) regardless of the prompt-length mix.
+    """
+
+    kind = "self"
+    needs_probs = True
+
+    def __init__(self, model, params, n_slots: int, max_len: int,
+                 n_layers: int = 0, quant_mode: str = "bf16", seed: int = 0):
+        from repro.core.policy import PrecisionPolicy
+        from repro.models.cache import dense_gqa_adapter
+        from repro.models.layers import QuantCtx
+        from repro.models.model import Model
+
+        cfg = model.cfg
+        d = n_layers or max(1, cfg.num_layers // 2)
+        if not 1 <= d <= cfg.num_layers:
+            raise ValueError(
+                f"self_draft_layers must be in [1, {cfg.num_layers}], got {d}")
+        self.n_layers = d
+        self.cfg = dataclasses.replace(cfg, num_layers=d,
+                                       name=f"{cfg.name}-draft{d}")
+        self.model = Model(self.cfg, model.remat_policy)
+        self.params = dict(params)
+        self.params["layers"] = jax.tree.map(lambda a: a[:d],
+                                             params["layers"])
+        self.adapter = dense_gqa_adapter(self.cfg)
+        self.caches = self.adapter.blank(d, n_slots, max_len)
+        self._policy = PrecisionPolicy.parse(quant_mode)
+        self._base_key = jax.random.key(seed)
+        self._draft_key = jax.random.fold_in(self._base_key, DRAFT_TAG)
+        self._shapes = set()
+
+        def step_impl(params, caches, tok, pos, temps, topks, seeds, offs,
+                      step_idx):
+            ctx = QuantCtx(self._policy,
+                           jax.random.fold_in(self._draft_key, step_idx))
+            logits, caches = self.model.decode_step(
+                params, {"token": tok}, pos, caches, ctx)
+            lg = logits[:, 0]
+            d_tok = sample_tokens(lg, temps, topks, self._draft_key, seeds,
+                                  offs)
+            q_row = proposal_probs(lg, temps, topks, d_tok)
+            return d_tok, q_row, caches
+
+        self._step = jax.jit(step_impl, donate_argnums=(1,))
+        self._insert_fns = {}
+
+    def on_insert(self, slot, req, buf, length):
+        sliced = {name: leaf[:self.n_layers] for name, leaf in buf.items()}
+        tdim = next(iter(sliced.values())).shape[2]
+        self._shapes.add(("draft_insert", tdim))
+        self.caches = cached_insert_fn(self.adapter, self._insert_fns, tdim)(
+            self.caches, sliced, jnp.int32(slot), jnp.int32(length))
+
+    def propose(self, engine, active, k):
+        tok = jnp.asarray(engine._tokens)
+        temps = jnp.asarray(engine._temps)
+        topks = jnp.asarray(engine._topks)
+        seeds = jnp.asarray(engine._seeds)
+        gencnt = jnp.asarray(engine._gencnt)
+        pos = engine._pos
+        drafts, qrows = [], []
+        self._shapes.add(("draft_step", active.size))
+        # k + 1 feeds for k proposals: the last draft token is fed too (its
+        # sampled continuation is discarded) so its K/V lands in the draft
+        # cache — otherwise a fully-accepted step would leave a permanent
+        # hole at pos + k that every later draft attention reads. Writes
+        # past the accepted prefix are overwritten before they are ever
+        # attended (the next round feeds those positions first).
+        for i in range(k + 1):
+            tok, q_row, self.caches = self._step(
+                self.params, self.caches, tok,
+                jnp.asarray(pos + i), temps, topks, seeds, gencnt + i,
+                engine._step_idx)
+            if i < k:
+                drafts.append(tok)
+                qrows.append(q_row)
+        return (np.stack([np.asarray(d) for d in drafts], axis=1),
+                jnp.stack(qrows, axis=1))
+
+    @property
+    def compile_count(self):
+        return len(self._shapes)
+
+
+def make_drafter(name: str, model, params, config) -> Optional[Drafter]:
+    """Build the drafter named by ``EngineConfig.speculate``."""
+    if name in ("off", "", None):
+        return None
+    if name == "ngram":
+        return NgramDrafter(max_n=config.ngram_max)
+    if name == "self":
+        return SelfDrafter(
+            model, params, n_slots=config.n_slots, max_len=config.max_len,
+            n_layers=config.self_draft_layers,
+            quant_mode=config.draft_quant_mode or config.quant_mode,
+            seed=config.seed)
+    raise ValueError(f"unknown drafter {name!r} (off | ngram | self)")

@@ -1,0 +1,523 @@
+"""Speculative decoding: drafters, multi-token verify, FP4 KV rollback.
+
+The guarantees under test, in order:
+  * greedy speculative output is TOKEN-identical to plain decode for every
+    drafter and every KV-cache mode (token identity, not logit bits — the
+    verify span computes logits over a different shape than 1-token decode,
+    so XLA reduction order may differ at ULP level, same policy as chunked
+    prefill);
+  * FP4 page rollback is BYTE-exact: rejected draft tokens leave committed
+    page payloads (codes/scales/pamax/mean) and the bf16 tail bitwise
+    identical to a never-speculated run, and the shared-prefix PagePool
+    sees identical keys/refcounts;
+  * stochastic acceptance is LOSSLESS: speculative sampled outputs follow
+    the target model's sampling distribution for any proposal distribution
+    (frequency test over many seeds), and sampled generations stay
+    invariant to admission timing (the PR 1 seed-derivation guarantee);
+  * speculation with fixed K adds a CONSTANT number of compiles however
+    mixed the prompt lengths are (verify 1, accept 1, commit 1, draft <= 2).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import reduced
+from repro.models.model import Model
+from repro.serve import (
+    Engine,
+    EngineConfig,
+    NgramDrafter,
+    StubDrafter,
+    chunk_buckets,
+    prompt_lookup,
+    speculative_accept,
+)
+from repro.serve.kvcache import make_adapter
+
+KV_KINDS = ("bf16", "fp4", "fp4-centered")
+
+
+# --------------------------------------------------------------------------
+# Prompt-lookup proposals (host-side unit)
+# --------------------------------------------------------------------------
+
+def test_prompt_lookup_proposals():
+    ctx = np.array([5, 6, 7, 8, 5, 6, 7, 9, 5, 6, 7], np.int32)
+    # suffix [5,6,7] matches most recently at index 4 -> proposes 9, 5, 6
+    np.testing.assert_array_equal(prompt_lookup(ctx, 3), [9, 5, 6])
+    # an unmatched longer n-gram falls back to the shorter one
+    np.testing.assert_array_equal(prompt_lookup(ctx, 3, max_n=4), [9, 5, 6])
+    # proposal running off the end pads by repeating its last token
+    np.testing.assert_array_equal(
+        prompt_lookup(np.array([1, 2, 3, 1, 2], np.int32), 4), [3, 1, 2, 2])
+    np.testing.assert_array_equal(
+        prompt_lookup(np.array([1, 2, 3], np.int32), 4, max_n=3),
+        [3, 3, 3, 3])  # no match: repeat last token
+    # repetition loop: proposals continue the loop
+    loop = np.array([4, 4, 4, 4], np.int32)
+    np.testing.assert_array_equal(prompt_lookup(loop, 2), [4, 4])
+
+
+# --------------------------------------------------------------------------
+# Shared model fixture + reference runs
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def spec_served():
+    cfg = reduced("qwen3-0.6b", remat=False)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (12, 17)]
+    return cfg, model, params, prompts
+
+
+def _run(model, params, prompts, gen=10, drafter=None, **kw):
+    cfg_kw = dict(n_slots=2, max_len=48, page_size=16, quant_mode="bf16",
+                  prefill_chunk=16)
+    cfg_kw.update(kw)
+    eng = Engine(model, params, EngineConfig(**cfg_kw), drafter=drafter)
+    for i, p in enumerate(prompts):
+        eng.submit(p, gen, seed=i)
+    fin = sorted(eng.drain(), key=lambda r: r.rid)
+    return eng, [r.generated for r in fin]
+
+
+def _reference(model, params, prompts, kv, gen=10):
+    """Plain (non-speculative) engine output for one KV mode."""
+    _, out = _run(model, params, prompts, gen=gen, kv_cache=kv)
+    return out
+
+
+def _oracle_drafter(refs, vocab, wrong_every=0):
+    """Stub proposing the request's own reference continuation. With
+    ``wrong_every`` = n, every n-th proposed position is corrupted —
+    the adversarial mixed-acceptance drafter."""
+    def fn(req, k):
+        g = len(req.generated)
+        r = refs[req.rid]
+        out = []
+        for i in range(k):
+            tok = r[g + i] if g + i < len(r) else 0
+            if wrong_every and (g + i) % wrong_every == 0:
+                tok = (tok + 1) % vocab
+            out.append(tok)
+        return out
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Greedy token identity: every drafter x every KV-cache mode
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv", KV_KINDS)
+def test_ngram_greedy_token_identical(spec_served, kv):
+    cfg, model, params, prompts = spec_served
+    ref = _reference(model, params, prompts, kv)
+    eng, out = _run(model, params, prompts, kv_cache=kv, speculate="ngram",
+                    draft_tokens=3)
+    assert out == ref
+    summ = eng.metrics.summary()
+    assert summ["spec_steps"] > 0
+    # the tiny model's greedy decode loops, so prompt-lookup must land hits
+    assert summ["accept_rate"] > 0.0
+    assert summ["spec_tokens_per_step"] > 1.0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kv", KV_KINDS)
+def test_self_draft_greedy_token_identical(spec_served, kv):
+    cfg, model, params, prompts = spec_served
+    ref = _reference(model, params, prompts, kv)
+    eng, out = _run(model, params, prompts, kv_cache=kv, speculate="self",
+                    draft_tokens=3)
+    assert out == ref
+    assert eng.metrics.summary()["spec_steps"] > 0
+
+
+@pytest.mark.parametrize("kv", ("bf16", "fp4-centered"))
+def test_stub_drafters_token_identical(spec_served, kv):
+    """Forced accept-all / reject-all / adversarial mixed acceptance all
+    reproduce plain decode exactly, with the expected accept accounting."""
+    cfg, model, params, prompts = spec_served
+    ref = _reference(model, params, prompts, kv)
+    refs = dict(enumerate(ref))
+
+    # accept-all: proposals ARE the reference -> every in-range draft lands
+    eng, out = _run(model, params, prompts, kv_cache=kv, draft_tokens=3,
+                    drafter=StubDrafter(_oracle_drafter(refs, cfg.vocab_size)))
+    assert out == ref
+    s = eng.metrics.summary()
+    assert s["accept_rate"] > 0.5 and s["spec_tokens_per_step"] > 1.0
+    # gen=10 with K=3 at full acceptance: ceil(10 / 4) extra steps per slot
+    assert all(r == 10 for r in map(len, out))
+
+    # reject-all: every proposal corrupted -> zero accepts, 1 token/step,
+    # output still identical (the correction token is the target's argmax)
+    eng, out = _run(
+        model, params, prompts, kv_cache=kv, draft_tokens=3,
+        drafter=StubDrafter(_oracle_drafter(refs, cfg.vocab_size,
+                                            wrong_every=1)))
+    assert out == ref
+    s = eng.metrics.summary()
+    assert s["accept_rate"] == 0.0
+    assert s["spec_tokens_per_step"] == 1.0
+
+    # adversarial mixed: corrupt every 3rd position -> partial accepts that
+    # exercise mid-span rollback on every step
+    eng, out = _run(
+        model, params, prompts, kv_cache=kv, draft_tokens=3,
+        drafter=StubDrafter(_oracle_drafter(refs, cfg.vocab_size,
+                                            wrong_every=3)))
+    assert out == ref
+    s = eng.metrics.summary()
+    assert 0.0 < s["accept_rate"] < 1.0
+
+
+def test_eos_inside_accepted_span(spec_served):
+    """EOS arriving as an accepted draft token retires the request at the
+    right length; tokens speculated past EOS are discarded."""
+    cfg, model, params, prompts = spec_served
+    ref = _reference(model, params, prompts[:1], "bf16")
+    eos = ref[0][4]
+    eng_p = Engine(model, params, EngineConfig(
+        n_slots=2, max_len=48, page_size=16, quant_mode="bf16",
+        prefill_chunk=16, kv_cache="bf16"))
+    eng_p.submit(prompts[0], 10, seed=0, eos_id=eos)
+    (plain,) = eng_p.drain()
+    eng_s = Engine(model, params, EngineConfig(
+        n_slots=2, max_len=48, page_size=16, quant_mode="bf16",
+        prefill_chunk=16, kv_cache="bf16", speculate="ngram",
+        draft_tokens=3))
+    eng_s.submit(prompts[0], 10, seed=0, eos_id=eos)
+    (spec,) = eng_s.drain()
+    assert spec.generated == plain.generated
+    assert spec.finish_reason == plain.finish_reason == "eos"
+
+
+# --------------------------------------------------------------------------
+# FP4 page rollback: byte-exact committed payloads
+# --------------------------------------------------------------------------
+
+def _stack_layers(trees):
+    return {k: jnp.stack([t[k] for t in trees]) for k in trees[0]}
+
+
+@pytest.mark.parametrize("kind", ("fp4", "fp4-centered"))
+def test_fp4_page_rollback_byte_identical(kind):
+    """Speculate-and-reject leaves every committed byte identical to a
+    never-speculated run: append T tokens once via plain ``update`` and
+    once via spans of (true tokens + garbage suffix) committed with
+    ``commit_span`` — codes/scales/pamax/mean/tail must match bitwise."""
+    cfg = reduced("qwen3-0.6b")
+    adapter = make_adapter(cfg, kind, page_size=8)
+    nl, b, cap, t_total, s = 2, 2, 32, 21, 4
+    n, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.normal(size=(t_total, nl, b, 2, n, hd))
+                       .astype(np.float32))
+    garbage = jnp.asarray(rng.normal(size=(t_total + s, nl, b, 2, n, hd))
+                          .astype(np.float32) * 7.0)
+
+    # never-speculated reference: per-layer sequential single-token appends
+    layers = []
+    for l in range(nl):
+        cache = {k: v[l] for k, v in adapter.blank(nl, b, cap).items()}
+        for t in range(t_total):
+            pos = jnp.full((b,), t, jnp.int32)
+            _, cache = adapter.update(
+                cache, (toks[t, l, :, 0], toks[t, l, :, 1]), pos)
+        layers.append(cache)
+    ref = _stack_layers(layers)
+
+    # speculated run: spans of m true tokens + (S - m) garbage drafts;
+    # commit m, roll back the rest. m cycles through partial acceptances.
+    caches = adapter.blank(nl, b, cap)
+    pos_i = 0
+    accepts = [1, 3, 4, 2]
+    ai = 0
+    while pos_i < t_total:
+        m = min(accepts[ai % len(accepts)], t_total - pos_i)
+        ai += 1
+        span = [toks[pos_i + j] if j < m else garbage[pos_i + j]
+                for j in range(s)]
+        scratch = jnp.stack(span, axis=2).astype(adapter.dtype)
+        # (L, b, S, 2, n, hd)
+        pos = jnp.full((b,), pos_i, jnp.int32)
+        n_commit = jnp.full((b,), m, jnp.int32)
+        caches = adapter.commit_span({**caches, "scratch": scratch}, pos,
+                                     n_commit)
+        pos_i += m
+
+    assert set(caches) == set(ref)
+    for leaf in ref:
+        np.testing.assert_array_equal(
+            np.asarray(caches[leaf]).view(np.uint8),
+            np.asarray(ref[leaf]).view(np.uint8), err_msg=leaf)
+
+
+def test_fp4_update_span_leaves_committed_storage_untouched():
+    """``update_span`` may only produce scratch + dense views — committed
+    pages and the bf16 tail must be the SAME buffers before and after."""
+    cfg = reduced("qwen3-0.6b")
+    adapter = make_adapter(cfg, "fp4-centered", page_size=8)
+    b, cap, s = 2, 16, 3
+    n, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    rng = np.random.default_rng(1)
+    cache = {k: v[0] for k, v in adapter.blank(1, b, cap).items()}
+    for t in range(10):
+        tok = jnp.asarray(rng.normal(size=(2, b, n, hd)).astype(np.float32))
+        _, cache = adapter.update(cache, (tok[0], tok[1]),
+                                  jnp.full((b,), t, jnp.int32))
+    span = jnp.asarray(rng.normal(size=(2, b, s, n, hd)).astype(np.float32))
+    (dk, dv), new = adapter.update_span(cache, (span[0], span[1]),
+                                        jnp.full((b,), 10, jnp.int32))
+    for leaf in cache:
+        np.testing.assert_array_equal(np.asarray(new[leaf]),
+                                      np.asarray(cache[leaf]), err_msg=leaf)
+    # the dense view exposes exact history [0,10) and the span at [10,13)
+    np.testing.assert_allclose(np.asarray(dk[:, 10:13], np.float32),
+                               np.asarray(span[0], np.float32),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_dense_rollback_byte_identical():
+    """bf16 cache: commit_span writes ONLY accepted positions — rejected
+    span positions keep their prior bytes, like a never-speculated run."""
+    cfg = reduced("qwen3-0.6b")
+    from repro.models.cache import dense_gqa_adapter
+    adapter = dense_gqa_adapter(cfg)
+    nl, b, cap, s = 2, 2, 16, 4
+    n, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    rng = np.random.default_rng(2)
+    caches = adapter.blank(nl, b, cap)
+    toks = jnp.asarray(rng.normal(size=(6, nl, b, 2, n, hd))
+                       .astype(np.float32))
+
+    ref = dict(caches)
+    for l in range(nl):
+        layer = {k: v[l] for k, v in ref.items()}
+        for t in range(3):
+            _, layer = adapter.update(
+                layer, (toks[t, l, :, 0], toks[t, l, :, 1]),
+                jnp.full((b,), t, jnp.int32))
+        ref = {k: ref[k].at[l].set(layer[k]) for k in ref}
+
+    spec = dict(caches)
+    spec["spec_k"] = jnp.moveaxis(toks[:s, :, :, 0], 0, 2).astype(adapter.dtype)
+    spec["spec_v"] = jnp.moveaxis(toks[:s, :, :, 1], 0, 2).astype(adapter.dtype)
+    out = adapter.commit_span(spec, jnp.zeros((b,), jnp.int32),
+                              jnp.full((b,), 3, jnp.int32))
+    assert set(out) == {"k", "v"}
+    for leaf in out:
+        np.testing.assert_array_equal(
+            np.asarray(out[leaf]).view(np.uint8),
+            np.asarray(ref[leaf]).view(np.uint8), err_msg=leaf)
+
+
+@pytest.mark.slow
+def test_pagepool_unchanged_under_speculation(spec_served):
+    """Speculation never publishes, pins, or re-encodes pool pages: keys,
+    refcounts, and hit/miss counters match the non-speculative run."""
+    cfg, model, params, _ = spec_served
+    rng = np.random.default_rng(3)
+    system = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    prompts = [np.concatenate([system, rng.integers(0, cfg.vocab_size, t)
+                               .astype(np.int32)]) for t in (5, 9)]
+
+    def pool_state(speculate):
+        eng, out = _run(model, params, prompts, gen=8, max_len=96,
+                        kv_cache="fp4-centered", prefix_cache=True,
+                        speculate=speculate,
+                        **({"draft_tokens": 3} if speculate != "off" else {}))
+        pool = eng.pool
+        return (out, sorted(pool._entries),
+                {k: pool.refcount(k) for k in pool._entries},
+                pool.hits, pool.misses)
+
+    out_p, keys_p, refs_p, hits_p, miss_p = pool_state("off")
+    out_s, keys_s, refs_s, hits_s, miss_s = pool_state("ngram")
+    assert out_s == out_p
+    assert keys_s == keys_p
+    assert refs_s == refs_p and all(v == 0 for v in refs_s.values())
+    assert (hits_s, miss_s) == (hits_p, miss_p)
+
+
+# --------------------------------------------------------------------------
+# Lossless rejection sampling (distribution-level)
+# --------------------------------------------------------------------------
+
+def _chi2(counts, probs, n):
+    exp = probs * n
+    keep = exp > 0
+    return float(np.sum((counts[keep] - exp[keep]) ** 2 / exp[keep]))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("q_kind", ("delta", "broad"))
+def test_rejection_sampling_is_lossless(q_kind):
+    """The first emitted token of a speculative step follows the target
+    distribution EXACTLY, for one-hot (deterministic drafter) and broad
+    (self-draft) proposals alike: chi-squared over many seeds."""
+    v, k, n = 12, 3, 4000
+    rng = np.random.default_rng(0)
+    lg = rng.normal(size=(1, k + 1, v)).astype(np.float32) * 1.5
+    logits = jnp.asarray(np.repeat(lg, n, axis=0))
+    if q_kind == "delta":
+        drafts = jnp.asarray(
+            np.repeat(rng.integers(0, v, (1, k)), n, axis=0), jnp.int32)
+        q = jax.nn.one_hot(drafts, v, dtype=jnp.float32)
+    else:
+        qlg = rng.normal(size=(1, k, v)).astype(np.float32)
+        qp = np.exp(qlg) / np.exp(qlg).sum(-1, keepdims=True)
+        q = jnp.asarray(np.repeat(qp, n, axis=0))
+        # drafts ~ q per seed, drawn independently of the accept stream
+        dkeys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            jax.random.key(500), jnp.arange(n))
+        drafts = jax.vmap(
+            lambda kk: jax.random.categorical(kk, jnp.asarray(qlg[0]),
+                                              axis=-1)
+        )(dkeys).astype(jnp.int32)
+    temps = jnp.ones((n,))
+    topks = jnp.zeros((n,), jnp.int32)
+    seeds = jnp.arange(n, dtype=jnp.int32)
+    gencnt = jnp.ones((n,), jnp.int32)
+    n_acc, emitted = jax.jit(speculative_accept)(
+        logits, drafts, q, temps, topks, jax.random.key(0), seeds, gencnt)
+    first = np.asarray(emitted[:, 0])
+    counts = np.bincount(first, minlength=v).astype(np.float64)
+    target = np.asarray(jax.nn.softmax(jnp.asarray(lg[0, 0])), np.float64)
+    chi2 = _chi2(counts, target, n)
+    # df = v - 1 = 11; mean 11, sd ~4.7 -> 40 is a ~6-sigma bound
+    assert chi2 < 40.0, (chi2, counts, target * n)
+    # and acceptance must actually vary (both branches exercised)
+    n_acc = np.asarray(n_acc)
+    assert n_acc.min() == 0 or q_kind == "broad"
+    assert (n_acc > 0).any()
+
+
+@pytest.mark.slow
+def test_sampled_spec_matches_plain_engine_distribution(spec_served):
+    """Engine-level lossless check: over many request seeds, the sampled
+    token at index 1 has the same distribution with and without
+    speculation (two-sample chi-squared), and the index-0 token — drawn by
+    the identical prefill path — matches per-seed exactly."""
+    cfg, model, params, _ = spec_served
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    n = 400
+
+    def collect(speculate):
+        eng = Engine(model, params, EngineConfig(
+            n_slots=4, max_len=16, kv_cache="bf16", quant_mode="bf16",
+            prefill_chunk=16, max_waiting=n, speculate=speculate,
+            draft_tokens=2))
+        for i in range(n):
+            eng.submit(prompt, 3, temperature=1.0, top_k=8, seed=i)
+        fin = sorted(eng.drain(), key=lambda r: r.rid)
+        return np.asarray([r.generated for r in fin])
+
+    plain = collect("off")
+    spec = collect("ngram")
+    # index 0 is sampled from prefill logits with the same (seed, 0) key in
+    # both engines -> per-seed equality, not just distributional
+    np.testing.assert_array_equal(plain[:, 0], spec[:, 0])
+    # index 1: two-sample chi-squared over the union support
+    support = np.union1d(plain[:, 1], spec[:, 1])
+    a = np.array([(plain[:, 1] == s).sum() for s in support], np.float64)
+    b = np.array([(spec[:, 1] == s).sum() for s in support], np.float64)
+    stat = float(np.sum((a - b) ** 2 / (a + b)))
+    df = len(support) - 1
+    assert stat < df + 6.0 * np.sqrt(2.0 * max(df, 1)), (stat, df)
+
+
+@pytest.mark.slow
+def test_sampled_spec_admission_timing_invariance(spec_served):
+    """The PR 1 guarantee extended to speculative steps: same (engine seed,
+    request seed) => same sampled generation, even when the second request
+    is admitted later — accept/residual/draft draws are keyed by (seed,
+    emission index), never by step index or batch composition."""
+    cfg, model, params, prompts = spec_served
+    outs = []
+    for stagger in (0, 0, 2):
+        eng = Engine(model, params, EngineConfig(
+            n_slots=2, max_len=48, kv_cache="bf16", quant_mode="bf16",
+            prefill_chunk=16, seed=11, speculate="ngram", draft_tokens=3))
+        eng.submit(prompts[0], 6, temperature=0.9, top_k=16, seed=100)
+        for _ in range(stagger):
+            eng.step()
+        eng.submit(prompts[1], 6, temperature=0.9, top_k=16, seed=101)
+        fin = sorted(eng.drain(), key=lambda r: r.rid)
+        outs.append([r.generated for r in fin])
+    assert outs[0] == outs[1]          # exact replay
+    assert outs[0] == outs[2]          # admission-timing invariance
+
+
+# --------------------------------------------------------------------------
+# Compile accounting: fixed K => constant extra compiles
+# --------------------------------------------------------------------------
+
+def test_spec_compile_count_constant_under_mixed_lengths(spec_served):
+    """However mixed the prompt lengths, ngram speculation with fixed K
+    compiles exactly ONE verify shape and ZERO decode/draft shapes; the
+    prefill split stays bounded by the bucket grid."""
+    cfg, model, params, _ = spec_served
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (9, 17, 26, 33)]
+    eng, _ = _run(model, params, prompts, gen=6, max_len=64,
+                  kv_cache="bf16", speculate="ngram", draft_tokens=3)
+    s = eng.metrics.summary()
+    assert s["compile_count_verify"] == 1.0
+    assert s["compile_count_decode"] == 0.0
+    assert s["compile_count_draft"] == 0.0
+    assert s["compile_count_prefill"] <= len(chunk_buckets(16))
+    # and a plain run compiles one decode shape, zero verify
+    eng2, _ = _run(model, params, prompts, gen=6, max_len=64,
+                   kv_cache="bf16")
+    s2 = eng2.metrics.summary()
+    assert s2["compile_count_decode"] == 1.0
+    assert s2["compile_count_verify"] == 0.0
+
+
+@pytest.mark.slow
+def test_self_draft_compile_count_constant(spec_served):
+    """Self-drafting adds at most two draft shapes (one fused draft
+    decode+proposal step, one draft-cache insert) — none per prompt
+    length, because the draft cache is seeded from the target's prefill
+    buffer instead of running its own prefill."""
+    cfg, model, params, _ = spec_served
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (9, 17, 26, 33)]
+    eng, _ = _run(model, params, prompts, gen=6, max_len=64,
+                  kv_cache="bf16", speculate="self", draft_tokens=3)
+    s = eng.metrics.summary()
+    assert s["compile_count_verify"] == 1.0
+    assert s["compile_count_draft"] <= 2.0
+    assert s["compile_count_decode"] == 0.0
+
+
+# --------------------------------------------------------------------------
+# Guardrails
+# --------------------------------------------------------------------------
+
+def test_speculate_rejects_non_chunked_families():
+    mla_cfg = reduced("minicpm3-4b", remat=False)
+    with pytest.raises(NotImplementedError):
+        Engine(Model(mla_cfg), None,
+               EngineConfig(speculate="ngram"))
+
+
+def test_speculate_rejects_bad_draft_config(spec_served):
+    cfg, model, params, _ = spec_served
+    with pytest.raises(ValueError):
+        Engine(model, params, EngineConfig(speculate="ngram",
+                                           draft_tokens=0))
+    with pytest.raises(ValueError):
+        Engine(model, params, EngineConfig(speculate="self",
+                                           self_draft_layers=99))
+    with pytest.raises(ValueError):
+        Engine(model, params, EngineConfig(speculate="nope"))
