@@ -13,10 +13,12 @@ numbers at a fixed top-level location.
 """
 from __future__ import annotations
 
+import calendar
 import glob
 import json
 import os
 import shutil
+import subprocess
 import sys
 import time
 import traceback
@@ -57,10 +59,40 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _ART_DIR = os.path.join(_ROOT, "artifacts")
 
 
+def _head_commit_time() -> float | None:
+    """Unix time of the git HEAD commit, or None outside a repo / without
+    git — staleness checking degrades to off rather than failing a run."""
+    try:
+        out = subprocess.run(
+            ["git", "log", "-1", "--format=%ct"], cwd=_ROOT,
+            capture_output=True, text=True, timeout=10)
+        if out.returncode == 0 and out.stdout.strip():
+            return float(out.stdout.strip())
+    except (OSError, subprocess.SubprocessError, ValueError):
+        pass
+    return None
+
+
+def check_staleness(written_at: str,
+                    head_time: float | None) -> bool:
+    """True when a bench artifact's ``_written_at`` stamp predates the HEAD
+    commit — its numbers were measured on older code than what the summary
+    claims to describe."""
+    if head_time is None:
+        return False
+    try:
+        t = calendar.timegm(time.strptime(written_at, "%Y-%m-%dT%H:%M:%SZ"))
+    except ValueError:
+        return True
+    return t < head_time
+
+
 def write_summary() -> str:
     """Fold artifacts/BENCH_*.json into BENCH_summary.json and mirror each
     file to the repo root (the fixed locations trend tooling watches)."""
     summary = {}
+    head_time = _head_commit_time()
+    stale = []
     for path in sorted(glob.glob(os.path.join(_ART_DIR, "BENCH_*.json"))):
         base = os.path.basename(path)
         if base == "BENCH_summary.json":
@@ -75,9 +107,18 @@ def write_summary() -> str:
         # BENCH_*.json files too, and tooling must be able to tell fresh
         # numbers from carried-over ones
         if isinstance(summary[name], dict):
-            summary[name]["_written_at"] = time.strftime(
+            written = time.strftime(
                 "%Y-%m-%dT%H:%M:%SZ", time.gmtime(os.path.getmtime(path)))
+            summary[name]["_written_at"] = written
+            if check_staleness(written, head_time):
+                summary[name]["stale"] = True
+                stale.append(name)
         shutil.copy2(path, os.path.join(_ROOT, base))
+    for name in stale:
+        print(f"WARNING: bench artifact {name!r} predates the HEAD commit "
+              f"(written {summary[name]['_written_at']}) — its numbers "
+              f"were measured on older code; re-run "
+              f"`python -m benchmarks.run {name}`", file=sys.stderr)
     out = os.path.join(_ART_DIR, "BENCH_summary.json")
     os.makedirs(_ART_DIR, exist_ok=True)
     with open(out, "w") as f:

@@ -288,6 +288,12 @@ def reset_hadamard_skip_warnings() -> None:
 def _hadamard_or_skip(t: jax.Array, axis: int) -> jax.Array:
     n = t.shape[axis]
     if n % _TILE != 0:
+        # Silent-recipe-downgrade counter: surfaces in quantwatch and
+        # ServeMetrics.summary(), not just the once-per-length warning.
+        # Lazy import keeps repro.core free of an obs dependency at import
+        # time (obs.telemetry is stdlib-only, so this costs nothing).
+        from repro.obs.telemetry import global_hub
+        global_hub().count("quant/skipped_hadamard")
         if n not in _HAD_SKIP_WARNED:
             _HAD_SKIP_WARNED.add(n)
             warnings.warn(

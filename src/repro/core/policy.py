@@ -51,7 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 from fnmatch import fnmatch
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 from .qgemm import QuantConfig, recipe
 
@@ -230,6 +230,20 @@ class PrecisionPolicy:
     def role_table(self, layer: Optional[int]) -> Tuple[QuantConfig, ...]:
         """Resolved recipe per ROLE at one layer (segment signature)."""
         return tuple(self.resolve(r, layer) for r in ROLES)
+
+    def site_table(self, num_layers: int) -> Dict[Tuple[str, Optional[int]],
+                                                  str]:
+        """{(role, layer) -> resolved recipe mode} over the whole stack —
+        the row labels of a quantwatch report (``lm_head`` is layer-free
+        and appears once, keyed ``(role, None)``)."""
+        out: Dict[Tuple[str, Optional[int]], str] = {}
+        for role in ROLES:
+            if role in _LAYER_FREE_ROLES:
+                out[(role, None)] = self.resolve(role, None).mode
+                continue
+            for layer in range(num_layers):
+                out[(role, layer)] = self.resolve(role, layer).mode
+        return out
 
     @property
     def is_layered(self) -> bool:

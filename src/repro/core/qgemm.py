@@ -204,6 +204,17 @@ def qgemm(x: jax.Array, w: jax.Array, cfg: QuantConfig, key: jax.Array,
     return y2.reshape(lead + (w.shape[1],))
 
 
+def probe_stats(x: jax.Array, cfg: QuantConfig):
+    """Quant-health stats of ``x`` as the activation input of a ``cfg``
+    GeMM site — the same (l, m) flattening as :func:`qgemm`, delegated to
+    :func:`repro.obs.probes.gemm_site_stats`. Pure read (stop_gradient
+    inside); used by ``launch/quantwatch.py`` and the in-graph probe tape.
+    """
+    from repro.obs.probes import gemm_site_stats
+
+    return gemm_site_stats(x.reshape((-1, x.shape[-1])), cfg)
+
+
 def qgemm_expert(
     x: jax.Array, w: jax.Array, cfg: QuantConfig, key: jax.Array,
     prepared=None,

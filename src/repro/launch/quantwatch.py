@@ -1,0 +1,267 @@
+"""Quant-health report: the paper's §2 mean-bias diagnostics per layer/site.
+
+Two modes:
+
+*Fixture mode* (default) probes the synthetic biased-activation fixture
+(``repro.obs.probes.biased_fixture`` — a depth-growing massive token-mean
+bias, the paper's Figure-2 shape) under each requested recipe and renders a
+per-layer table of {R, clip_rate, underflow_rate, amax_shrink}. With at
+least one mean-centered and one uncentered recipe in the list it prints a
+verdict line: centering must strictly lower the clip rate on this fixture
+(the "curse" half of the paper — the bias carries the outliers that
+saturate the E4M3 block scales).
+
+    PYTHONPATH=src python -m repro.launch.quantwatch \
+        --recipes nvfp4,averis --layers 8 --bias 8
+
+*Train mode* (``--train``) runs a few probed train steps of the reduced
+model per recipe and renders the real in-graph probe tape — every (role,
+layer) GeMM site the step actually quantizes, labelled with the resolved
+policy mode (``PrecisionPolicy.site_table``).
+
+    PYTHONPATH=src python -m repro.launch.quantwatch --train \
+        --recipes 'averis;lm_head=bf16' --steps 3
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_COLS = ("mean_bias_ratio", "clip_rate", "underflow_rate", "amax_shrink")
+_HDR = ("R", "clip", "underflow", "shrink")
+
+
+def _is_centered(mode: str) -> bool:
+    """A recipe is mean-centered iff its forward activation pipeline has a
+    Center stage before (or instead of) its Quantize stage."""
+    from repro.core.pipeline import plan_for
+    from repro.obs.probes import _activation_quant_spec
+    from repro.core.pipeline import Center
+
+    pre, _ = _activation_quant_spec(plan_for(mode))
+    return any(isinstance(st, Center) for st in pre)
+
+
+def _fmt_row(label: str, stats: Dict[str, float]) -> str:
+    return (f"  {label:<18s} "
+            + " ".join(f"{float(stats[c]):>10.4f}" for c in _COLS))
+
+
+def _table_header(title: str) -> List[str]:
+    return [title,
+            "  " + f"{'':<18s} " + " ".join(f"{h:>10s}" for h in _HDR)]
+
+
+# --------------------------------------------------------------------------
+# Fixture mode
+# --------------------------------------------------------------------------
+
+def fixture_report(recipes: List[str], *, layers: int = 8, tokens: int = 64,
+                   dim: int = 256, bias: float = 8.0, noise: float = 1.0,
+                   seed: int = 0) -> Dict[str, object]:
+    """Per-layer probe stats of the biased fixture under each recipe.
+
+    Returns ``{"recipes": {mode: {"centered": bool, "per_layer": [{stat:
+    float}...]}}, "verdict": {...} | None}``. The verdict compares mean
+    clip rate of centered vs uncentered recipes; ``tests/test_obs.py``
+    asserts ``centered_lower_clip`` on this exact structure.
+    """
+    import jax
+
+    from repro.core.qgemm import probe_stats, recipe
+    from repro.obs.probes import biased_fixture
+
+    x = biased_fixture(jax.random.key(seed), tokens, dim, layers,
+                       bias=bias, noise=noise)
+    report: Dict[str, object] = {"recipes": {}, "verdict": None}
+    for mode in recipes:
+        cfg = recipe(mode)
+        stats = jax.jit(jax.vmap(lambda xl: probe_stats(xl, cfg)))(x)
+        per_layer = [
+            {k: float(np.asarray(v)[li]) for k, v in stats.items()
+             if k != "bins"}
+            | {"bins": np.asarray(stats["bins"])[li].tolist()}
+            for li in range(layers)
+        ]
+        report["recipes"][mode] = {
+            "centered": _is_centered(mode),
+            "per_layer": per_layer,
+            "mean_clip_rate": float(np.mean(
+                [pl["clip_rate"] for pl in per_layer])),
+            "max_mean_bias_ratio": float(np.max(
+                [pl["mean_bias_ratio"] for pl in per_layer])),
+        }
+
+    cent = {m: r for m, r in report["recipes"].items() if r["centered"]}
+    uncent = {m: r for m, r in report["recipes"].items() if not r["centered"]}
+    if cent and uncent:
+        worst_cent = max(r["mean_clip_rate"] for r in cent.values())
+        best_uncent = min(r["mean_clip_rate"] for r in uncent.values())
+        report["verdict"] = {
+            "centered": sorted(cent),
+            "uncentered": sorted(uncent),
+            "max_centered_clip_rate": worst_cent,
+            "min_uncentered_clip_rate": best_uncent,
+            "centered_lower_clip": worst_cent < best_uncent,
+        }
+    return report
+
+
+def _render_fixture(report: Dict[str, object], args) -> None:
+    print(f"quantwatch fixture: layers={args.layers} tokens={args.tokens} "
+          f"dim={args.dim} bias={args.bias} noise={args.noise} "
+          f"(depth-growing token-mean bias, paper Fig. 2 shape)")
+    for mode, rec in report["recipes"].items():
+        tag = "centered" if rec["centered"] else "uncentered"
+        for line in _table_header(f"\nrecipe {mode} ({tag}):"):
+            print(line)
+        for li, pl in enumerate(rec["per_layer"]):
+            print(_fmt_row(f"layer {li}", pl))
+        print(f"  {'mean clip':<18s} {rec['mean_clip_rate']:>10.4f}   "
+              f"max R {rec['max_mean_bias_ratio']:.2f}")
+    v = report["verdict"]
+    if v is None:
+        print("\nno centered-vs-uncentered verdict (need one recipe of "
+              "each kind; e.g. --recipes nvfp4,averis)")
+    else:
+        sign = "<" if v["centered_lower_clip"] else ">="
+        word = "PASS" if v["centered_lower_clip"] else "FAIL"
+        print(f"\nverdict [{word}]: centered {v['centered']} clip "
+              f"{v['max_centered_clip_rate']:.4f} {sign} uncentered "
+              f"{v['uncentered']} clip {v['min_uncentered_clip_rate']:.4f} "
+              f"— mean removal {'defuses' if v['centered_lower_clip'] else 'does NOT defuse'} "
+              f"the block-scale saturation on the biased fixture")
+
+
+# --------------------------------------------------------------------------
+# Train mode
+# --------------------------------------------------------------------------
+
+def _split_site(site: str) -> Tuple[str, Optional[int], str]:
+    """Tape key ``role/path...`` -> (role, layer, raw path). The first path
+    component of a layered site is the scan layer index; lm_head has none."""
+    role, _, path = site.partition("/")
+    comps = path.split(".")
+    layer = int(comps[0]) if role != "lm_head" and len(comps) > 1 else None
+    return role, layer, path
+
+
+def train_report(recipes: List[str], *, arch: str = "qwen3-0.6b",
+                 steps: int = 2, batch: int = 2, seq: int = 32,
+                 seed: int = 0) -> Dict[str, object]:
+    """Run ``steps`` probed train steps of the reduced ``arch`` per recipe
+    spec and return the last step's probe tape, one row per (site, layer)."""
+    import jax
+
+    from repro.configs import reduced
+    from repro.models.model import Model
+    from repro.train.trainer import (TrainConfig, init_train_state,
+                                     make_train_step, resolve_policy)
+
+    cfg = reduced(arch)
+    model = Model(cfg)
+    report: Dict[str, object] = {"arch": cfg.name, "recipes": {}}
+    for spec in recipes:
+        tcfg = TrainConfig(quant_mode=spec, quant_policy="",
+                           microbatches=1, quant_probes=True)
+        policy = resolve_policy(tcfg, model)
+        site_modes = policy.site_table(cfg.num_layers)
+        step = jax.jit(make_train_step(model, tcfg))
+        params, opt = init_train_state(model, tcfg, jax.random.key(seed))
+        metrics = {}
+        for i in range(steps):
+            batch_toks = jax.random.randint(
+                jax.random.key(seed + 1 + i), (batch, seq), 0,
+                cfg.vocab_size)
+            params, opt, metrics = step(params, opt,
+                                        {"tokens": batch_toks},
+                                        jax.random.key(seed + 100 + i))
+        tape = metrics.get("quant_probes", {})
+        rows = []
+        for site in sorted(tape):
+            role, _, path = _split_site(site)
+            stats = tape[site]
+            n_layers = int(np.asarray(stats["mean_bias_ratio"]).reshape(-1)
+                           .shape[0])
+            for li in range(n_layers):
+                layer = None if role == "lm_head" else li
+                rows.append({
+                    "site": site, "role": role, "layer": layer,
+                    "path": path,
+                    "mode": site_modes.get((role, layer), spec),
+                    **{c: float(np.asarray(stats[c]).reshape(-1)[li])
+                       for c in _COLS},
+                })
+        report["recipes"][spec] = {
+            "loss": float(metrics["loss"]), "rows": rows}
+    return report
+
+
+def _render_train(report: Dict[str, object], args) -> None:
+    print(f"quantwatch train: arch={report['arch']} steps={args.steps} "
+          f"batch={args.batch} seq={args.seq} (last-step probe tape)")
+    for spec, rec in report["recipes"].items():
+        for line in _table_header(
+                f"\npolicy {spec!r} (loss {rec['loss']:.4f}):"):
+            print(line)
+        for row in rec["rows"]:
+            lab = (row["role"] if row["layer"] is None
+                   else f"{row['role']}[{row['layer']}]")
+            print(_fmt_row(f"{lab}/{row['path']}", row)
+                  + f"   {row['mode']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="per-layer quant-health report (mean-bias ratio R, "
+                    "E2M1 clip/underflow rates, amax shrink)")
+    ap.add_argument("--recipes", default="nvfp4,averis",
+                    help="comma-separated recipe/policy specs to compare")
+    ap.add_argument("--train", action="store_true",
+                    help="probe real train steps instead of the fixture")
+    # fixture knobs
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=64)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--bias", type=float, default=8.0,
+                    help="token-mean magnitude (0 = unbiased control)")
+    ap.add_argument("--noise", type=float, default=1.0)
+    # train knobs
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default="",
+                    help="also dump the full report dict as JSON")
+    args = ap.parse_args()
+
+    recipes = [r.strip() for r in args.recipes.split(",") if r.strip()]
+    if args.train:
+        report = train_report(recipes, arch=args.arch, steps=args.steps,
+                              batch=args.batch, seq=args.seq, seed=args.seed)
+        _render_train(report, args)
+    else:
+        report = fixture_report(recipes, layers=args.layers,
+                                tokens=args.tokens, dim=args.dim,
+                                bias=args.bias, noise=args.noise,
+                                seed=args.seed)
+        _render_fixture(report, args)
+
+    from repro.obs.telemetry import global_hub
+    skipped = global_hub().counter("quant/skipped_hadamard")
+    if skipped:
+        print(f"\nWARNING: {int(skipped)} ragged-axis Hadamard skip(s) "
+              f"during this report — a rotation stage silently downgraded")
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"\nwrote JSON report to {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()

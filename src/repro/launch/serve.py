@@ -97,6 +97,15 @@ def run_static(args) -> None:
 def run_engine(args) -> None:
     cfg, model, params = _build(args)
     max_len = args.max_len or args.prompt_len + args.gen
+    tracer = None
+    if args.trace_out:
+        from repro.obs import ChromeTracer
+        tracer = ChromeTracer(process_name=f"serve:{args.arch}")
+    hub = None
+    if args.telemetry or args.telemetry_out:
+        from repro.obs import JsonlSink, Telemetry
+        hub = Telemetry(JsonlSink(args.telemetry_out)
+                        if args.telemetry_out else None)
     eng = Engine(model, params, EngineConfig(
         n_slots=args.slots, max_len=max_len, kv_cache=args.kv_cache,
         page_size=args.page_size, quant_mode=args.quant, seed=args.seed,
@@ -106,7 +115,7 @@ def run_engine(args) -> None:
         speculate=args.speculate, draft_tokens=args.draft_tokens,
         self_draft_layers=args.draft_layers,
         draft_quant_mode=args.draft_quant,
-    ))
+    ), tracer=tracer, telemetry=hub)
     tokens = np.asarray(_prompts(args, cfg, args.requests))
 
     # Submit in staggered groups: the engine admits/retires mid-flight, which
@@ -150,6 +159,20 @@ def run_engine(args) -> None:
               f"accept-rate {summ['accept_rate']:.2f}, "
               f"{summ['spec_tokens_per_step']:.2f} tokens/step "
               f"over {int(summ['spec_steps'])} spec steps")
+    if summ["skipped_hadamard"]:
+        print(f"WARNING: {int(summ['skipped_hadamard'])} ragged-axis "
+              f"Hadamard skip(s) — a rotation stage silently downgraded "
+              f"(see core/pipeline.plan_summary)")
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        print(f"wrote Chrome trace ({len(tracer.events)} events, "
+              f"{len(tracer.span_names())} span types) to {args.trace_out} "
+              f"— load in chrome://tracing or ui.perfetto.dev")
+    if hub is not None and args.telemetry_out:
+        hub.emit("serve.summary", **summ)
+        if hub.sink is not None:
+            hub.sink.close()
+        print(f"wrote telemetry JSONL to {args.telemetry_out}")
     by_rid = sorted(finished, key=lambda r: r.rid)
     print("sample:", by_rid[0].generated[:12])
 
@@ -202,6 +225,15 @@ def main() -> None:
                     help="staggered submission groups")
     ap.add_argument("--stagger-steps", type=int, default=4,
                     help="engine steps between group submissions")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="back ServeMetrics on a repro.obs Telemetry hub "
+                         "(per-step records; summary unchanged)")
+    ap.add_argument("--telemetry-out", default="",
+                    help="JSONL sink path for per-step serve records "
+                         "(implies --telemetry)")
+    ap.add_argument("--trace-out", default="",
+                    help="Chrome-trace (Perfetto JSON) output of engine "
+                         "phase spans (admit/prefill/decode/verify/...)")
     args = ap.parse_args()
 
     if args.static:

@@ -67,11 +67,23 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="in-graph quant-health probes (repro.obs): per-site "
+                         "R / clip / underflow stats in the step metrics and "
+                         "the per-step log line")
+    ap.add_argument("--telemetry-out", default="",
+                    help="JSONL sink path for per-step telemetry records "
+                         "(implies --telemetry)")
+    ap.add_argument("--trace-out", default="",
+                    help="Chrome-trace (Perfetto JSON) output: runs the "
+                         "phase-split traced train step (single-device "
+                         "path) and writes train-phase spans here")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
     cfg = reduced(args.arch) if args.reduced else get_config(args.arch)
     model = Model(cfg)
+    telemetry_on = bool(args.telemetry or args.telemetry_out)
     tcfg = TrainConfig(
         quant_mode=args.quant,
         quant_policy=args.quant_policy,
@@ -79,6 +91,7 @@ def main() -> None:
         grad_compression=args.grad_compression,
         comm_recipe=args.comm_recipe,
         comm_bucket_mb=args.comm_bucket_mb,
+        quant_probes=telemetry_on,
         optimizer=adamw.OptimizerConfig(
             peak_lr=args.lr, warmup_steps=args.warmup, total_steps=args.steps
         ),
@@ -93,6 +106,19 @@ def main() -> None:
     n_dev = len(jax.devices())
     dp_shards = args.dp_shards or n_dev
     sharded = n_dev > 1 or dp_shards > 1 or args.comm_recipe
+    tracer = None
+    if args.trace_out:
+        if sharded:
+            raise SystemExit("--trace-out runs the phase-split traced step, "
+                             "which is single-device; drop the sharding "
+                             "flags or the trace")
+        from repro.obs import ChromeTracer
+        tracer = ChromeTracer(process_name=f"train:{args.arch}")
+    hub = None
+    if telemetry_on:
+        from repro.obs import JsonlSink, Telemetry
+        hub = Telemetry(JsonlSink(args.telemetry_out)
+                        if args.telemetry_out else None)
     stream = make_stream(cfg, DataConfig(seed=args.seed,
                                          batch_size=args.batch,
                                          seq_len=args.seq,
@@ -123,6 +149,12 @@ def main() -> None:
         def init_fn():
             return init_train_state(model, tcfg, jax.random.key(args.seed),
                                     dp_shards=dp_shards)
+    elif tracer is not None:
+        from repro.train.trainer import make_traced_train_step
+        step_fn = make_traced_train_step(model, tcfg, tracer)
+
+        def init_fn():
+            return init_train_state(model, tcfg, jax.random.key(args.seed))
     else:
         step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0, 1))
 
@@ -130,16 +162,50 @@ def main() -> None:
             return init_train_state(model, tcfg, jax.random.key(args.seed))
 
     def on_metrics(step, metrics):
+        health = ""
+        qp = metrics.get("quant_probes")
+        if qp:
+            from repro.obs.probes import probe_summary
+            top = probe_summary(qp)
+            health = (f" | R<={top['max_mean_bias_ratio']:.2f}"
+                      f"@{top['worst_r_site']}"
+                      f" clip<={top['max_clip_rate']:.4f}"
+                      f" underflow<={top['max_underflow_rate']:.4f}")
+            if hub is not None:
+                hub.gauge("train/max_mean_bias_ratio",
+                          top["max_mean_bias_ratio"])
+                hub.gauge("train/max_clip_rate", top["max_clip_rate"])
+                hub.emit("train.step", step=step,
+                         loss=float(metrics["loss"]),
+                         grad_norm=float(metrics.get("grad_norm", 0)),
+                         **{k: v for k, v in top.items()
+                            if not isinstance(v, str)},
+                         sites=top["worst_r_site"])
+        elif hub is not None:
+            hub.emit("train.step", step=step, loss=float(metrics["loss"]),
+                     grad_norm=float(metrics.get("grad_norm", 0)))
         if step % args.log_every == 0:
             print(f"step {step:6d} loss {float(metrics['loss']):.4f} "
                   f"gnorm {float(metrics.get('grad_norm', 0)):.3f} "
-                  f"lr {float(metrics.get('lr', 0)):.2e}", flush=True)
+                  f"lr {float(metrics.get('lr', 0)):.2e}{health}",
+                  flush=True)
 
     sup = SupervisorConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
                            ckpt_dir=args.ckpt_dir)
     out = run_supervised(step_fn, init_fn, stream.batch,
                          jax.random.key(args.seed + 1), sup,
                          on_metrics=on_metrics)
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        logging.info("wrote Chrome trace (%d events) to %s — load in "
+                     "chrome://tracing or ui.perfetto.dev",
+                     len(tracer.events), args.trace_out)
+    if hub is not None and args.telemetry_out:
+        hub.emit("train.summary", **{
+            k: v for k, v in hub.snapshot()["gauges"].items()})
+        if hub.sink is not None:
+            hub.sink.close()
+        logging.info("wrote telemetry JSONL to %s", args.telemetry_out)
     print(f"done: {out['steps']} steps, {out['restarts']} restarts, "
           f"final loss {out['losses'][-1]:.4f}")
 

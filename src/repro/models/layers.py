@@ -107,6 +107,11 @@ class QuantCtx:
     path: Tuple[int, ...] = ()
     prepared: Optional[Dict] = None
     qweights: Optional[Dict] = None
+    probes: Optional[Dict] = None    # quant-health tape: {"role/path.site":
+                                     # stats dict} appended by gemm() when
+                                     # installed; None = probes statically
+                                     # off (the traced graph is then
+                                     # byte-identical to a probe-free build)
 
     def __post_init__(self):
         if isinstance(self.policy, QuantConfig):
@@ -125,9 +130,24 @@ class QuantCtx:
             return None
         return self.prepared.get(self.path + (site,))
 
+    def _probe(self, x: jax.Array, site: int, role: Optional[str],
+               cfg: QuantConfig) -> None:
+        # Probing happens HERE, on the forward activation before it enters
+        # the qgemm custom_vjp (whose fwd runs under tracing machinery that
+        # must not leak side-channel tracers). stop_gradient inside
+        # gemm_site_stats keeps the probe a pure read.
+        from repro.obs.probes import gemm_site_stats
+
+        x2 = x.reshape(-1, x.shape[-1])
+        key = f"{role or 'default'}/{'.'.join(map(str, self.path + (site,)))}"
+        self.probes[key] = gemm_site_stats(x2, cfg)
+
     def gemm(self, x: jax.Array, w: jax.Array, site: int,
              role: Optional[str] = None, prepared=None) -> jax.Array:
-        return qgemm(x, w, self.resolve(role),
+        cfg = self.resolve(role)
+        if self.probes is not None:
+            self._probe(x, site, role, cfg)
+        return qgemm(x, w, cfg,
                      jax.random.fold_in(self.key, site),
                      prepared=prepared if prepared is not None
                      else self._prep(site))
@@ -136,14 +156,21 @@ class QuantCtx:
                     role: Optional[str] = None) -> jax.Array:
         from repro.core.qgemm import qgemm_expert
 
-        return qgemm_expert(x, w, self.resolve(role),
+        cfg = self.resolve(role)
+        if self.probes is not None:
+            # Expert GeMMs share one site address: probe the token stream
+            # flattened across experts (the quantizer sees per-expert
+            # blocks, but the site-level health signal is the pooled one).
+            self._probe(x.reshape(-1, x.shape[-1]), site, role, cfg)
+        return qgemm_expert(x, w, cfg,
                             jax.random.fold_in(self.key, site),
                             prepared=self._prep(site))
 
     def child(self, tag: int) -> "QuantCtx":
         return QuantCtx(self.policy, jax.random.fold_in(self.key, tag),
                         layer=self.layer, path=self.path + (tag,),
-                        prepared=self.prepared, qweights=self.qweights)
+                        prepared=self.prepared, qweights=self.qweights,
+                        probes=self.probes)
 
 
 # --------------------------------------------------------------------------

@@ -208,25 +208,46 @@ class Model:
             )
 
         if mode == "train":
+            # Probe tapes must leave the layer scan as ys (remat/scan bodies
+            # are pure — a side-channel dict would capture dead tracers).
+            # With probes off the tape is a leafless {} at every level, so
+            # the jaxpr — and hence the compiled step — is byte-identical
+            # to the pre-probe build.
+            probe_on = ctx.probes is not None
             aux_total = jnp.zeros((), jnp.float32)
+            tape_segs = []
             for s0, s1 in self._segments(ctx):
                 prepped = self._segment_qweights(ctx, s0, s1)
-                fn = self._maybe_remat(
-                    lambda x, p_l, prep_l, idx, _s0=s0: layer(
-                        x, p_l, prep_l, None, idx, _s0)[::2]
-                )
+
+                def probed_layer(x, p_l, prep_l, idx, _s0=s0):
+                    tape: Dict[str, Any] = {}
+                    lctx = QuantCtx(
+                        ctx.policy, jax.random.fold_in(ctx.key, idx),
+                        layer=_s0, prepared=prep_l,
+                        probes=tape if probe_on else None)
+                    xo, _, aux = attn_ffn_block_apply(
+                        p_l, x, positions, lctx, cfg, None, decode_pos,
+                        self.adapter, chunk_valid)
+                    return xo, aux, tape
+
+                fn = self._maybe_remat(probed_layer)
 
                 def body(c, xs, _fn=fn):
                     p_l, prep_l, idx = xs
-                    xo, aux = _fn(c, p_l, prep_l, idx)
-                    return xo, aux
+                    xo, aux, tape = _fn(c, p_l, prep_l, idx)
+                    return xo, (aux, tape)
 
-                x, auxs = jax.lax.scan(
+                x, (auxs, tapes) = jax.lax.scan(
                     body, x,
                     (_slice_layers(params["layers"], s0, s1), prepped,
                      jnp.arange(s0, s1)),
                 )
                 aux_total = aux_total + jnp.sum(auxs)
+                tape_segs.append(tapes)
+            if probe_on:
+                # Per-segment scans stack stats to (s1-s0,); concatenating
+                # the segments yields one (num_layers,) array per site stat.
+                ctx.probes.update(_concat_layers(tape_segs))
             return x, None, aux_total
 
         new_cache_segs, aux_total = [], jnp.zeros((), jnp.float32)
@@ -257,22 +278,35 @@ class Model:
             return ssm_block_apply(p_l, x, lctx, cfg, cache_l)
 
         if mode == "train":
+            probe_on = ctx.probes is not None
+            tape_segs = []
             for s0, s1 in self._segments(ctx):
                 prepped = self._segment_qweights(ctx, s0, s1)
-                fn = self._maybe_remat(
-                    lambda x, p_l, prep_l, idx, _s0=s0: layer(
-                        x, p_l, prep_l, None, idx, _s0)[0]
-                )
+
+                def probed_layer(x, p_l, prep_l, idx, _s0=s0):
+                    tape: Dict[str, Any] = {}
+                    lctx = QuantCtx(
+                        ctx.policy, jax.random.fold_in(ctx.key, idx),
+                        layer=_s0, prepared=prep_l,
+                        probes=tape if probe_on else None)
+                    xo, _ = ssm_block_apply(p_l, x, lctx, cfg, None)
+                    return xo, tape
+
+                fn = self._maybe_remat(probed_layer)
 
                 def body(c, xs, _fn=fn):
                     p_l, prep_l, idx = xs
-                    return _fn(c, p_l, prep_l, idx), None
+                    xo, tape = _fn(c, p_l, prep_l, idx)
+                    return xo, tape
 
-                x, _ = jax.lax.scan(
+                x, tapes = jax.lax.scan(
                     body, x,
                     (_slice_layers(params["layers"], s0, s1), prepped,
                      jnp.arange(s0, s1)),
                 )
+                tape_segs.append(tapes)
+            if probe_on:
+                ctx.probes.update(_concat_layers(tape_segs))
             return x, None, jnp.zeros((), jnp.float32)
 
         new_cache_segs = []

@@ -1,0 +1,277 @@
+"""In-graph quant-health probes: the paper's §2 diagnostics as jit outputs.
+
+``core/analysis.py`` computes mean-bias diagnostics *offline*; this module
+computes the same quantities **inside** the traced step, per GeMM site and
+per gradient-comm bucket, so the mean bias can be watched moving through a
+live run. Per probed tensor:
+
+  amax_in          max |x| — the dynamic range the quantizer must cover
+  mean_bias_ratio  R = ||mu|| / sqrt(||X||_F^2 / l)     (paper Eq. 2 /
+                   ``analysis.mean_bias_ratio``; mu = per-column token mean)
+  amax_shrink      amax(x - mu) / amax(x) — how much mean removal collapses
+                   the range (< 1 <=> the bias carries the outliers)
+  clip_rate        fraction of elements whose |x|/(s_b*s_t) exceeds
+                   E2M1_MAX before clipping (E4M3 scale round-down
+                   saturation)
+  underflow_rate   fraction of nonzero elements that round to 0 — the
+                   paper's "crushed long tail"
+  bins             occupancy over the 8 E2M1 magnitude levels
+
+Clip/underflow/bins are computed on the **recipe-faithful quantizer input**:
+the forward activation operand's stage pipeline (Center/Hadamard) applied up
+to its Quantize stage, with the exact two-level scale math of
+``core/nvfp4.nvfp4_qdq`` (RN elements). Everything runs under
+``jax.lax.stop_gradient`` — probes never perturb values or gradients; with
+no probe tape installed the traced graph is byte-identical to a probe-free
+build (the static gate, see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.averis import split_mean
+from repro.core.formats import E2M1_GRID, E2M1_MAX, TENSOR_SCALE_DENOM
+from repro.core.hadamard import hadamard_tiles
+from repro.core.nvfp4 import quantize_block_scales, round_e2m1_rn
+from repro.core.pipeline import Center, Hadamard, Quantize, plan_for
+
+_EPS = 1e-30
+_TILE = 16
+
+PROBE_FIELDS = ("amax_in", "mean_bias_ratio", "amax_shrink", "clip_rate",
+                "underflow_rate", "bins")
+
+
+def quant_bin_stats(v: jax.Array, axis: int = -1,
+                    block_size: int = 16) -> Dict[str, jax.Array]:
+    """Clip/underflow/bin-occupancy of blockwise NVFP4 RN quantization.
+
+    Mirrors ``nvfp4_qdq``'s scale chain exactly — per-tensor fp32 scale,
+    E4M3 per-block scales, E2M1 RN elements — but returns the *statistics*
+    of the rounding instead of the dequantized values. Block padding is
+    masked out of every rate.
+    """
+    vf = jnp.moveaxis(v.astype(jnp.float32), axis, -1)
+    n = vf.shape[-1]
+    pad = (-n) % block_size
+    if pad:
+        vf = jnp.pad(vf, [(0, 0)] * (vf.ndim - 1) + [(0, pad)])
+    xb = vf.reshape(vf.shape[:-1] + (-1, block_size))
+    mask = (jnp.arange(n + pad) < n).reshape(-1, block_size)  # (nb, bs)
+
+    absx = jnp.abs(xb)
+    s_t = jnp.maximum(jnp.max(absx) / TENSOR_SCALE_DENOM, _EPS)
+    block_amax = jnp.max(absx, axis=-1, keepdims=True)
+    s_b = quantize_block_scales(block_amax, s_t).astype(jnp.float32)
+    scale = s_b * s_t
+    a = jnp.where(scale > 0, absx / jnp.maximum(scale, _EPS), 0.0)
+    q = round_e2m1_rn(a)
+
+    total = jnp.float32(v.size)
+    clip = (a > E2M1_MAX) & mask
+    under = (q == 0) & (absx > 0) & mask
+    occupied = (q[..., None] == jnp.asarray(E2M1_GRID)) & mask[..., None]
+    return {
+        "clip_rate": jnp.sum(clip) / total,
+        "underflow_rate": jnp.sum(under) / total,
+        "bins": jnp.sum(occupied.astype(jnp.float32),
+                        axis=tuple(range(occupied.ndim - 1))) / total,
+    }
+
+
+def _activation_quant_spec(plan) -> Tuple[Tuple, int]:
+    """The forward GeMM's activation operand: its pre-Quantize stages and
+    the Quantize axis (-1 for plans that never quantize, e.g. bf16 — the
+    probe then reports the *hypothetical* FP4 statistics, which is what
+    makes bf16 sites comparable in a quantwatch table)."""
+    op = plan.fwd[0].lhs                 # first matmul term; rhs is the weight
+    pre = []
+    for st in op.stages:
+        if isinstance(st, Quantize):
+            return tuple(pre), st.axis
+        pre.append(st)
+    return tuple(pre), -1
+
+
+def gemm_site_stats(x2: jax.Array, cfg) -> Dict[str, jax.Array]:
+    """Quant-health probe of one GeMM site's activation input ``x2 (l, m)``.
+
+    ``cfg`` is the site's resolved :class:`repro.core.qgemm.QuantConfig`;
+    the clip/underflow stats follow its plan's forward activation pipeline
+    (so an ``averis`` site is probed on the centered residual it actually
+    quantizes, ``nvfp4`` on the raw tensor). All stats are scalars except
+    ``bins`` (8,). Wrapped in ``stop_gradient`` — zero perturbation.
+    """
+    xf = jax.lax.stop_gradient(x2).astype(jnp.float32)
+    l = xf.shape[0]
+    mu, res = split_mean(xf, token_axis=0)
+    amax_in = jnp.max(jnp.abs(xf))
+    rms = jnp.sqrt(jnp.sum(xf * xf) / l)
+    stats = {
+        "amax_in": amax_in,
+        "mean_bias_ratio": jnp.linalg.norm(mu) / jnp.maximum(rms, _EPS),
+        "amax_shrink": jnp.max(jnp.abs(res)) / jnp.maximum(amax_in, _EPS),
+    }
+    pre, qaxis = _activation_quant_spec(plan_for(cfg.mode))
+    v = xf
+    for st in pre:
+        if isinstance(st, Center):
+            vmu, vres = split_mean(v, token_axis=st.token_axis)
+            v = vres if st.take == "residual" else vmu
+        elif isinstance(st, Hadamard):
+            if v.shape[st.axis] % _TILE == 0:     # ragged axes skip, as the
+                v = hadamard_tiles(v, st.axis)    # executor does
+    stats.update(quant_bin_stats(v, qaxis, cfg.block_size))
+    return stats
+
+
+def comm_bucket_stats(recipe, corrected: jax.Array,
+                      wire: jax.Array) -> Dict[str, jax.Array]:
+    """Quant-health probe of one gradient bucket's wire encoding.
+
+    ``corrected`` is the EF-corrected flat fp32 bucket, ``wire`` its decoded
+    wire value (``collectives.encode_bucket``). A flat bucket is the (l, 1)
+    case of the §2 diagnostics: R = |mean| / rms. ``ef_norm`` is the norm of
+    the residual the error-feedback buffer will carry to the next step.
+    """
+    x = jax.lax.stop_gradient(corrected).astype(jnp.float32)
+    n = x.size
+    mu = jnp.mean(x)
+    amax = jnp.max(jnp.abs(x))
+    rms = jnp.sqrt(jnp.sum(x * x) / n)
+    res = x - mu
+    v = res if getattr(recipe, "center", False) else x
+    stats = {
+        "amax_in": amax,
+        "mean_bias_ratio": jnp.abs(mu) / jnp.maximum(rms, _EPS),
+        "amax_shrink": jnp.max(jnp.abs(res)) / jnp.maximum(amax, _EPS),
+        "ef_norm": jnp.linalg.norm(
+            x - jax.lax.stop_gradient(wire).astype(jnp.float32)),
+    }
+    stats.update(quant_bin_stats(v, -1, _TILE))
+    return stats
+
+
+def probe_summary(tape) -> Dict[str, object]:
+    """Host-side reduction of one step's probe tape to headline numbers:
+    the worst (role, layer) site per stat — the trainer's per-step log line
+    and JSONL record. ``tape`` is ``metrics["quant_probes"]`` (site ->
+    stats, each stat a scalar or per-layer array)."""
+    import numpy as np
+
+    out = {"max_mean_bias_ratio": 0.0, "worst_r_site": "",
+           "max_clip_rate": 0.0, "max_underflow_rate": 0.0,
+           "min_amax_shrink": 1.0}
+    for site, stats in sorted(tape.items()):
+        r = float(np.max(np.asarray(stats["mean_bias_ratio"])))
+        if r >= out["max_mean_bias_ratio"]:
+            out["max_mean_bias_ratio"] = r
+            out["worst_r_site"] = site
+        out["max_clip_rate"] = max(
+            out["max_clip_rate"],
+            float(np.max(np.asarray(stats["clip_rate"]))))
+        out["max_underflow_rate"] = max(
+            out["max_underflow_rate"],
+            float(np.max(np.asarray(stats["underflow_rate"]))))
+        out["min_amax_shrink"] = min(
+            out["min_amax_shrink"],
+            float(np.min(np.asarray(stats["amax_shrink"]))))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Biased-input fixture (quantwatch --fixture and the probe tests)
+# --------------------------------------------------------------------------
+
+def biased_fixture(key: jax.Array, tokens: int, dim: int, num_layers: int,
+                   bias: float = 8.0, noise: float = 1.0) -> jax.Array:
+    """Per-layer activations with a depth-growing massive mean bias.
+
+    Layer ``i`` is ``X_i = 1 * mu_i^T + noise`` with ``mu_i`` of uniform
+    large magnitude (random signs, ±20% jitter so block amaxes spread over
+    the E4M3 rounding bands) scaled up with depth — the paper's Figure-2
+    shape: the token mean dominates, R grows through the stack, and the
+    uncentered quantizer both saturates (every element sits near its block
+    amax, so scale round-down clips broadly) and crushes nothing until the
+    mean is removed, at which point the residual is a well-behaved Gaussian.
+    """
+    k_sign, k_jit, k_noise = jax.random.split(key, 3)
+    signs = jax.random.rademacher(k_sign, (num_layers, dim), jnp.float32)
+    jitter = 1.0 + 0.2 * jax.random.uniform(k_jit, (num_layers, dim))
+    depth = (0.25 + 0.75 * jnp.arange(1, num_layers + 1) / num_layers)
+    mu = bias * depth[:, None] * signs * jitter              # (L, dim)
+    eps = noise * jax.random.normal(k_noise, (num_layers, tokens, dim))
+    return mu[:, None, :] + eps
+
+
+def numpy_reference_stats(x2, cfg) -> Dict[str, float]:
+    """Pure-numpy reference of :func:`gemm_site_stats` (tests only).
+
+    Restricted to recipes without Hadamard stages; on dyadic inputs the
+    float32 jax path and this float64-accumulating numpy path agree exactly.
+    """
+    import numpy as np
+
+    from repro.core.formats import E2M1_GRID as GRID
+
+    plan = plan_for(cfg.mode)
+    pre, qaxis = _activation_quant_spec(plan)
+    assert not any(isinstance(st, Hadamard) for st in pre), (
+        "numpy reference does not implement Hadamard stages")
+
+    x = np.asarray(x2, np.float32)
+    l = x.shape[0]
+    mu = x.mean(axis=0, dtype=np.float32)
+    res = x - mu[None, :]
+    amax_in = float(np.max(np.abs(x)))
+    rms = float(np.sqrt(np.sum(x.astype(np.float64) ** 2) / l))
+    out = {
+        "amax_in": amax_in,
+        "mean_bias_ratio": float(np.linalg.norm(mu)) / max(rms, _EPS),
+        "amax_shrink": float(np.max(np.abs(res))) / max(amax_in, _EPS),
+    }
+    v = x
+    for st in pre:
+        if isinstance(st, Center):
+            m = v.mean(axis=st.token_axis, keepdims=True, dtype=np.float32)
+            v = (v - m) if st.take == "residual" else m.reshape(-1)
+
+    vf = np.moveaxis(v, qaxis, -1)
+    n = vf.shape[-1]
+    bs = cfg.block_size
+    pad = (-n) % bs
+    if pad:
+        vf = np.pad(vf, [(0, 0)] * (vf.ndim - 1) + [(0, pad)])
+    xb = vf.reshape(vf.shape[:-1] + (-1, bs))
+    mask = (np.arange(n + pad) < n).reshape(-1, bs)
+    absx = np.abs(xb)
+    # the scale chain stays float32 end to end: elementwise IEEE f32 ops are
+    # bitwise identical between numpy and jax, so threshold comparisons
+    # (clip, underflow) cannot flip between the two implementations
+    eps = np.float32(_EPS)
+    s_t = np.maximum(
+        np.max(absx) / np.float32(TENSOR_SCALE_DENOM), eps)
+    import ml_dtypes
+    # XLA:CPU lowers the f32 -> f8e4m3 convert through f16 (double
+    # rounding); a direct ml_dtypes cast disagrees on values that the f16
+    # step pulls onto an E4M3 tie, so mirror the two-step cast exactly
+    s_b = np.clip(absx.max(-1, keepdims=True) / (np.float32(E2M1_MAX) * s_t),
+                  np.float32(0.0), np.float32(448.0)).astype(
+                      np.float16).astype(
+                      ml_dtypes.float8_e4m3fn).astype(np.float32)
+    scale = s_b * s_t
+    a = np.where(scale > 0, absx / np.maximum(scale, eps),
+                 np.float32(0.0))
+    ac = np.minimum(a, E2M1_MAX)
+    q = np.where(ac < 2.0, np.round(ac * 2.0) * 0.5,
+                 np.where(ac < 4.0, np.round(ac), np.round(ac * 0.5) * 2.0))
+    q = np.minimum(q, E2M1_MAX)
+    total = float(v.size)
+    out["clip_rate"] = float(np.sum((a > E2M1_MAX) & mask)) / total
+    out["underflow_rate"] = float(np.sum((q == 0) & (absx > 0) & mask)) / total
+    out["bins"] = (np.sum((q[..., None] == np.asarray(GRID)) & mask[..., None],
+                          axis=tuple(range(q.ndim))) / total)
+    return out

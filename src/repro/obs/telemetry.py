@@ -1,0 +1,127 @@
+"""Telemetry hub: counters, gauges, histogram series, and a JSONL sink.
+
+Host-side only and **stdlib-only** (no jax/numpy imports), so low-level
+modules like ``repro.core.pipeline`` can lazily report into the process-wide
+hub (:func:`global_hub`) without import cycles or added import cost.
+
+Series are plain Python lists — the hub is a recording surface, not a
+metrics database. ``snapshot()`` condenses everything into one JSON-ready
+dict; ``emit()`` appends structured records to the attached
+:class:`JsonlSink` (one JSON object per line — the schema documented in
+README "Observability").
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from typing import Any, Dict, List, Optional
+
+
+class JsonlSink:
+    """Append-only JSON-lines writer (one record per line, flushed)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fh = None
+
+    def write(self, record: Dict[str, Any]) -> None:
+        if self._fh is None:
+            self._fh = open(self.path, "a")
+        self._fh.write(json.dumps(record, sort_keys=True) + "\n")
+        self._fh.flush()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+
+def _percentile(values: List[float], p: float) -> float:
+    """Linear-interpolated percentile (numpy 'linear' method, stdlib-only)."""
+    if not values:
+        return 0.0
+    s = sorted(values)
+    if len(s) == 1:
+        return float(s[0])
+    rank = (p / 100.0) * (len(s) - 1)
+    lo = math.floor(rank)
+    hi = math.ceil(rank)
+    if lo == hi:
+        return float(s[int(rank)])
+    frac = rank - lo
+    return float(s[lo] * (1.0 - frac) + s[hi] * frac)
+
+
+class Telemetry:
+    """Counters / gauges / histogram series with an optional JSONL sink.
+
+    Monotonic counters (``count``), last-value gauges (``gauge``) and
+    observation series (``observe`` -> percentiles/mean) — the minimal
+    surface ``ServeMetrics`` and the launchers are (re-)founded on.
+    """
+
+    def __init__(self, sink: Optional[JsonlSink] = None):
+        self.sink = sink
+        self.counters: Dict[str, float] = {}
+        self.gauges: Dict[str, float] = {}
+        self.series: Dict[str, List[float]] = {}
+
+    # ------------------------------------------------------------- recording
+    def count(self, name: str, n: float = 1.0) -> None:
+        self.counters[name] = self.counters.get(name, 0.0) + n
+
+    def gauge(self, name: str, value: float) -> None:
+        self.gauges[name] = float(value)
+
+    def observe(self, name: str, value: float) -> None:
+        self.series.setdefault(name, []).append(float(value))
+
+    def emit(self, event: str, **fields: Any) -> None:
+        """Write one structured JSONL record (no-op without a sink)."""
+        if self.sink is not None:
+            self.sink.write({"event": event, "time": time.time(), **fields})
+
+    # --------------------------------------------------------------- reading
+    def counter(self, name: str) -> float:
+        return self.counters.get(name, 0.0)
+
+    def values(self, name: str) -> List[float]:
+        return self.series.get(name, [])
+
+    def percentile(self, name: str, p: float) -> float:
+        return _percentile(self.series.get(name, []), p)
+
+    def mean(self, name: str) -> float:
+        v = self.series.get(name, [])
+        return sum(v) / len(v) if v else 0.0
+
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-ready condensation: counters + gauges + per-series summaries."""
+        hists = {
+            name: {
+                "count": len(v),
+                "mean": sum(v) / len(v) if v else 0.0,
+                "p50": _percentile(v, 50),
+                "p99": _percentile(v, 99),
+                "max": max(v) if v else 0.0,
+            }
+            for name, v in self.series.items()
+        }
+        return {"counters": dict(self.counters), "gauges": dict(self.gauges),
+                "histograms": hists}
+
+    def reset(self) -> None:
+        self.counters.clear()
+        self.gauges.clear()
+        self.series.clear()
+
+
+_GLOBAL = Telemetry()
+
+
+def global_hub() -> Telemetry:
+    """The process-wide hub — the reporting target for code with no natural
+    place to thread a hub through (e.g. the pipeline's ragged-axis
+    ``skipped_hadamard`` counter)."""
+    return _GLOBAL

@@ -408,6 +408,38 @@ def encode_shard_buckets(
     return wires, new_ef
 
 
+def bucket_probe_stats(
+    layout: CommLayout,
+    flats: Dict[str, jax.Array],
+    ef_rows: Optional[Dict[str, jax.Array]] = None,
+    *,
+    codec_on: bool = True,
+) -> Dict[str, Dict[str, jax.Array]]:
+    """Quant-health probe of every bucket's wire encoding.
+
+    A stop-gradient *duplicate* of :func:`encode_shard_buckets`: the
+    production encode path is untouched (probes cannot perturb the wire,
+    and probes-off graphs stay bitwise identical), at the cost of encoding
+    each probed bucket twice. Returns
+    ``{bucket name: repro.obs.probes.comm_bucket_stats(...)}`` — R,
+    clip/underflow rate, bin occupancy, and the EF-residual norm per bucket.
+    """
+    from repro.obs.probes import comm_bucket_stats
+
+    out: Dict[str, Dict[str, jax.Array]] = {}
+    for b in layout.buckets:
+        r = get_comm_recipe(b.recipe)
+        flat = jax.lax.stop_gradient(flats[b.name]).astype(jnp.float32)
+        row = (ef_rows or {}).get(b.name)
+        if row is not None:
+            row = jax.lax.stop_gradient(row)
+        corrected = (flat if row is None
+                     else flat + row.astype(jnp.float32))
+        wire = encode_bucket(r, flat, row)[0] if codec_on else corrected
+        out[b.name] = comm_bucket_stats(r, corrected, wire)
+    return out
+
+
 def fold_shards(stacked: jax.Array, num_shards: int) -> jax.Array:
     """``Σ_s stacked[s] / S`` as a fixed-order sequence of fp32 adds.
 

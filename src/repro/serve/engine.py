@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
+from contextlib import nullcontext
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -130,8 +131,16 @@ class Engine:
     """Continuous-batching engine over a ``Model`` + params."""
 
     def __init__(self, model: Model, params, config: EngineConfig = EngineConfig(),
-                 drafter: Optional[Drafter] = None):
+                 drafter: Optional[Drafter] = None, tracer=None,
+                 telemetry=None):
         cfg = model.cfg
+        # Observability (repro.obs): ``tracer`` is a ChromeTracer — engine
+        # phases emit spans (engine.step / admit / prefill_chunk / decode /
+        # draft / verify / commit + pool_hit instants); ``telemetry`` is a
+        # Telemetry hub that backs ServeMetrics (attach a JsonlSink to it to
+        # stream per-step records). Both default to off with zero overhead.
+        self.tracer = tracer
+        self.telemetry = telemetry
         if not cfg.is_decoder:
             raise ValueError(f"{cfg.name} is encoder-only — nothing to serve")
         if cfg.family in ("ssm", "hybrid"):
@@ -229,9 +238,13 @@ class Engine:
 
     def reset_metrics(self) -> None:
         """Fresh metrics window (e.g. after a jit-compile warmup drain)."""
+        kw = {}
+        if self.telemetry is not None:
+            self.telemetry.reset()
+            kw["hub"] = self.telemetry
         self.metrics = ServeMetrics(
             cache_bytes_per_token=self.adapter.bytes_per_token(),
-            num_layers=self.model.cfg.num_layers,
+            num_layers=self.model.cfg.num_layers, **kw,
         )
         self.metrics.prefill_compiles = len(self._prefill_shapes)
         self.metrics.decode_compiles = len(self._decode_shapes)
@@ -342,6 +355,10 @@ class Engine:
         self.scheduler.submit(req)
         return rid
 
+    def _span(self, name: str, **args):
+        return (nullcontext() if self.tracer is None
+                else self.tracer.span(name, cat="engine", **args))
+
     def step(self) -> List[Request]:
         """Run one engine step: budgeted prefill chunks, then one decode
         (or one multi-token speculative step when a drafter is configured).
@@ -350,40 +367,57 @@ class Engine:
         """
         t_start = self.metrics.now()
         finished: List[Request] = []
+        with self._span("engine.step", step=self._step_idx):
+            budget = (self.config.prefill_token_budget
+                      or self.config.prefill_chunk)
+            while budget > 0:
+                st = self._next_prefill()
+                if st is None:
+                    break
+                budget -= self._prefill_chunk_step(st, budget, finished)
 
-        budget = self.config.prefill_token_budget or self.config.prefill_chunk
-        while budget > 0:
-            st = self._next_prefill()
-            if st is None:
-                break
-            budget -= self._prefill_chunk_step(st, budget, finished)
+            n_active = int(self._active.sum())
+            if n_active and self.drafter is not None:
+                self._speculative_step(finished)
+            elif n_active:
+                self._track_compile(self._decode_shapes,
+                                    ("decode", self.config.n_slots))
+                with self._span("engine.decode", n_active=n_active):
+                    nxt, self.caches = self._decode(
+                        self.params, self.caches,
+                        jnp.asarray(self._tokens), jnp.asarray(self._pos),
+                        jnp.asarray(self._temps), jnp.asarray(self._topks),
+                        jnp.asarray(self._seeds), jnp.asarray(self._gencnt),
+                        self._step_idx,
+                    )
+                    nxt = np.asarray(jax.block_until_ready(nxt))
+                for slot in np.flatnonzero(self._active):
+                    slot = int(slot)
+                    req = self.scheduler.request_in(slot)
+                    self._pos[slot] += 1
+                    self._gencnt[slot] += 1
+                    tok = int(nxt[slot])
+                    req.generated.append(tok)
+                    self._tokens[slot] = tok
+                    self._maybe_finish(slot, req, tok, finished)
 
-        n_active = int(self._active.sum())
-        if n_active and self.drafter is not None:
-            self._speculative_step(finished)
-        elif n_active:
-            self._track_compile(self._decode_shapes, ("decode", self.config.n_slots))
-            nxt, self.caches = self._decode(
-                self.params, self.caches,
-                jnp.asarray(self._tokens), jnp.asarray(self._pos),
-                jnp.asarray(self._temps), jnp.asarray(self._topks),
-                jnp.asarray(self._seeds), jnp.asarray(self._gencnt),
-                self._step_idx,
-            )
-            nxt = np.asarray(jax.block_until_ready(nxt))
-            for slot in np.flatnonzero(self._active):
-                slot = int(slot)
-                req = self.scheduler.request_in(slot)
-                self._pos[slot] += 1
-                self._gencnt[slot] += 1
-                tok = int(nxt[slot])
-                req.generated.append(tok)
-                self._tokens[slot] = tok
-                self._maybe_finish(slot, req, tok, finished)
+            # The step latency below must bracket ALL of this step's device
+            # work, not just the sampled tokens already blocked on — async
+            # dispatch of cache updates / partial prefill buffers would
+            # otherwise under-report (and push phantom time into the next
+            # step's span).
+            jax.block_until_ready(self.caches)
+            for st in self._prefilling.values():
+                if st.buf is not None:
+                    jax.block_until_ready(st.buf)
 
         self._step_idx += 1
-        self.metrics.record_step(self.metrics.now() - t_start, n_active,
-                                 self.scheduler.occupancy)
+        latency = self.metrics.now() - t_start
+        self.metrics.record_step(latency, n_active, self.scheduler.occupancy)
+        self.metrics.hub.emit(
+            "serve.step", step=self._step_idx - 1, latency_s=latency,
+            n_active=n_active, occupancy=self.scheduler.occupancy,
+            finished=len(finished))
         return finished
 
     def _track_compile(self, shapes: set, key) -> None:
@@ -408,7 +442,8 @@ class Engine:
         """
         active = self._active.copy()
         k = self.config.draft_tokens
-        drafts, qprobs = self.drafter.propose(self, active, k)
+        with self._span("engine.draft", k=k):
+            drafts, qprobs = self.drafter.propose(self, active, k)
         self._track_compile(self._verify_shapes, ("verify", k + 1))
 
         tokens = np.concatenate([self._tokens[:, None], drafts], axis=1)
@@ -416,14 +451,15 @@ class Engine:
         # memory zero-copy, and the host bookkeeping below mutates _pos
         # while the (async) commit computation still reads its pos operand.
         pos = jnp.asarray(self._pos.copy())
-        logits, caches_s = self._verify(
-            self.params, self.caches, jnp.asarray(tokens), pos,
-            self._step_idx)
-        n_acc, emitted = self._accept(
-            logits, jnp.asarray(drafts), qprobs,
-            jnp.asarray(self._temps), jnp.asarray(self._topks),
-            jnp.asarray(self._seeds), jnp.asarray(self._gencnt))
-        n_acc = np.asarray(jax.block_until_ready(n_acc))
+        with self._span("engine.verify", k=k):
+            logits, caches_s = self._verify(
+                self.params, self.caches, jnp.asarray(tokens), pos,
+                self._step_idx)
+            n_acc, emitted = self._accept(
+                logits, jnp.asarray(drafts), qprobs,
+                jnp.asarray(self._temps), jnp.asarray(self._topks),
+                jnp.asarray(self._seeds), jnp.asarray(self._gencnt))
+            n_acc = np.asarray(jax.block_until_ready(n_acc))
         emitted = np.asarray(emitted)
 
         # Commit t0 + accepted drafts; inactive slots commit nothing. The
@@ -434,8 +470,9 @@ class Engine:
         committed_leaves = {k: caches_s[k] for k in self.caches}
         scratch_leaves = {k: v for k, v in caches_s.items()
                           if k not in self.caches}
-        self.caches = self._commit(committed_leaves, scratch_leaves, pos,
-                                   jnp.asarray(n_commit))
+        with self._span("engine.commit"):
+            self.caches = self._commit(committed_leaves, scratch_leaves, pos,
+                                       jnp.asarray(n_commit))
 
         emitted_total = 0
         for slot in np.flatnonzero(active):
@@ -492,31 +529,36 @@ class Engine:
         return self._begin_prefill(slot, req)
 
     def _begin_prefill(self, slot: int, req: Request) -> _PrefillState:
-        p = self.config.page_size
-        buf = (self.model.adapter.prefill_buffer(self.model.cfg.num_layers,
-                                                 self.config.max_len)
-               if self._chunked else None)
-        keys: List[bytes] = []
-        acquired: List[Tuple[bytes, Any]] = []
-        if self._prefix_enabled:
-            keys = prefix_page_keys(req.prompt, p)
-            # Leave at least one prompt token to compute: the first generated
-            # token is sampled from the last prompt position's logits.
-            reusable = (req.prompt_len - 1) // p
-            for key in keys[:reusable]:
-                payload = self.pool.acquire(key)
-                if payload is None:
-                    break
-                acquired.append((key, payload))
-            for i, (_, payload) in enumerate(acquired):
-                buf = self._load_page(buf, payload, jnp.int32(i * p))
-            req.prefill_pos = len(acquired) * p
-            req.prefix_hit_tokens = req.prefill_pos
-            self.metrics.record_prefix_lookup(len(acquired), reusable, p)
-        st = _PrefillState(req=req, slot=slot, buf=buf, acquired=acquired,
-                           keys=keys)
-        self._prefilling[slot] = st
-        return st
+        with self._span("engine.admit", rid=req.rid, slot=slot):
+            p = self.config.page_size
+            buf = (self.model.adapter.prefill_buffer(
+                       self.model.cfg.num_layers, self.config.max_len)
+                   if self._chunked else None)
+            keys: List[bytes] = []
+            acquired: List[Tuple[bytes, Any]] = []
+            if self._prefix_enabled:
+                keys = prefix_page_keys(req.prompt, p)
+                # Leave at least one prompt token to compute: the first
+                # generated token is sampled from the last prompt
+                # position's logits.
+                reusable = (req.prompt_len - 1) // p
+                for key in keys[:reusable]:
+                    payload = self.pool.acquire(key)
+                    if payload is None:
+                        break
+                    acquired.append((key, payload))
+                for i, (_, payload) in enumerate(acquired):
+                    buf = self._load_page(buf, payload, jnp.int32(i * p))
+                if acquired and self.tracer is not None:
+                    self.tracer.instant("engine.pool_hit", cat="engine",
+                                        rid=req.rid, pages=len(acquired))
+                req.prefill_pos = len(acquired) * p
+                req.prefix_hit_tokens = req.prefill_pos
+                self.metrics.record_prefix_lookup(len(acquired), reusable, p)
+            st = _PrefillState(req=req, slot=slot, buf=buf,
+                               acquired=acquired, keys=keys)
+            self._prefilling[slot] = st
+            return st
 
     def _prefill_chunk_step(self, st: _PrefillState, budget: int,
                             finished: List[Request]) -> int:
@@ -541,10 +583,12 @@ class Engine:
             tokens[0, :take] = req.prompt[req.prefill_pos:req.prefill_pos + take]
             fn = self._get_prefill_fn(self._chunk_fns, bucket,
                                       self._chunk_impl, donate=(4,))
-            first, logits, st.buf = fn(
-                self.params, jnp.asarray(tokens),
-                jnp.int32(req.prefill_pos), jnp.int32(take), st.buf,
-                temp, topk, seed, self._step_idx)
+            with self._span("engine.prefill_chunk", rid=req.rid,
+                            tokens=take, bucket=bucket):
+                first, logits, st.buf = fn(
+                    self.params, jnp.asarray(tokens),
+                    jnp.int32(req.prefill_pos), jnp.int32(take), st.buf,
+                    temp, topk, seed, self._step_idx)
             req.prefill_pos += take
             self.metrics.record_prefill_chunk(take, bucket)
             if req.prefilled:
@@ -559,9 +603,11 @@ class Engine:
         tokens[0, :s] = req.prompt
         fn = self._get_prefill_fn(self._pad_prefill_fns, bucket,
                                   self._pad_prefill_impl)
-        first, logits, pcaches = fn(self.params, jnp.asarray(tokens),
-                                    jnp.int32(s), temp, topk, seed,
-                                    self._step_idx)
+        with self._span("engine.prefill_chunk", rid=req.rid, tokens=s,
+                        bucket=bucket):
+            first, logits, pcaches = fn(self.params, jnp.asarray(tokens),
+                                        jnp.int32(s), temp, topk, seed,
+                                        self._step_idx)
         req.prefill_pos = s
         self.metrics.record_prefill_chunk(s, bucket)
         self._finalize_prefill(st, pcaches, first, logits, finished)
@@ -575,8 +621,9 @@ class Engine:
         s = req.prompt_len
         p = self.config.page_size
         tdim = next(iter(buf.values())).shape[2]
-        self.caches = self._get_insert_fn(tdim)(
-            self.caches, buf, jnp.int32(slot), jnp.int32(s))
+        with self._span("engine.prefill_insert", rid=req.rid, slot=slot):
+            self.caches = self._get_insert_fn(tdim)(
+                self.caches, buf, jnp.int32(slot), jnp.int32(s))
         if self.drafter is not None:
             # e.g. SelfDrafter seeds its draft cache from the (all-layer)
             # dense prefill buffer — layer i's K/V depend only on layers
@@ -637,5 +684,9 @@ class Engine:
                 for key in self._page_refs.pop(slot, []):
                     self.pool.release(key)
             self.scheduler.retire(slot)
+            if self.tracer is not None:
+                self.tracer.instant("engine.retire", cat="engine",
+                                    rid=req.rid, slot=slot,
+                                    reason=req.finish_reason)
             self.metrics.record_finished(req)
             finished.append(req)

@@ -1,7 +1,16 @@
 """Serving metrics: throughput, TTFT, per-step latency, cache occupancy.
 
-Collected on the host around the jitted steps; ``summary()`` condenses a run
-into the fields ``benchmarks/bench_serve.py`` reports.
+Collected on the host around the jitted steps and re-founded on the
+:class:`repro.obs.telemetry.Telemetry` hub: every ``record_*`` call lands in
+hub counters/series (names under ``serve/``), so a run's metrics stream to
+the engine's JSONL sink when one is attached, while ``summary()`` keeps the
+exact field contract ``benchmarks/bench_serve.py`` and the tests report.
+
+Latency discipline: ``Engine.step`` brackets a ``jax.block_until_ready`` on
+the step's device outputs before ``record_step``, so async dispatch cannot
+under-report step latency (the span emitter relies on the same bracketing).
+TTFT and per-output-token latency (TPOT) are derived per finished request
+and reported as p50/p99, not just means.
 """
 from __future__ import annotations
 
@@ -11,6 +20,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs.telemetry import Telemetry, global_hub
 from .scheduler import Request
 
 
@@ -18,96 +28,110 @@ from .scheduler import Request
 class ServeMetrics:
     cache_bytes_per_token: float = 0.0    # per layer, set by the engine
     num_layers: int = 0
+    hub: Telemetry = dataclasses.field(default_factory=Telemetry)
 
-    step_latencies_s: List[float] = dataclasses.field(default_factory=list)
-    step_active: List[int] = dataclasses.field(default_factory=list)
-    step_occupancy: List[float] = dataclasses.field(default_factory=list)
     finished: List[Request] = dataclasses.field(default_factory=list)
-    # chunked prefill + shared-prefix page cache
-    prefill_tokens_computed: int = 0   # prompt tokens run through chunk jits
-    prefill_tokens_padded: int = 0     # ditto incl. bucket padding
-    prefix_hit_tokens: int = 0         # prompt tokens served from the pool
-    prefix_hit_pages: int = 0
-    prefix_lookup_pages: int = 0       # full pages eligible for reuse
     # distinct jit shapes compiled, split by engine phase: prefill (chunk /
     # padded-prompt shapes), decode (the fused 1-token step), verify (the
     # fused S-token speculative step + accept/commit), draft (the drafter's
     # own jits). Speculation with a fixed K adds a CONSTANT number of
-    # verify/draft shapes however mixed the prompt lengths are.
+    # verify/draft shapes however mixed the prompt lengths are. Assigned
+    # (not incremented) by the engine from its shape-cache sizes.
     prefill_compiles: int = 0
     decode_compiles: int = 0
     verify_compiles: int = 0
     draft_compiles: int = 0
-    # speculative decoding: acceptance + multi-token throughput
-    spec_steps: int = 0                # speculative (multi-token) steps run
-    spec_slot_steps: int = 0           # active slots summed over spec steps
-    draft_tokens_proposed: int = 0
-    draft_tokens_accepted: int = 0
-    spec_tokens_emitted: int = 0       # tokens emitted across spec steps
     _t0: Optional[float] = None
     _t1: Optional[float] = None
 
     def now(self) -> float:
         return time.perf_counter()
 
+    # -------------------------------------------------------------- recording
     def record_step(self, latency_s: float, n_active: int, occupancy: float):
         if self._t0 is None:
             self._t0 = time.perf_counter() - latency_s
         self._t1 = time.perf_counter()
-        self.step_latencies_s.append(latency_s)
-        self.step_active.append(n_active)
-        self.step_occupancy.append(occupancy)
+        self.hub.observe("serve/step_latency_s", latency_s)
+        self.hub.observe("serve/step_active", n_active)
+        self.hub.observe("serve/step_occupancy", occupancy)
 
     def record_finished(self, req: Request):
         self.finished.append(req)
+        if req.first_token_time is not None:
+            self.hub.observe("serve/ttft_s",
+                             req.first_token_time - req.submit_time)
+            if req.finish_time is not None and len(req.generated) > 1:
+                self.hub.observe(
+                    "serve/tpot_s",
+                    (req.finish_time - req.first_token_time)
+                    / (len(req.generated) - 1))
 
     def record_prefill_chunk(self, valid: int, padded: int):
-        self.prefill_tokens_computed += valid
-        self.prefill_tokens_padded += padded
+        self.hub.count("serve/prefill_tokens_computed", valid)
+        self.hub.count("serve/prefill_tokens_padded", padded)
 
     def record_prefix_lookup(self, hit_pages: int, lookup_pages: int,
                              page_size: int):
-        self.prefix_hit_pages += hit_pages
-        self.prefix_lookup_pages += lookup_pages
-        self.prefix_hit_tokens += hit_pages * page_size
+        self.hub.count("serve/prefix_hit_pages", hit_pages)
+        self.hub.count("serve/prefix_lookup_pages", lookup_pages)
+        self.hub.count("serve/prefix_hit_tokens", hit_pages * page_size)
 
     def record_speculation(self, proposed: int, accepted: int, emitted: int,
                            n_slots: int):
         """One speculative step's batch totals (draft tokens proposed across
         the ``n_slots`` active slots, accepted by the target, tokens
         actually emitted)."""
-        self.spec_steps += 1
-        self.spec_slot_steps += n_slots
-        self.draft_tokens_proposed += proposed
-        self.draft_tokens_accepted += accepted
-        self.spec_tokens_emitted += emitted
+        self.hub.count("serve/spec_steps")
+        self.hub.count("serve/spec_slot_steps", n_slots)
+        self.hub.count("serve/draft_tokens_proposed", proposed)
+        self.hub.count("serve/draft_tokens_accepted", accepted)
+        self.hub.count("serve/spec_tokens_emitted", emitted)
 
     # ------------------------------------------------------------------ views
+    # Hub-backed views of what used to be plain list/int fields, kept for
+    # existing consumers (benchmarks/bench_serve.py reads step_latencies_s).
+    @property
+    def step_latencies_s(self) -> List[float]:
+        return self.hub.values("serve/step_latency_s")
+
+    @property
+    def step_active(self) -> List[float]:
+        return self.hub.values("serve/step_active")
+
+    @property
+    def step_occupancy(self) -> List[float]:
+        return self.hub.values("serve/step_occupancy")
+
     @property
     def total_generated(self) -> int:
         return sum(len(r.generated) for r in self.finished)
 
     def summary(self) -> Dict[str, float]:
+        c, h = self.hub.counter, self.hub
         lat = np.asarray(self.step_latencies_s or [0.0])
         wall = ((self._t1 - self._t0)
                 if self._t0 is not None and self._t1 is not None else 0.0)
-        ttfts = [r.first_token_time - r.submit_time
-                 for r in self.finished if r.first_token_time is not None]
         return {
             "requests": float(len(self.finished)),
             "generated_tokens": float(self.total_generated),
             "throughput_tok_s": (self.total_generated / wall) if wall else 0.0,
-            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "mean_ttft_s": h.mean("serve/ttft_s"),
+            "p50_ttft_s": h.percentile("serve/ttft_s", 50),
+            "p99_ttft_s": h.percentile("serve/ttft_s", 99),
+            "mean_tpot_s": h.mean("serve/tpot_s"),
+            "p50_tpot_s": h.percentile("serve/tpot_s", 50),
+            "p99_tpot_s": h.percentile("serve/tpot_s", 99),
             "p50_step_ms": float(np.percentile(lat, 50) * 1e3),
             "p95_step_ms": float(np.percentile(lat, 95) * 1e3),
             "mean_occupancy": float(np.mean(self.step_occupancy or [0.0])),
             "cache_bytes_per_token": self.cache_bytes_per_token * self.num_layers,
-            "prefill_tokens_computed": float(self.prefill_tokens_computed),
-            "prefill_tokens_padded": float(self.prefill_tokens_padded),
-            "prefix_hit_tokens": float(self.prefix_hit_tokens),
-            "prefix_hit_rate": (self.prefix_hit_pages
-                                / self.prefix_lookup_pages
-                                if self.prefix_lookup_pages else 0.0),
+            "prefill_tokens_computed": c("serve/prefill_tokens_computed"),
+            "prefill_tokens_padded": c("serve/prefill_tokens_padded"),
+            "prefix_hit_tokens": c("serve/prefix_hit_tokens"),
+            "prefix_hit_rate": (c("serve/prefix_hit_pages")
+                                / c("serve/prefix_lookup_pages")
+                                if c("serve/prefix_lookup_pages") else 0.0),
             # per-phase compile split; bare compile_count keeps its pre-split
             # meaning (prefill shapes) for existing consumers
             "compile_count": float(self.prefill_compiles),
@@ -116,15 +140,19 @@ class ServeMetrics:
             "compile_count_verify": float(self.verify_compiles),
             "compile_count_draft": float(self.draft_compiles),
             # speculative decoding
-            "spec_steps": float(self.spec_steps),
-            "accept_rate": (self.draft_tokens_accepted
-                            / self.draft_tokens_proposed
-                            if self.draft_tokens_proposed else 0.0),
+            "spec_steps": c("serve/spec_steps"),
+            "accept_rate": (c("serve/draft_tokens_accepted")
+                            / c("serve/draft_tokens_proposed")
+                            if c("serve/draft_tokens_proposed") else 0.0),
             # tokens emitted per ACTIVE SLOT per speculative step — the
             # plain-decode baseline is exactly 1.0 by construction
-            "spec_tokens_per_step": (self.spec_tokens_emitted
-                                     / self.spec_slot_steps
-                                     if self.spec_slot_steps else 0.0),
-            "draft_tokens_proposed": float(self.draft_tokens_proposed),
-            "draft_tokens_accepted": float(self.draft_tokens_accepted),
+            "spec_tokens_per_step": (c("serve/spec_tokens_emitted")
+                                     / c("serve/spec_slot_steps")
+                                     if c("serve/spec_slot_steps") else 0.0),
+            "draft_tokens_proposed": c("serve/draft_tokens_proposed"),
+            "draft_tokens_accepted": c("serve/draft_tokens_accepted"),
+            # ragged-axis Hadamard downgrades anywhere in this process —
+            # the silent-recipe-downgrade signal (core/pipeline.py reports
+            # into the process-wide hub, which outlives any one engine)
+            "skipped_hadamard": global_hub().counter("quant/skipped_hadamard"),
         }

@@ -75,6 +75,13 @@ class TrainConfig:
                                      # policy's comm= clause, then
                                      # grad_compression, then fp32
     comm_bucket_mb: float = 4.0      # flat-buffer bucket size (MiB)
+    quant_probes: bool = False       # in-graph quant-health probes
+                                     # (repro.obs.probes): per-site stats
+                                     # land in the step metrics under
+                                     # "quant_probes" (+ "comm_probes" on
+                                     # the sharded path). Off by default —
+                                     # the gate is STATIC: off traces the
+                                     # exact pre-probe graph.
 
 
 def resolve_policy(tcfg: TrainConfig, model: Optional[Model] = None
@@ -102,18 +109,28 @@ def resolve_comm_recipe(tcfg: TrainConfig, policy: PrecisionPolicy) -> str:
     return coll.get_comm_recipe(name or "fp32").name
 
 
-def make_loss_fn(model: Model, qcfg):
+def make_loss_fn(model: Model, qcfg, probe: bool = False):
     """``qcfg``: QuantConfig or PrecisionPolicy (both accepted by QuantCtx).
 
     ``qweights`` (optional) is the per-step quantized-weight cache from
     ``model.prepare_qweights`` — its arrays are constants w.r.t. the grad
     trace (straight-through dW targets the raw params, so gradients are
     unchanged by the hoist).
+
+    ``probe=True`` installs a quant-health tape on the ``QuantCtx``; the
+    per-GeMM-site stats (``repro.obs.probes``) come back under
+    ``metrics["quant_probes"]``. The gate is static: ``probe=False`` builds
+    the exact pre-probe graph (probes live under ``stop_gradient``, so even
+    on, the loss and gradients are untouched — only extra outputs appear).
     """
 
     def loss_fn(params, batch, key, qweights=None):
-        ctx = QuantCtx(qcfg, key, qweights=qweights)
+        tape: Dict[str, Any] = {}
+        ctx = QuantCtx(qcfg, key, qweights=qweights,
+                       probes=tape if probe else None)
         loss, metrics = model.loss(params, batch, ctx)
+        if probe:
+            metrics = dict(metrics, quant_probes=tape)
         return loss, metrics
 
     return loss_fn
@@ -134,17 +151,24 @@ def _make_shard_grads(model: Model, tcfg: TrainConfig, grad_fn):
             def body(carry, xs):
                 g_acc, l_acc = carry
                 mb, k = xs
-                (loss, _), grads = grad_fn(params, mb, k, qweights)
+                (loss, mets), grads = grad_fn(params, mb, k, qweights)
                 g_acc = jax.tree.map(
                     lambda a, g: a + g.astype(jnp.float32) / n, g_acc, grads
                 )
-                return (g_acc, l_acc + loss / n), None
+                # Probe tape as scan ys ({} when probes are off — zero
+                # leaves, so the probe-free jaxpr is unchanged).
+                return ((g_acc, l_acc + loss / n),
+                        mets.get("quant_probes", {}))
 
             g0 = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params
             )
-            (grads, loss), _ = jax.lax.scan(body, (g0, 0.0), (micro, keys))
-            return loss, {}, grads
+            (grads, loss), tapes = jax.lax.scan(body, (g0, 0.0), (micro, keys))
+            metrics = {}
+            if jax.tree_util.tree_leaves(tapes):
+                metrics["quant_probes"] = jax.tree.map(
+                    lambda a: jnp.mean(a, axis=0), tapes)
+            return loss, metrics, grads
         (loss, metrics), grads = grad_fn(params, batch, key, qweights)
         return loss, metrics, grads
 
@@ -169,7 +193,8 @@ def make_train_step(
             f"mesh=/dp_shards>1 (or use grad_compression for the "
             f"optimizer-hook codec); refusing to drop it silently")
     policy = resolve_policy(tcfg, model)
-    grad_fn = jax.value_and_grad(make_loss_fn(model, policy), has_aux=True)
+    grad_fn = jax.value_and_grad(
+        make_loss_fn(model, policy, probe=tcfg.quant_probes), has_aux=True)
     shard_grads = _make_shard_grads(model, tcfg, grad_fn)
     transform = None
     if tcfg.grad_compression not in ("", "none"):
@@ -188,6 +213,74 @@ def make_train_step(
             params, grads, opt_state, tcfg.optimizer, grad_transform=transform
         )
         out = {"loss": loss, **metrics, **opt_metrics}
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_traced_train_step(model: Model, tcfg: TrainConfig, tracer):
+    """Single-device step split into separately-jitted, span-wrapped phases.
+
+    The four phases of ``make_train_step``'s fused body — prepare_qweights,
+    microbatch scan, encode/reduce/fold (clip + the grad-compression
+    codec), optimizer — each run under a ``repro.obs.trace.ChromeTracer``
+    span bracketed by ``jax.block_until_ready``, so the trace shows real
+    phase durations instead of async dispatch time.
+
+    Numerically identical to the fused step: phase 3 replicates
+    ``adamw.apply_updates``' clip -> grad_transform ordering exactly, and
+    phase 4 re-runs ``apply_updates`` with clipping disabled and no
+    transform (its stale ``grad_norm`` is overwritten with phase 3's).
+    The split costs one extra device round-trip per phase — a tracing
+    mode, not the production step.
+    """
+    if tcfg.comm_recipe:
+        raise ValueError("the traced step is single-device; comm_recipe "
+                         "selects the sharded DP wire")
+    policy = resolve_policy(tcfg, model)
+    grad_fn = jax.value_and_grad(
+        make_loss_fn(model, policy, probe=tcfg.quant_probes), has_aux=True)
+    shard_grads = jax.jit(_make_shard_grads(model, tcfg, grad_fn))
+    prepare = jax.jit(lambda p: model.prepare_qweights(p, policy))
+    transform = None
+    if tcfg.grad_compression not in ("", "none"):
+        transform = coll.make_comm_transform(
+            recipe=tcfg.grad_compression, policy=policy,
+            bucket_mb=tcfg.comm_bucket_mb)
+
+    def _encode_reduce_fold(grads, opt_state):
+        metrics: Dict[str, jax.Array] = {}
+        if tcfg.optimizer.clip_norm > 0:
+            grads, gnorm = adamw.clip_by_global_norm(
+                grads, tcfg.optimizer.clip_norm)
+            metrics["grad_norm"] = gnorm
+        else:
+            metrics["grad_norm"] = adamw.global_norm(grads)
+        if transform is not None:
+            grads, opt_state = transform(grads, opt_state)
+        return grads, opt_state, metrics
+
+    encode = jax.jit(_encode_reduce_fold)
+    nocip = dataclasses.replace(tcfg.optimizer, clip_norm=0.0)
+    apply_fn = jax.jit(
+        lambda p, g, s: adamw.apply_updates(p, g, s, nocip))
+
+    def train_step(params, opt_state, batch, step_key):
+        with tracer.span("train.prepare_qweights", cat="train"):
+            qweights = prepare(params)
+            jax.block_until_ready(qweights)
+        with tracer.span("train.microbatch_scan", cat="train"):
+            loss, metrics, grads = shard_grads(params, batch, step_key,
+                                               qweights)
+            jax.block_until_ready((loss, grads))
+        with tracer.span("train.encode_reduce_fold", cat="train"):
+            grads, opt_state, gmetrics = encode(grads, opt_state)
+            jax.block_until_ready(grads)
+        with tracer.span("train.optimizer", cat="train"):
+            params, opt_state, opt_metrics = apply_fn(params, grads,
+                                                      opt_state)
+            jax.block_until_ready(params)
+        out = {"loss": loss, **metrics, **opt_metrics, **gmetrics}
         return params, opt_state, out
 
     return train_step
@@ -262,7 +355,8 @@ def make_sharded_train_step(
     from jax.experimental.shard_map import shard_map
 
     policy = resolve_policy(tcfg, model)
-    grad_fn = jax.value_and_grad(make_loss_fn(model, policy), has_aux=True)
+    grad_fn = jax.value_and_grad(
+        make_loss_fn(model, policy, probe=tcfg.quant_probes), has_aux=True)
     shard_grads = _make_shard_grads(model, tcfg, grad_fn)
 
     if mesh is None:
@@ -315,6 +409,7 @@ def make_sharded_train_step(
         wires: Dict[str, list] = {b.name: [] for b in layout.buckets}
         new_ef: Dict[str, list] = {n: [] for n in ef_names}
         losses = []
+        probe_tapes, comm_tapes = [], []
         # Python-unrolled over this device's local shards: n_local is 1 in
         # real multi-device runs; only the laptop simulation of a large
         # mesh (dp_shards >> devices) pays the n_local-x trace cost.
@@ -325,10 +420,14 @@ def make_sharded_train_step(
             # passes through, matching the plain single-device step bitwise.
             k_s = (key if S == 1
                    else jax.random.fold_in(key, base + j))
-            loss_s, _, grads_s = shard_grads(params_f, sb, k_s, qweights)
+            loss_s, mets_s, grads_s = shard_grads(params_f, sb, k_s, qweights)
             flats = coll.bucketize(layout, grads_s)
             ef_rows = ({n: opt_l["comm"]["ef"][n][j] for n in ef_names}
                        if ef_names else None)
+            if tcfg.quant_probes:
+                probe_tapes.append(mets_s.get("quant_probes", {}))
+                comm_tapes.append(coll.bucket_probe_stats(
+                    layout, flats, ef_rows, codec_on=codec_on))
             w_j, ef_j = coll.encode_shard_buckets(layout, flats, ef_rows,
                                                   codec_on=codec_on)
             for b in layout.buckets:
@@ -371,6 +470,14 @@ def make_sharded_train_step(
             opt_out["comm"] = {"ef": {n: jnp.stack(new_ef[n])
                                       for n in ef_names}}
         metrics = {"loss": loss, **opt_metrics}
+        if tcfg.quant_probes:
+            # Same stack -> gather -> fixed-order fold as the wire itself,
+            # so probe values are bitwise shard-count-invariant too.
+            fold_tapes = lambda tapes: jax.tree.map(
+                lambda *xs: coll.fold_shards(
+                    gather_stacked(jnp.stack(xs)), S), *tapes)
+            metrics["quant_probes"] = fold_tapes(probe_tapes)
+            metrics["comm_probes"] = fold_tapes(comm_tapes)
         return slice_tree(params_new), opt_out, metrics
 
     def train_step(params, opt_state, batch, step_key):

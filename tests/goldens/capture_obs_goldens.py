@@ -1,0 +1,92 @@
+"""Capture pre-observability-PR goldens for the probe zero-perturbation test.
+
+Run once against the tree *before* the obs probes were threaded through the
+model/trainer/engine:
+
+    PYTHONPATH=src python tests/goldens/capture_obs_goldens.py
+
+Records (tests/goldens/obs_goldens.json):
+
+* two microbatched train steps on the reduced qwen3 config — per-step loss
+  bits and a sha256 over every updated-param leaf (any bit flipped in loss,
+  grads, or the optimizer path changes these digests), and
+* a 4-request fp4-centered serve run — generated tokens plus a sha256 per
+  committed KV-page payload in the prefix pool.
+
+``tests/test_obs.py`` asserts the telemetry-off paths still reproduce these
+bit for bit.
+"""
+import hashlib
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced
+from repro.models import Model
+from repro.serve.engine import Engine, EngineConfig
+from repro.train import trainer
+
+
+def tree_digest(tree) -> str:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    h = hashlib.sha256()
+    for path, leaf in sorted(leaves, key=lambda kv: jax.tree_util.keystr(kv[0])):
+        h.update(jax.tree_util.keystr(path).encode())
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+def train_golden():
+    cfg = reduced("qwen3-0.6b", remat=False)
+    model = Model(cfg)
+    tcfg = trainer.TrainConfig(quant_mode="averis", microbatches=2)
+    params, opt_state = trainer.init_train_state(model, tcfg, jax.random.key(0))
+    step = jax.jit(trainer.make_train_step(model, tcfg))
+    b, s = 2, 32
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (b, s), 0,
+                                          cfg.vocab_size)}
+    losses = []
+    for i in range(2):
+        params, opt_state, out = step(params, opt_state, batch,
+                                      jax.random.key(100 + i))
+        losses.append(float(np.asarray(out["loss"], np.float32)))
+    return {
+        "loss_bits": [np.float32(l).tobytes().hex() for l in losses],
+        "params_digest": tree_digest(params),
+    }
+
+
+def serve_golden():
+    cfg = reduced("qwen3-0.6b", remat=False)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(1), (4, 16), 0, cfg.vocab_size), np.int32)
+    eng = Engine(model, params, EngineConfig(
+        n_slots=2, max_len=32, kv_cache="fp4-centered", page_size=16,
+        quant_mode="bf16", prefix_cache=True))
+    for i, p in enumerate(prompts):
+        eng.submit(p, 8, seed=i)
+    finished = eng.drain()
+    tokens = np.asarray([r.generated for r in
+                         sorted(finished, key=lambda r: r.rid)])
+    pages = {k.hex(): tree_digest(e[0])
+             for k, e in eng.pool._entries.items()}
+    return {"tokens": tokens.tolist(), "pages": pages}
+
+
+def main(out_path):
+    golden = {"train": train_golden(), "serve": serve_golden()}
+    with open(out_path, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    here = os.path.dirname(os.path.abspath(__file__))
+    main(sys.argv[1] if len(sys.argv) > 1 else
+         os.path.join(here, "obs_goldens.json"))
