@@ -5,14 +5,26 @@ must not regress the hot path, and the per-step quantized-weight cache must
 show up as a fwd+bwd speedup when weights are prepared once
 (``prepared_weight_stack``) instead of re-quantized inside the GeMM.
 
-Rows (name,us_per_call,derived):
-  qgemm_fwd_<mode>       jitted forward wall time        compiles=..
-  qgemm_fwdbwd_<mode>    jitted forward+backward         compiles=..
-  qgemm_prepared_<mode>  fwd+bwd with pre-quantized weights; derived
-                         speedup vs qgemm_fwdbwd_<mode>
+Methodology: every arm of a recipe (fwd, fwd+bwd, prepared fwd+bwd, fused
+fwd) shares one warmup pass and the timed iterations are **interleaved**
+round-robin (``common.time_arms``), so machine drift cannot bias one arm;
+ratios (``prepared_speedup``, ``fused_speedup``) use the min-of-iters
+statistic, which is robust to scheduler noise on a single-CPU box — the
+mean-of-separate-runs methodology this replaces mis-reported the prepared
+path as a regression.
 
-Also writes ``artifacts/BENCH_qgemm.json`` (consumed by the nightly CI job)
-with the raw timings so regressions are diffable run-over-run.
+Rows (name,us_per_call,derived):
+  qgemm_fwd_<mode>        jitted forward wall time        compiles=..
+  qgemm_fwd_fused_<mode>  forward via the fused Pallas backend; derived
+                          speedup vs the stage-pipeline fwd
+  qgemm_fwdbwd_<mode>     jitted forward+backward         compiles=..
+  qgemm_prepared_<mode>   fwd+bwd with pre-quantized weights; derived
+                          speedup vs qgemm_fwdbwd_<mode>
+
+Also writes ``artifacts/BENCH_qgemm.json`` (consumed by the nightly CI job,
+which fails on any quantized recipe marked ``"regression": true`` by
+``benchmarks/run.py``) with the raw timings so regressions are diffable
+run-over-run.
 """
 from __future__ import annotations
 
@@ -22,7 +34,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from .common import emit, time_jitted
+from .common import emit, time_arms
 
 ART_DIR = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "artifacts")
@@ -42,11 +54,15 @@ def run() -> None:
     results = {"shape": [L, M, N], "modes": {}}
     for mode in MODES:
         cfg = recipe(mode)
-        traces = {"fwd": 0, "fwdbwd": 0, "prepared": 0}
+        traces = {"fwd": 0, "fwdbwd": 0, "prepared": 0, "fwd_fused": 0}
 
         def fwd(xx, ww):
             traces["fwd"] += 1
             return qgemm(xx, ww, cfg, key)
+
+        def fwd_fused(xx, ww):
+            traces["fwd_fused"] += 1
+            return qgemm(xx, ww, recipe(mode, backend="fused"), key)
 
         def fwdbwd(xx, ww, gg):
             traces["fwdbwd"] += 1
@@ -66,25 +82,45 @@ def run() -> None:
             lambda ww: prepared_weight_single(ww, cfg, x.dtype))(w)
         jax.block_until_ready(prep)
 
-        t_fwd = time_jitted(jax.jit(fwd), x, w)
-        t_bwd = time_jitted(jax.jit(fwdbwd), x, w, g)
-        t_prep = time_jitted(jax.jit(fwdbwd_prepared), x, w, g, prep)
+        arms = {
+            "fwd": (jax.jit(fwd), (x, w)),
+            "fwdbwd": (jax.jit(fwdbwd), (x, w, g)),
+            "prepared": (jax.jit(fwdbwd_prepared), (x, w, g, prep)),
+        }
+        quantized = cfg.is_quantized
+        if quantized:
+            arms["fwd_fused"] = (jax.jit(fwd_fused), (x, w))
+        # 30 interleaved iterations: the min of 10 is still noisy on the
+        # single-CPU box (ratio wobble across runs); 30 converges it
+        t = time_arms(arms, iters=30)
 
-        emit(f"qgemm_fwd_{mode}", t_fwd["mean_s"] * 1e6,
+        emit(f"qgemm_fwd_{mode}", t["fwd"]["mean_s"] * 1e6,
              f"compiles={traces['fwd']}")
-        emit(f"qgemm_fwdbwd_{mode}", t_bwd["mean_s"] * 1e6,
+        emit(f"qgemm_fwdbwd_{mode}", t["fwdbwd"]["mean_s"] * 1e6,
              f"compiles={traces['fwdbwd']}")
-        speedup = t_bwd["mean_s"] / max(t_prep["mean_s"], 1e-12)
-        emit(f"qgemm_prepared_{mode}", t_prep["mean_s"] * 1e6,
+        speedup = t["fwdbwd"]["min_s"] / max(t["prepared"]["min_s"], 1e-12)
+        emit(f"qgemm_prepared_{mode}", t["prepared"]["mean_s"] * 1e6,
              f"speedup_vs_inline={speedup:.2f}")
-        results["modes"][mode] = {
-            "fwd_us": t_fwd["mean_s"] * 1e6,
+        row = {
+            "fwd_us": t["fwd"]["mean_s"] * 1e6,
+            "fwd_min_us": t["fwd"]["min_s"] * 1e6,
             "fwd_compiles": traces["fwd"],
-            "fwdbwd_us": t_bwd["mean_s"] * 1e6,
+            "fwdbwd_us": t["fwdbwd"]["mean_s"] * 1e6,
+            "fwdbwd_min_us": t["fwdbwd"]["min_s"] * 1e6,
             "fwdbwd_compiles": traces["fwdbwd"],
-            "fwdbwd_prepared_us": t_prep["mean_s"] * 1e6,
+            "fwdbwd_prepared_us": t["prepared"]["mean_s"] * 1e6,
+            "fwdbwd_prepared_min_us": t["prepared"]["min_s"] * 1e6,
             "prepared_speedup": speedup,
         }
+        if quantized:
+            fused_speedup = (t["fwd"]["min_s"]
+                             / max(t["fwd_fused"]["min_s"], 1e-12))
+            emit(f"qgemm_fwd_fused_{mode}", t["fwd_fused"]["mean_s"] * 1e6,
+                 f"speedup_vs_stages={fused_speedup:.2f}")
+            row["fwd_fused_us"] = t["fwd_fused"]["mean_s"] * 1e6
+            row["fwd_fused_min_us"] = t["fwd_fused"]["min_s"] * 1e6
+            row["fused_speedup"] = fused_speedup
+        results["modes"][mode] = row
 
     os.makedirs(ART_DIR, exist_ok=True)
     out = os.path.join(ART_DIR, "BENCH_qgemm.json")

@@ -25,6 +25,37 @@ def time_jitted(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> Dict:
             "min_s": float(arr.min())}
 
 
+def time_arms(arms: Dict[str, tuple], *, warmup: int = 2,
+              iters: int = 10) -> Dict[str, Dict]:
+    """Wall-clock several jitted callables with interleaved iterations.
+
+    ``arms``: {name: (fn, args_tuple)}. Every arm is warmed up first, then
+    the timed iterations alternate round-robin over the arms, so slow drift
+    of the machine (thermal, background load — the dominant noise source on
+    a single-CPU box) hits all arms equally instead of biasing whichever
+    ran last. Returns {name: {mean_s, std_s, min_s}}; use ``min_s`` for
+    ratios between arms — it is the statistic least contaminated by
+    scheduler noise.
+    """
+    for fn, args in arms.values():
+        for _ in range(warmup):
+            out = fn(*args)
+        jax.block_until_ready(out)
+    times: Dict[str, List[float]] = {name: [] for name in arms}
+    for _ in range(iters):
+        for name, (fn, args) in arms.items():
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            times[name].append(time.perf_counter() - t0)
+    stats = {}
+    for name, ts in times.items():
+        arr = np.asarray(ts)
+        stats[name] = {"mean_s": float(arr.mean()), "std_s": float(arr.std()),
+                       "min_s": float(arr.min())}
+    return stats
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
     """CSV row per the harness contract: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.3f},{derived}")

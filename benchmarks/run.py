@@ -87,6 +87,29 @@ def check_staleness(written_at: str,
     return t < head_time
 
 
+def mark_regressions(summary: dict) -> list[str]:
+    """Flag quantized qgemm recipes whose prepared path is slower than
+    inline re-quantization: the per-step weight cache MUST pay for itself
+    (``prepared_speedup >= 1.0``). Mutates ``summary`` in place, setting a
+    loud ``"regression": true`` on each offending mode row, and returns
+    the offending mode names. The nightly CI job fails on any of them."""
+    offenders = []
+    modes = (summary.get("qgemm") or {}).get("modes") or {}
+    for mode, row in modes.items():
+        if not isinstance(row, dict) or mode == "bf16":
+            continue
+        speedup = row.get("prepared_speedup")
+        if speedup is not None and speedup < 1.0:
+            row["regression"] = True
+            offenders.append(mode)
+    for mode in offenders:
+        print(f"WARNING: qgemm recipe {mode!r} REGRESSION: prepared weights "
+              f"are slower than inline re-quantization (prepared_speedup="
+              f"{modes[mode]['prepared_speedup']:.2f} < 1.0)",
+              file=sys.stderr)
+    return offenders
+
+
 def write_summary() -> str:
     """Fold artifacts/BENCH_*.json into BENCH_summary.json and mirror each
     file to the repo root (the fixed locations trend tooling watches)."""
@@ -119,6 +142,7 @@ def write_summary() -> str:
               f"(written {summary[name]['_written_at']}) — its numbers "
               f"were measured on older code; re-run "
               f"`python -m benchmarks.run {name}`", file=sys.stderr)
+    mark_regressions(summary)
     out = os.path.join(_ART_DIR, "BENCH_summary.json")
     os.makedirs(_ART_DIR, exist_ok=True)
     with open(out, "w") as f:

@@ -306,6 +306,137 @@ def _hadamard_or_skip(t: jax.Array, axis: int) -> jax.Array:
 
 
 # --------------------------------------------------------------------------
+# Fused backend (Pallas kernels; repro.kernels.fused)
+# --------------------------------------------------------------------------
+
+_FUSED_FALLBACK_WARNED: set = set()
+
+
+def reset_fused_fallback_warnings() -> None:
+    """Clear the once-per-reason warning dedup (tests)."""
+    _FUSED_FALLBACK_WARNED.clear()
+
+
+def _fused_fallback(reason: str) -> None:
+    """Loud fallback: a pipeline the fused backend was asked to run went to
+    the stage path instead. Counted per occurrence (mirrors
+    ``quant/skipped_hadamard``) and warned once per reason."""
+    from repro.obs.telemetry import global_hub
+    global_hub().count("quant/fused_fallback")
+    if reason not in _FUSED_FALLBACK_WARNED:
+        _FUSED_FALLBACK_WARNED.add(reason)
+        warnings.warn(
+            f"fused quant backend fell back to the stage path: {reason}. "
+            f"Counted in telemetry as quant/fused_fallback.", stacklevel=3)
+
+
+def _fused_interpret() -> bool:
+    """Pallas execution mode: compiled Mosaic on TPU, interpret elsewhere."""
+    return jax.default_backend() != "tpu"
+
+
+def _classify_fused(operand: Operand, cfg, t: jax.Array):
+    """Classify one operand pipeline for the fused backend.
+
+    Returns ``("fuse", (center, rotate, transposed, use_sr))`` when the
+    pipeline is a fused-kernel target at this shape, ``("side", reason)``
+    for pipelines the fused backend leaves on the stage path *by design*
+    (mean-vector side channels, unquantized weights — not fallbacks), or
+    ``("fallback", reason)`` when a quantization pipeline the kernels should
+    own cannot run fused here (counted into telemetry by the caller).
+    """
+    stages = list(operand.stages)
+    if operand.weight and not cfg.quantize_weights:
+        stages = [s for s in stages if not isinstance(s, Quantize)]
+    if not any(isinstance(s, Quantize) for s in stages):
+        return ("side", "no quantize stage")
+    if any(isinstance(s, Center) and s.take == "mean" for s in stages):
+        return ("side", "mean-vector side channel")
+
+    center = rotate = None
+    i = 0
+    if i < len(stages) and isinstance(stages[i], Center):
+        center = stages[i]
+        i += 1
+    if i < len(stages) and isinstance(stages[i], Hadamard):
+        rotate = stages[i]
+        i += 1
+    if i != len(stages) - 1 or not isinstance(stages[i], Quantize):
+        return ("fallback", f"unrecognized stage pipeline {stages!r}")
+    quant = stages[i]
+
+    if t.ndim != 2:
+        return ("fallback", f"operand rank {t.ndim} != 2")
+    if cfg.block_size != _TILE:
+        return ("fallback", f"block_size {cfg.block_size} != {_TILE}")
+    if jnp.dtype(cfg.qdq_dtype) != jnp.float32:
+        return ("fallback", f"qdq_dtype {cfg.qdq_dtype} != float32 "
+                            f"(kernels compute in fp32)")
+    q_axis = quant.axis % 2
+    transposed = q_axis == 0
+    if center is not None and center.token_axis != 0:
+        return ("fallback", f"token_axis {center.token_axis} != 0")
+    if rotate is not None:
+        if rotate.axis % 2 != q_axis:
+            return ("fallback", "Hadamard axis != Quantize axis")
+        if t.shape[q_axis] % _TILE != 0:
+            # the stage path will skip the rotation (its own counter);
+            # route there rather than silently dropping the rotation here
+            return ("fallback",
+                    f"ragged Hadamard axis {t.shape[q_axis]}")
+    use_sr = quant.sr and cfg.sr_grad
+    return ("fuse", (center is not None, rotate is not None, transposed,
+                     use_sr))
+
+
+def _apply_fused(
+    t: jax.Array,
+    how,
+    *,
+    sr_key: Optional[jax.Array],
+    splits: Optional[dict],
+) -> jax.Array:
+    """Run one fused-target pipeline through the Pallas kernels.
+
+    The token mean is computed once by ``column_mean_2d`` and memoized into
+    ``splits`` so the plan's mean-row/rank1 terms consume the *same* mean
+    the kernel centered against (one reduction per source, exactly like the
+    stage path's shared ``split_mean``).
+    """
+    from repro.kernels.fused import center_hadamard_qdq_2d
+    from repro.kernels.mean_split import column_mean_2d
+
+    center, rotate, transposed, use_sr = how
+    interpret = _fused_interpret()
+    mu2 = None
+    if center:
+        if splits is not None:
+            if 0 not in splits:
+                mu_vec = column_mean_2d(t, interpret=interpret)
+                # same (mu, res) protocol as the stage path's split_mean
+                # memo; the residual is lazy (None) — it is only ever
+                # materialized if a stage-path operand asks for it
+                splits[0] = (mu_vec.reshape(-1).astype(t.dtype), None)
+            mu2 = splits[0][0].astype(jnp.float32).reshape(1, -1)
+        else:
+            mu2 = column_mean_2d(t, interpret=interpret)     # (1, m) fp32
+    bits = None
+    if use_sr:
+        bits = jax.random.bits(sr_key, t.shape, jnp.uint32)
+    # Pallas has no JVP rule and quantization is non-differentiable anyway:
+    # every gradient that matters is defined by the qgemm custom_vjp (and
+    # prepared-weight cotangents are straight-through zeros), so cut the
+    # tangent path at the kernel boundary.
+    t_in = jax.lax.stop_gradient(t)
+    mu_in = None if mu2 is None else jax.lax.stop_gradient(mu2)
+    # transposed operands (quantize axis == token axis, the dw orientation)
+    # run natively with sublane blocks — no transpose copies
+    return center_hadamard_qdq_2d(t_in, mu_in, None, bits, rotate=rotate,
+                                  interpret=interpret,
+                                  block_axis=0 if transposed else -1)
+
+
+# --------------------------------------------------------------------------
 # Executor
 # --------------------------------------------------------------------------
 
@@ -318,7 +449,20 @@ def apply_stages(
     splits: Optional[dict] = None,
 ) -> jax.Array:
     """Run one operand pipeline. ``splits`` memoizes Center per token axis so
-    the mean and residual components of one source share one reduction."""
+    the mean and residual components of one source share one reduction.
+
+    With ``cfg.backend == "fused"`` the recognized Center→Hadamard→Quantize
+    pipelines run as single Pallas kernels (``repro.kernels.fused``) instead
+    of separate XLA stages; unsupported shapes fall back loudly
+    (``quant/fused_fallback`` telemetry + once-per-reason warning). Mean
+    side channels and unquantized weights stay on the stage path by design.
+    """
+    if getattr(cfg, "backend", "stages") == "fused":
+        kind, how = _classify_fused(operand, cfg, t)
+        if kind == "fuse":
+            return _apply_fused(t, how, sr_key=sr_key, splits=splits)
+        if kind == "fallback":
+            _fused_fallback(how)
     v = t
     for st in operand.stages:
         if isinstance(st, Center):
@@ -327,6 +471,14 @@ def apply_stages(
             memoizable = splits is not None and v is t
             if memoizable and st.token_axis in splits:
                 mu, res = splits[st.token_axis]
+                if res is None and st.take == "residual":
+                    # memo written by the fused backend (which never
+                    # materializes the residual): rebuild it from the
+                    # shared mean so both backends center identically
+                    res = (v.astype(jnp.float32)
+                           - jnp.expand_dims(mu.astype(jnp.float32),
+                                             st.token_axis)).astype(v.dtype)
+                    splits[st.token_axis] = (mu, res)
             else:
                 mu, res = split_mean(v, token_axis=st.token_axis)
                 if memoizable:

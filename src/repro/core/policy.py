@@ -21,6 +21,8 @@ clauses win on the cells they name)::
                | "layers." RANGE "." ROLE "=" RECIPE
                | "comm" "=" COMM             # default gradient-wire recipe
                | "comm." PATTERN "=" COMM    # per-tensor comm override
+               | "backend" "=" BACKEND       # quant executor for every cell
+    BACKEND   := "stages" | "fused"           # see core/pipeline.py
     RANGE     := INT | INT "-" INT           # inclusive
     PATTERN   := fnmatch glob over a param path ("layers/attn/wq") or any
                  single path component ("wq", "*norm*", "embed")
@@ -140,9 +142,22 @@ class PrecisionPolicy:
         clauses = []
         comm_default = ""
         comm_clauses = []
+        backend: Optional[str] = None
         for raw in spec.split(";"):
             part = raw.strip()
             if not part:
+                continue
+            if part.startswith("backend="):
+                name = part[len("backend="):].strip()
+                if backend is not None:
+                    raise ValueError(
+                        f"policy spec {spec!r}: second backend clause "
+                        f"{part!r}")
+                if name not in ("stages", "fused"):
+                    raise ValueError(
+                        f"policy spec {spec!r}: unknown backend {name!r}; "
+                        f"expected 'stages' or 'fused'")
+                backend = name
                 continue
             if part == "comm" or part.startswith(("comm=", "comm.")):
                 lhs, eq, name = part.partition("=")
@@ -196,6 +211,13 @@ class PrecisionPolicy:
             raise ValueError(
                 f"policy spec {spec!r} has no default recipe (first clause "
                 f"must be a bare recipe name)")
+        if backend is not None:
+            # a backend clause selects the executor for every cell of the
+            # policy (it is an execution strategy, not a numerics recipe)
+            default = dataclasses.replace(default, backend=backend)
+            clauses = [dataclasses.replace(
+                c, cfg=dataclasses.replace(c.cfg, backend=backend))
+                for c in clauses]
         return PrecisionPolicy(default=default, clauses=tuple(clauses),
                                comm_default=comm_default,
                                comm_clauses=tuple(comm_clauses))

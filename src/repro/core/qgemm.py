@@ -57,12 +57,19 @@ class QuantConfig:
     comm_dtype: str = "float32"  # dtype of GeMM partial sums -> the dtype TP
                                  # activation all-reduces travel in
     qdq_dtype: str = "float32"   # dtype of the QDQ simulation chain
+    backend: str = "stages"      # "stages" (pure-XLA stage pipeline) or
+                                 # "fused" (single-pass Pallas kernels with
+                                 # loud fallback — see core/pipeline.py)
 
     def __post_init__(self):
         if self.mode not in MODES and self.mode not in PLANS:
             raise ValueError(
                 f"unknown quant mode {self.mode!r}; expected one of {MODES} "
                 f"or a registered plan ({sorted(PLANS)})")
+        if self.backend not in ("stages", "fused"):
+            raise ValueError(
+                f"unknown quant backend {self.backend!r}; expected "
+                f"'stages' or 'fused'")
 
     @property
     def is_quantized(self) -> bool:

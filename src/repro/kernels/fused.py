@@ -1,0 +1,554 @@
+"""Fused Center→Hadamard→Quantize Pallas kernels — the FP4 hot path.
+
+The unfused stage pipeline (``repro.core.pipeline.apply_stages``) evaluates
+Center, Hadamard and Quantize as separate XLA ops, materializing the centered
+residual and the rotated residual as full-size HBM intermediates between
+them. These kernels collapse the whole recipe-side pipeline into one
+``pallas_call``: a (TILE_L, TILE_M) tile is read from HBM **once**, centered
+against the (precomputed) token mean, rotated lane-16-tile-wise with H16 on
+the MXU, scaled against the per-tensor fp32 scale, rounded to E2M1 (RNE or
+stochastic), and written back as EITHER
+
+  * the dequantized values (``center_hadamard_qdq_2d`` — what the GeMM
+    executor consumes), or
+  * packed 4-bit codes + E4M3 block scales (``center_hadamard_pack_2d`` —
+    the wire/deployment artifact; the mean rides along as its own output).
+
+Two small reduction passes precede the main kernel (the paper's "only
+reduction operations"): ``column_mean_2d`` for the token mean and a fused
+center+rotate+amax pass for the per-tensor scale of the rotated residual —
+neither writes a full-size intermediate.
+
+All element math is shared with the unfused kernels (``_qdq_tile``), so the
+fused outputs are bitwise those of the stage pipeline wherever fp32
+summation order cannot bite (dyadic inputs — the golden suite's contract;
+see ``tests/test_fused_kernels.py``).
+
+Stage combinations are static kernel variants (center on/off × rotate
+on/off × RN/SR × values/pack); the mean vector may run along lanes
+(``mu (1, m)`` — activation streams, token axis 0) or sublanes
+(``mu (l, 1)`` — the transposed dw orientation, where the token axis IS the
+contraction axis).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import (BLOCK_SIZE, E2M1_MAX, E4M3_MAX, HADAMARD_16,
+                                TENSOR_SCALE_DENOM)
+from .mean_split import column_mean_2d
+from .nvfp4_quant import (DEFAULT_TILE_L, DEFAULT_TILE_M, _round_e2m1_rn,
+                          _round_e2m1_sr)
+
+_TILE = 16
+_EPS = 1e-30
+# interpret mode only: arrays up to this many elements run as ONE grid cell
+# so the one-pass QDQ kernel (in-kernel amax) applies — 4M fp32 = 16 MB,
+# nothing for a host core; real-TPU tiling keeps the VMEM-sized defaults
+_ONEPASS_MAX_ELEMS = 1 << 22
+
+
+# --------------------------------------------------------------------------
+# Shared tile math
+# --------------------------------------------------------------------------
+
+def _center_rotate_tile(x, mu, h, *, center: bool, rotate: bool,
+                        sub: bool = False):
+    """Center and/or rotate one fp32 tile entirely in VMEM registers.
+
+    ``sub``: the 16-blocks run along sublanes (axis 0) instead of lanes —
+    the transposed GeMM orientation handled natively. H16 is symmetric
+    (Sylvester), so contracting either index gives the same rotation.
+    """
+    if center:
+        x = x - mu.astype(jnp.float32)
+    if rotate:
+        tl, tm = x.shape
+        if sub:
+            x3 = x.reshape(tl // _TILE, _TILE, tm)
+            x = jax.lax.dot_general(
+                x3, h, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).transpose(0, 2, 1).reshape(tl, tm)
+        else:
+            x3 = x.reshape(tl, tm // _TILE, _TILE)
+            x = jax.lax.dot_general(
+                x3, h, (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).reshape(tl, tm)
+    return x
+
+
+def _block_quantize(x, s_t, u=None, *, sub: bool = False):
+    """Blocked E4M3 scales + E2M1 rounding of a preprocessed fp32 tile.
+
+    Returns (signed grid values, effective per-block scale, blocked |x|
+    layout) so callers can either dequantize or encode codes. Identical
+    math to ``nvfp4_quant._qdq_tile`` (shared constants, same op order).
+    ``sub`` runs the 16-blocks along axis 0 (strided reduction, no
+    transpose).
+    """
+    tl, tm = x.shape
+    if sub:
+        xb = x.reshape(tl // BLOCK_SIZE, BLOCK_SIZE, tm)
+        absx = jnp.abs(xb)
+        block_amax = jnp.max(absx, axis=1, keepdims=True)
+    else:
+        xb = x.reshape(tl, tm // BLOCK_SIZE, BLOCK_SIZE)
+        absx = jnp.abs(xb)
+        block_amax = jnp.max(absx, axis=-1, keepdims=True)
+    s_b = jnp.clip(block_amax / (E2M1_MAX * s_t), 0.0, E4M3_MAX)
+    s_b = s_b.astype(jnp.float8_e4m3fn).astype(jnp.float32)  # RN to E4M3
+    scale = s_b * s_t
+    a = jnp.where(scale > 0, absx / jnp.maximum(scale, _EPS), 0.0)
+    if u is None:
+        q = _round_e2m1_rn(a)
+    else:
+        q = _round_e2m1_sr(a, u.reshape(a.shape))
+    return q, scale, xb, s_b
+
+
+def _grid_index(q):
+    """E2M1 grid value -> grid index {0,.5,1,1.5,2,3,4,6} -> 0..7.
+
+    Arithmetic (dot/searchsorted-free, Mosaic-friendly) and exact for the
+    grid values ``_round_e2m1_*`` emits; matches
+    ``core.nvfp4.encode_e2m1_codes``'s searchsorted on the same grid.
+    """
+    return jnp.where(q < 2.0, q * 2.0,
+                     jnp.where(q < 4.0, q + 2.0, q * 0.5 + 4.0))
+
+
+# --------------------------------------------------------------------------
+# Kernel bodies (static variants via functools.partial)
+# --------------------------------------------------------------------------
+
+def _amax_kernel(*refs, center: bool, rotate: bool, n_rows: int,
+                 tile_l: int):
+    """Sequential-grid amax of |rotate(center(x))| with padded-row masking."""
+    it = iter(refs)
+    x_ref = next(it)
+    mu_ref = next(it) if center else None
+    h_ref = next(it) if rotate else None
+    o_ref = next(it)
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)
+    y = _center_rotate_tile(x, mu_ref[...] if center else None,
+                            h_ref[...].astype(jnp.float32) if rotate else None,
+                            center=center, rotate=rotate)
+    row = i * tile_l + jax.lax.broadcasted_iota(jnp.int32, y.shape, 0)
+    part = jnp.max(jnp.where(row < n_rows, jnp.abs(y), 0.0))
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0, 0] = part
+
+    @pl.when(i != 0)
+    def _acc():
+        o_ref[0, 0] = jnp.maximum(o_ref[0, 0], part)
+
+
+def _values_kernel(*refs, center: bool, rotate: bool, sr: bool):
+    """center → rotate → QDQ, dequantized tile out (the GeMM path)."""
+    it = iter(refs)
+    x_ref = next(it)
+    mu_ref = next(it) if center else None
+    h_ref = next(it) if rotate else None
+    st_ref = next(it)
+    bits_ref = next(it) if sr else None
+    o_ref = next(it)
+    x = x_ref[...].astype(jnp.float32)
+    y = _center_rotate_tile(x, mu_ref[...] if center else None,
+                            h_ref[...].astype(jnp.float32) if rotate else None,
+                            center=center, rotate=rotate)
+    u = None
+    if sr:
+        u = (bits_ref[...] >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    q, scale, yb, _ = _block_quantize(y, st_ref[0, 0], u)
+    tl, tm = y.shape
+    o_ref[...] = (jnp.sign(yb) * q * scale).reshape(tl, tm).astype(o_ref.dtype)
+
+
+def _values_onepass_kernel(*refs, center: bool, rotate: bool, sr: bool,
+                           n_rows: int, block_sub: bool):
+    """Single-tile variant of ``_values_kernel`` that also owns the amax
+    pass: when the whole (padded) array is one grid cell, the per-tensor
+    scale can be derived from the tile itself, so the preprocessed tile is
+    computed ONCE instead of once per pass (the separate amax pass would
+    redo the centering/rotation). amax is a max reduction — exact in any
+    order — so s_t is bitwise the two-pass value. Padded rows are masked
+    out of the amax (under a lane mu they center to -mu); padded regions
+    that share a 16-block with real data are pre-padded with mu by the
+    caller (``_pad_for_blocks``) so they contribute exact zeros.
+    ``block_sub`` runs quantization (and rotation) blocks along axis 0 —
+    the transposed GeMM orientation without the two transpose copies."""
+    it = iter(refs)
+    x_ref = next(it)
+    mu_ref = next(it) if center else None
+    h_ref = next(it) if rotate else None
+    bits_ref = next(it) if sr else None
+    o_ref = next(it)
+    x = x_ref[...].astype(jnp.float32)
+    y = _center_rotate_tile(x, mu_ref[...] if center else None,
+                            h_ref[...].astype(jnp.float32) if rotate else None,
+                            center=center, rotate=rotate, sub=block_sub)
+    absy = jnp.abs(y)
+    if y.shape[0] == n_rows:      # no padded rows — skip the mask pass
+        amax = jnp.max(absy)
+    else:
+        row = jax.lax.broadcasted_iota(jnp.int32, y.shape, 0)
+        amax = jnp.max(jnp.where(row < n_rows, absy, 0.0))
+    s_t = jnp.maximum(amax / TENSOR_SCALE_DENOM, _EPS)
+    u = None
+    if sr:
+        u = (bits_ref[...] >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    q, scale, yb, _ = _block_quantize(y, s_t, u, sub=block_sub)
+    tl, tm = y.shape
+    o_ref[...] = (jnp.sign(yb) * q * scale).reshape(tl, tm).astype(o_ref.dtype)
+
+
+def _pack_kernel(*refs, center: bool, rotate: bool, sr: bool):
+    """center → rotate → quantize, packed nibble codes + E4M3 scales out."""
+    it = iter(refs)
+    x_ref = next(it)
+    mu_ref = next(it) if center else None
+    h_ref = next(it) if rotate else None
+    st_ref = next(it)
+    bits_ref = next(it) if sr else None
+    codes_ref = next(it)
+    scales_ref = next(it)
+    x = x_ref[...].astype(jnp.float32)
+    y = _center_rotate_tile(x, mu_ref[...] if center else None,
+                            h_ref[...].astype(jnp.float32) if rotate else None,
+                            center=center, rotate=rotate)
+    u = None
+    if sr:
+        u = (bits_ref[...] >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    q, _, yb, s_b = _block_quantize(y, st_ref[0, 0], u)
+    tl, tm = y.shape
+    sign = (yb < 0).astype(jnp.uint8)
+    codes = sign * jnp.uint8(8) + _grid_index(q).astype(jnp.uint8)
+    pairs = codes.reshape(tl, tm // 2, 2)
+    codes_ref[...] = pairs[..., 0] | (pairs[..., 1] << 4)
+    scales_ref[...] = s_b.reshape(tl, tm // BLOCK_SIZE).astype(
+        scales_ref.dtype)
+
+
+# --------------------------------------------------------------------------
+# pallas_call plumbing
+# --------------------------------------------------------------------------
+
+def _pad_for_blocks(x: jax.Array, mu: Optional[jax.Array], pad_l: int,
+                    pad_m: int, *, block_sub: bool = False) -> jax.Array:
+    """Pad ``x`` for tiling WITHOUT corrupting shared block scales.
+
+    Zero padding is correct wherever the padded entries either form whole
+    blocks of their own or are not centered. But a padded region that (a)
+    shares a 16-block with real data along the block axis and (b) is
+    centered against a mean that broadcasts over it would center to ``-mu``
+    and inflate that block's shared E4M3 scale — changing the quantization
+    of the REAL entries (the stage path never pads, so this would also
+    break bitwise parity). Those regions are padded with ``mu`` itself, so
+    centering yields exact zeros there."""
+    if mu is not None:
+        if not block_sub and mu.shape[0] != 1 and pad_m:
+            # lane blocks + sublane mu: padded tail columns share blocks
+            x = jnp.concatenate(
+                [x, jnp.broadcast_to(mu, (x.shape[0], pad_m)).astype(x.dtype)],
+                axis=1)
+            pad_m = 0
+        if block_sub and mu.shape[0] == 1 and pad_l:
+            # sublane blocks + lane mu: padded tail rows share blocks
+            x = jnp.concatenate(
+                [x, jnp.broadcast_to(mu, (pad_l, x.shape[1])).astype(x.dtype)],
+                axis=0)
+            pad_l = 0
+    return jnp.pad(x, ((0, pad_l), (0, pad_m)))
+
+
+def _mu_spec(mu: jax.Array, tile_l: int, tile_m: int):
+    """BlockSpec for the mean operand: lane vector (1, m) or sublane (l, 1)."""
+    if mu.shape[0] == 1:
+        return pl.BlockSpec((1, tile_m), lambda i, j: (0, j))
+    return pl.BlockSpec((tile_l, 1), lambda i, j: (i, 0))
+
+
+def _pad_mu(mu: jax.Array, pad_l: int, pad_m: int) -> jax.Array:
+    if mu.shape[0] == 1:
+        return jnp.pad(mu, ((0, 0), (0, pad_m)))
+    return jnp.pad(mu, ((0, pad_l), (0, 0)))
+
+
+def fused_amax_2d(
+    x: jax.Array,
+    mu: Optional[jax.Array] = None,
+    *,
+    rotate: bool = False,
+    tile_l: int = DEFAULT_TILE_L,
+    interpret: bool = True,
+) -> jax.Array:
+    """amax(|H(x - mu)|) without materializing the centered/rotated array.
+
+    Full-width row tiles, sequential-grid max accumulation; padded rows are
+    masked (they would otherwise contribute |H(-mu)|). Returns a (1, 1)
+    fp32 array.
+    """
+    l, m = x.shape
+    center = mu is not None
+    if rotate:
+        assert m % _TILE == 0, (l, m)
+    tile_l = min(tile_l, max(8, l))
+    pad_l = (-l) % tile_l
+    xp = jnp.pad(x, ((0, pad_l), (0, 0)))
+    grid = (xp.shape[0] // tile_l,)
+    args = [xp]
+    in_specs = [pl.BlockSpec((tile_l, m), lambda i: (i, 0))]
+    if center:
+        mup = _pad_mu(mu, pad_l, 0)
+        args.append(mup)
+        if mu.shape[0] == 1:
+            in_specs.append(pl.BlockSpec((1, m), lambda i: (0, 0)))
+        else:
+            in_specs.append(pl.BlockSpec((tile_l, 1), lambda i: (i, 0)))
+    if rotate:
+        args.append(jnp.asarray(HADAMARD_16))
+        in_specs.append(pl.BlockSpec((_TILE, _TILE), lambda i: (0, 0)))
+    return pl.pallas_call(
+        functools.partial(_amax_kernel, center=center, rotate=rotate,
+                          n_rows=l, tile_l=tile_l),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        interpret=interpret,
+    )(*args)
+
+
+def _main_call(kernel, x, mu, s_t, bits, out_shapes, out_specs,
+               *, rotate, sr, tile_l, tile_m, interpret):
+    """Shared grid/spec assembly for the values and pack kernels."""
+    l, m = x.shape
+    center = mu is not None
+    pad_l = (-l) % tile_l
+    pad_m = (-m) % tile_m
+    xp = _pad_for_blocks(x, mu, pad_l, pad_m)
+    grid = (xp.shape[0] // tile_l, xp.shape[1] // tile_m)
+    x_spec = pl.BlockSpec((tile_l, tile_m), lambda i, j: (i, j))
+    args = [xp]
+    in_specs = [x_spec]
+    if center:
+        args.append(_pad_mu(mu, pad_l, pad_m))
+        in_specs.append(_mu_spec(mu, tile_l, tile_m))
+    if rotate:
+        args.append(jnp.asarray(HADAMARD_16))
+        in_specs.append(pl.BlockSpec((_TILE, _TILE), lambda i, j: (0, 0)))
+    args.append(s_t)
+    in_specs.append(pl.BlockSpec((1, 1), lambda i, j: (0, 0)))
+    if sr:
+        args.append(jnp.pad(bits, ((0, pad_l), (0, pad_m))))
+        in_specs.append(x_spec)
+    return pl.pallas_call(
+        functools.partial(kernel, center=center, rotate=rotate, sr=sr),
+        out_shape=out_shapes,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        interpret=interpret,
+    )(*args), (pad_l, pad_m)
+
+
+def _onepass_call(x, mu, bits, *, rotate, tile_l, tile_m, pad_l, pad_m,
+                  interpret, block_sub=False):
+    """Single-grid-cell QDQ with the per-tensor scale derived in-kernel."""
+    l, m = x.shape
+    xp = _pad_for_blocks(x, mu, pad_l, pad_m, block_sub=block_sub)
+    args = [xp]
+    in_specs = [pl.BlockSpec((tile_l, tile_m), lambda i, j: (i, j))]
+    if mu is not None:
+        args.append(_pad_mu(mu, pad_l, pad_m))
+        in_specs.append(_mu_spec(mu, tile_l, tile_m))
+    if rotate:
+        args.append(jnp.asarray(HADAMARD_16))
+        in_specs.append(pl.BlockSpec((_TILE, _TILE), lambda i, j: (0, 0)))
+    if bits is not None:
+        args.append(jnp.pad(bits, ((0, pad_l), (0, pad_m))))
+        in_specs.append(pl.BlockSpec((tile_l, tile_m), lambda i, j: (i, j)))
+    out = pl.pallas_call(
+        functools.partial(_values_onepass_kernel, center=mu is not None,
+                          rotate=rotate, sr=bits is not None, n_rows=l,
+                          block_sub=block_sub),
+        out_shape=jax.ShapeDtypeStruct((tile_l, tile_m), x.dtype),
+        grid=(1, 1),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_l, tile_m), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(*args)
+    return out[:l, :m]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "rotate", "tile_l", "tile_m", "interpret", "block_axis"))
+def center_hadamard_qdq_2d(
+    x: jax.Array,
+    mu: Optional[jax.Array] = None,
+    tensor_amax: Optional[jax.Array] = None,
+    bits: Optional[jax.Array] = None,
+    *,
+    rotate: bool = False,
+    tile_l: int = DEFAULT_TILE_L,
+    tile_m: int = DEFAULT_TILE_M,
+    interpret: bool = True,
+    block_axis: int = -1,
+) -> jax.Array:
+    """Fused (x - mu) → H16 → blockwise-NVFP4 QDQ.
+
+    ``mu``: optional mean — (1, m) lane vector or (l, 1) sublane vector
+    (transposed dw orientation); None skips centering. ``tensor_amax``:
+    amax of the preprocessed array for the per-tensor scale (computed via
+    :func:`fused_amax_2d` when None). ``bits``: uint32 → stochastic
+    rounding. ``rotate`` requires 16 | the block axis.
+
+    ``block_axis``: -1 (default) runs quantization/rotation blocks along
+    lanes; 0 runs them along sublanes with a LANE mu (1, m) — the
+    transposed GeMM orientation (quantize axis == token axis) handled
+    without transpose copies where the one-pass kernel applies, and via an
+    internal transpose round trip elsewhere.
+    """
+    l, m = x.shape
+    if block_axis == 0:
+        if rotate:
+            assert l % _TILE == 0, (l, m)
+        pad_l0 = (-l) % BLOCK_SIZE
+        if (interpret and tensor_amax is None
+                and (l + pad_l0) * m <= _ONEPASS_MAX_ELEMS):
+            return _onepass_call(
+                x, mu, bits, rotate=rotate, tile_l=l + pad_l0, tile_m=m,
+                pad_l=pad_l0, pad_m=0, interpret=interpret, block_sub=True)
+        # no native multi-tile variant: take the lane-block kernels in the
+        # transposed orientation
+        out = center_hadamard_qdq_2d(
+            x.T, None if mu is None else mu.T, tensor_amax,
+            None if bits is None else bits.T, rotate=rotate,
+            tile_l=tile_l, tile_m=tile_m, interpret=interpret)
+        return out.T
+    if rotate:
+        assert m % _TILE == 0, (l, m)
+    tile_l = min(tile_l, max(8, l))
+    # clamp to the array width but keep the tile a whole number of quant
+    # blocks — padding adds tail columns that quantize to zero (or exact
+    # zeros under a sublane mu, see _pad_for_blocks) and are sliced off
+    tile_m = min(tile_m, max(BLOCK_SIZE, m))
+    tile_m += (-tile_m) % BLOCK_SIZE
+    if interpret and tensor_amax is None and l * m <= _ONEPASS_MAX_ELEMS:
+        # the interpreter has no VMEM budget: grow the tile to the whole
+        # array so the one-pass kernel below applies (it preprocesses the
+        # data once instead of once in the amax pass + once in the main
+        # pass — the dominant cost for rotate-heavy recipes)
+        tile_l = max(tile_l, l)
+        tile_m = max(tile_m, m + (-m) % BLOCK_SIZE)
+    pad_l = (-l) % tile_l
+    pad_m = (-m) % tile_m
+    if tensor_amax is None and l + pad_l == tile_l and m + pad_m == tile_m:
+        # single-tile fast path: the whole array is one grid cell, so the
+        # kernel derives s_t from its own tile — one preprocessing of the
+        # data instead of one per pass (amax is order-exact, bitwise the
+        # two-pass result)
+        return _onepass_call(
+            x, mu, bits, rotate=rotate, tile_l=tile_l, tile_m=tile_m,
+            pad_l=pad_l, pad_m=pad_m, interpret=interpret)
+    if tensor_amax is None:
+        tensor_amax = fused_amax_2d(x, mu, rotate=rotate, tile_l=tile_l,
+                                    interpret=interpret)
+    s_t = jnp.maximum(
+        tensor_amax.astype(jnp.float32) / TENSOR_SCALE_DENOM, _EPS
+    ).reshape(1, 1)
+    out, _ = _main_call(
+        _values_kernel, x, mu, s_t, bits,
+        jax.ShapeDtypeStruct(
+            ((l + (-l) % tile_l), (m + (-m) % tile_m)), x.dtype),
+        pl.BlockSpec((tile_l, tile_m), lambda i, j: (i, j)),
+        rotate=rotate, sr=bits is not None,
+        tile_l=tile_l, tile_m=tile_m, interpret=interpret)
+    return out[:l, :m]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "rotate", "tile_l", "tile_m", "interpret"))
+def center_hadamard_pack_2d(
+    x: jax.Array,
+    mu: Optional[jax.Array] = None,
+    tensor_amax: Optional[jax.Array] = None,
+    bits: Optional[jax.Array] = None,
+    *,
+    rotate: bool = False,
+    tile_l: int = DEFAULT_TILE_L,
+    tile_m: int = DEFAULT_TILE_M,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused quantize-and-pack: (packed codes, E4M3 block scales, s_t).
+
+    One HBM read of ``x`` produces the deployment artifact directly:
+    ``packed`` (l, m/2) uint8 nibble pairs (low nibble first — the
+    ``core.nvfp4.pack_nibbles`` layout), ``scales`` (l, m/16)
+    float8_e4m3fn, and the (1, 1) fp32 per-tensor scale. Requires
+    m % 32 == 0 (whole packed nibble pairs per scale block).
+    """
+    l, m = x.shape
+    assert m % (2 * BLOCK_SIZE) == 0, (l, m)
+    if rotate:
+        assert m % _TILE == 0, (l, m)
+    tile_l = min(tile_l, max(8, l))
+    tile_m = min(tile_m, m)
+    if m % tile_m != 0 or tile_m % (2 * BLOCK_SIZE) != 0:
+        tile_m = m
+    if tensor_amax is None:
+        tensor_amax = fused_amax_2d(x, mu, rotate=rotate, tile_l=tile_l,
+                                    interpret=interpret)
+    s_t = jnp.maximum(
+        tensor_amax.astype(jnp.float32) / TENSOR_SCALE_DENOM, _EPS
+    ).reshape(1, 1)
+    pad_l = (-l) % tile_l
+    (codes, scales), _ = _main_call(
+        _pack_kernel, x, mu, s_t, bits,
+        (jax.ShapeDtypeStruct((l + pad_l, m // 2), jnp.uint8),
+         jax.ShapeDtypeStruct((l + pad_l, m // BLOCK_SIZE),
+                              jnp.float8_e4m3fn)),
+        (pl.BlockSpec((tile_l, tile_m // 2), lambda i, j: (i, j)),
+         pl.BlockSpec((tile_l, tile_m // BLOCK_SIZE), lambda i, j: (i, j))),
+        rotate=rotate, sr=bits is not None,
+        tile_l=tile_l, tile_m=tile_m, interpret=interpret)
+    return codes[:l], scales[:l], s_t
+
+
+def center_hadamard_quantize_pack(
+    x: jax.Array,
+    bits: Optional[jax.Array] = None,
+    *,
+    center: bool = True,
+    rotate: bool = True,
+    tile_l: int = DEFAULT_TILE_L,
+    tile_m: int = DEFAULT_TILE_M,
+    interpret: bool = True,
+):
+    """The full fused producer pipeline of one 2-D activation block.
+
+    mean reduction → center+rotate+amax reduction → one fused
+    quantize-and-pack pass. Returns ``(packed, scales, s_t, mu)`` with
+    ``mu`` the (1, m) fp32 token mean (zeros when ``center=False``) — the
+    complete wire/deployment artifact of the paper's recipe in exactly one
+    full-size HBM read per pass and no full-size intermediate writes.
+    """
+    l, m = x.shape
+    mu = column_mean_2d(x, tile_l=tile_l, interpret=interpret) if center \
+        else None
+    codes, scales, s_t = center_hadamard_pack_2d(
+        x, mu, None, bits, rotate=rotate, tile_l=tile_l, tile_m=tile_m,
+        interpret=interpret)
+    if mu is None:
+        mu = jnp.zeros((1, m), jnp.float32)
+    return codes, scales, s_t, mu

@@ -15,6 +15,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from .fused import (center_hadamard_pack_2d, center_hadamard_qdq_2d,
+                    center_hadamard_quantize_pack, fused_amax_2d)
 from .hadamard16 import hadamard16_2d
 from .mean_split import column_mean_2d, mean_split_qdq_2d
 from .nvfp4_quant import nvfp4_qdq_2d
@@ -82,12 +84,64 @@ def hadamard16_pallas(
     return restore(hadamard16_2d(x2, interpret=interpret))
 
 
+@functools.partial(jax.jit, static_argnames=("axis", "center", "rotate",
+                                             "interpret"))
+def fused_qdq_pallas(
+    x: jax.Array,
+    axis: int = -1,
+    key: Optional[jax.Array] = None,
+    *,
+    center: bool = False,
+    rotate: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused Center→Hadamard→Quantize QDQ along ``axis`` (one kernel pass).
+
+    ``center=True`` subtracts the token mean (over all non-``axis`` dims,
+    matching ``split_mean``) inside the kernel — the mean comes from one
+    ``column_mean_2d`` reduction, the per-tensor scale from one fused
+    center+rotate+amax reduction; the full-size centered/rotated
+    intermediates of the stage pipeline are never written to HBM.
+    """
+    x2, restore = _to_2d(x, axis)
+    mu = column_mean_2d(x2, interpret=interpret) if center else None
+    bits = _bits_like(key, x2) if key is not None else None
+    return restore(center_hadamard_qdq_2d(x2, mu, None, bits, rotate=rotate,
+                                          interpret=interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "center", "rotate",
+                                             "interpret"))
+def fused_pack_pallas(
+    x: jax.Array,
+    axis: int = -1,
+    key: Optional[jax.Array] = None,
+    *,
+    center: bool = True,
+    rotate: bool = True,
+    interpret: bool = True,
+):
+    """Fused quantize-and-pack along ``axis``: (packed, scales, s_t, mu)
+    in the 2-D contraction-last layout (see ``center_hadamard_quantize_pack``).
+    """
+    x2, _ = _to_2d(x, axis)
+    bits = _bits_like(key, x2) if key is not None else None
+    return center_hadamard_quantize_pack(x2, bits, center=center,
+                                         rotate=rotate, interpret=interpret)
+
+
 __all__ = [
     "nvfp4_qdq_pallas",
     "averis_split_qdq_pallas",
     "hadamard16_pallas",
+    "fused_qdq_pallas",
+    "fused_pack_pallas",
     "column_mean_2d",
     "mean_split_qdq_2d",
     "nvfp4_qdq_2d",
     "hadamard16_2d",
+    "center_hadamard_qdq_2d",
+    "center_hadamard_pack_2d",
+    "center_hadamard_quantize_pack",
+    "fused_amax_2d",
 ]

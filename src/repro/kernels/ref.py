@@ -11,7 +11,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import E2M1_MAX, TENSOR_SCALE_DENOM
+from repro.core.formats import E2M1_GRID, E2M1_MAX, TENSOR_SCALE_DENOM
 from repro.core.hadamard import hadamard_tiles
 from repro.core.nvfp4 import quantize_block_scales, round_e2m1_rn, round_e2m1_sr
 
@@ -89,3 +89,66 @@ def mean_split_qdq_2d_ref(
 def hadamard16_2d_ref(x: jax.Array) -> jax.Array:
     """Oracle for kernels.hadamard16.hadamard16_2d."""
     return hadamard_tiles(x, axis=-1)
+
+
+def _preprocess_ref(
+    x: jax.Array, mu: Optional[jax.Array], rotate: bool
+) -> jax.Array:
+    """The unfused stage-pipeline preprocessing: center then rotate."""
+    y = x.astype(jnp.float32)
+    if mu is not None:
+        y = y - mu.astype(jnp.float32)      # (1, m) or (l, 1) broadcast
+    if rotate:
+        y = hadamard_tiles(y, axis=-1)
+    return y
+
+
+def center_hadamard_qdq_2d_ref(
+    x: jax.Array,
+    mu: Optional[jax.Array] = None,
+    bits: Optional[jax.Array] = None,
+    *,
+    rotate: bool = False,
+) -> jax.Array:
+    """Oracle for kernels.fused.center_hadamard_qdq_2d: the unfused
+    Center → Hadamard → Quantize stage chain with the kernels' bits→uniform
+    SR mapping. The per-tensor scale is amax of the preprocessed array,
+    exactly as the stage pipeline's Quantize computes it."""
+    y = _preprocess_ref(x, mu, rotate)
+    amax = jnp.max(jnp.abs(y))
+    return mean_split_qdq_2d_ref(y, jnp.zeros((1, y.shape[1]), jnp.float32),
+                                 amax, bits).astype(x.dtype)
+
+
+def center_hadamard_pack_2d_ref(
+    x: jax.Array,
+    mu: Optional[jax.Array] = None,
+    bits: Optional[jax.Array] = None,
+    *,
+    rotate: bool = False,
+    block_size: int = 16,
+):
+    """Oracle for kernels.fused.center_hadamard_pack_2d: unfused stage chain
+    followed by the shared codec (``encode_e2m1_codes`` + ``pack_nibbles``).
+    Returns (packed codes uint8, E4M3 block scales, s_t (1,1) fp32)."""
+    from repro.core.nvfp4 import (encode_e2m1_codes, pack_nibbles,
+                                  round_e2m1_sr as _sr)
+
+    y = _preprocess_ref(x, mu, rotate)
+    l, m = y.shape
+    assert m % (2 * block_size) == 0, (l, m)
+    s_t = jnp.maximum(jnp.max(jnp.abs(y)) / TENSOR_SCALE_DENOM, _EPS)
+    yb = y.reshape(l, m // block_size, block_size)
+    s_b = quantize_block_scales(jnp.max(jnp.abs(yb), axis=-1), s_t)
+    scale = s_b.astype(jnp.float32) * s_t
+    if bits is None:
+        codes = encode_e2m1_codes(yb, scale)
+    else:
+        u = _bits_to_uniform(bits).reshape(yb.shape)
+        a = jnp.where(scale[..., None] > 0,
+                      jnp.abs(yb) / jnp.maximum(scale[..., None], _EPS), 0.0)
+        q = _sr(a, u)
+        idx = jnp.searchsorted(jnp.asarray(E2M1_GRID), q).astype(jnp.uint8)
+        codes = (yb < 0).astype(jnp.uint8) * jnp.uint8(8) + idx
+    packed = pack_nibbles(codes.reshape(l, m))
+    return packed, s_b, s_t.reshape(1, 1)

@@ -256,6 +256,11 @@ def main() -> None:
     if skipped:
         print(f"\nWARNING: {int(skipped)} ragged-axis Hadamard skip(s) "
               f"during this report — a rotation stage silently downgraded")
+    fallbacks = global_hub().counter("quant/fused_fallback")
+    if fallbacks:
+        print(f"\nWARNING: {int(fallbacks)} fused-backend fallback(s) "
+              f"during this report — pipelines the fused Pallas kernels "
+              f"could not run took the slower XLA stage path")
 
     if args.json_out:
         with open(args.json_out, "w") as f:

@@ -49,12 +49,20 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.pipeline import Center, Operand, Quantize, apply_stages
+from repro.core.pipeline import (Center, Operand, Quantize, apply_stages,
+                                 _fused_fallback, _fused_interpret)
 from repro.core.qgemm import QuantConfig
 
 # QuantConfig consumed by apply_stages for wire payloads: blockwise NVFP4,
 # RN elements (error feedback de-biases; the wire carries no SR stream).
 _WIRE_QCFG = QuantConfig(mode="nvfp4", sr_grad=False)
+
+# Wire hot path: encode nvfp4 buckets through the fused Pallas kernel
+# (one pass: subtract-mean → amax → blockwise QDQ instead of materialized
+# stage intermediates) and fold shards in a sequential-grid kernel. Both
+# fall back to the stage/scan paths on unsupported shapes (counted as
+# quant/fused_fallback). Tests flip this to compare the two paths.
+WIRE_FUSED = True
 
 # The stage pipelines of the centered wire — shared-split Center exactly as
 # in the GeMM executor (one mean reduction per bucket).
@@ -332,6 +340,86 @@ def _q_int8(x: jax.Array) -> jax.Array:
     return q * scale
 
 
+_WIRE_TILE_COLS = (512, 256, 128, 64, 32, 16)
+
+
+def _wire_cols(n: int) -> Optional[int]:
+    """Widest block-aligned column count that tiles a flat bucket exactly."""
+    for m in _WIRE_TILE_COLS:
+        if n % m == 0:
+            return m
+    return None
+
+
+def _fused_bucket_qdq(corrected: jax.Array,
+                      *, center: bool) -> Optional[jax.Array]:
+    """One-pass Pallas encode of an nvfp4 wire bucket; None -> stage path.
+
+    The flat bucket is viewed as (rows, m) with m a multiple of the quant
+    block, which preserves the 1-D block boundaries exactly; the scalar
+    bucket mean broadcasts to a lane vector for the kernel's Center. The
+    decoded wire is bitwise the stage path's (same mean, same blocks, same
+    per-tensor amax — max is order-invariant) within one jit regime.
+    """
+    m = _wire_cols(corrected.shape[-1])
+    if corrected.ndim != 1 or m is None:
+        _fused_fallback(
+            f"wire bucket shape {corrected.shape} has no block-aligned "
+            f"tiling")
+        return None
+    from repro.kernels.fused import center_hadamard_qdq_2d
+    interpret = _fused_interpret()
+    x2 = corrected.reshape(-1, m)
+    mu_s = None
+    mu_row = None
+    if center:
+        mu_s = jnp.mean(corrected.astype(jnp.float32))
+        mu_row = jnp.broadcast_to(mu_s.reshape(1, 1), (1, m))
+    res_q = center_hadamard_qdq_2d(x2, mu_row, None, None, rotate=False,
+                                   interpret=interpret).reshape(-1)
+    return res_q + mu_s if center else res_q
+
+
+def _fold_kernel(x_ref, o_ref, *, num_shards: int):
+    """Sequential-grid left fold: o[c] = Σ_s x[s, c]/S in shard order."""
+    from jax.experimental import pallas as pl
+    s = pl.program_id(1)
+    part = x_ref[...].astype(jnp.float32)[0] / num_shards
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(s != 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + part
+
+
+def _fold_shards_pallas(stacked: jax.Array,
+                        num_shards: int) -> Optional[jax.Array]:
+    """Pallas left fold of (S, B) decoded shards; None -> lax.scan path."""
+    if stacked.ndim != 2:
+        return None
+    s_dim, b = stacked.shape
+    tile = None
+    for cand in (65536, 16384, 4096, 1024, 256, 128, 32, 16):
+        if b % cand == 0:
+            tile = cand
+            break
+    if tile is None:
+        return None
+    import functools
+    from jax.experimental import pallas as pl
+    return pl.pallas_call(
+        functools.partial(_fold_kernel, num_shards=num_shards),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        grid=(b // tile, s_dim),
+        in_specs=[pl.BlockSpec((1, tile), lambda c, s: (s, c))],
+        out_specs=pl.BlockSpec((tile,), lambda c, s: (c,)),
+        interpret=_fused_interpret(),
+    )(stacked)
+
+
 def encode_bucket(
     recipe: CommRecipe,
     flat: jax.Array,
@@ -359,13 +447,15 @@ def encode_bucket(
     elif recipe.payload == "int8" and not recipe.center:
         wire = _q_int8(corrected)
     elif recipe.payload == "nvfp4":
-        if recipe.center:
+        wire = (_fused_bucket_qdq(corrected, center=recipe.center)
+                if WIRE_FUSED else None)
+        if wire is None and recipe.center:
             splits: Dict = {}
             mu = apply_stages(corrected, MEAN_OP, _WIRE_QCFG, splits=splits)
             res_q = apply_stages(corrected, RESIDUAL_NVFP4_OP, _WIRE_QCFG,
                                  splits=splits)
             wire = res_q + mu            # scalar mean broadcast, exact fp32
-        else:
+        elif wire is None:
             wire = apply_stages(corrected, RAW_NVFP4_OP, _WIRE_QCFG)
     else:                                # pragma: no cover
         raise NotImplementedError(f"comm recipe {recipe}")
@@ -448,8 +538,14 @@ def fold_shards(stacked: jax.Array, num_shards: int) -> jax.Array:
     independent of how shards are distributed over devices. A ``lax.scan``
     (not a tree/pairwise reduce, which would reassociate the fp32 adds, and
     not a Python unroll, whose graph grows with the shard count) performs
-    exactly that left fold at O(1) trace size.
+    exactly that left fold at O(1) trace size. With :data:`WIRE_FUSED` the
+    same fold runs as a sequential-grid Pallas kernel (identical shard
+    order, hence bitwise-identical) when the payload tiles evenly.
     """
+    if WIRE_FUSED:
+        folded = _fold_shards_pallas(stacked, num_shards)
+        if folded is not None:
+            return folded
     acc0 = jnp.zeros(stacked.shape[1:], jnp.float32)
     acc, _ = jax.lax.scan(
         lambda c, x: (c + x.astype(jnp.float32) / num_shards, None),

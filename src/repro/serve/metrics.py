@@ -155,4 +155,8 @@ class ServeMetrics:
             # the silent-recipe-downgrade signal (core/pipeline.py reports
             # into the process-wide hub, which outlives any one engine)
             "skipped_hadamard": global_hub().counter("quant/skipped_hadamard"),
+            # fused-backend pipelines that fell back to the XLA stage path
+            # (unsupported shape/config) — the fused analogue of the
+            # skipped-Hadamard downgrade signal
+            "fused_fallback": global_hub().counter("quant/fused_fallback"),
         }
