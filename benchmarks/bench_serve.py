@@ -7,16 +7,24 @@ plain one-token-per-step baseline.
 Rows (name,us_per_call,derived):
   serve_<kind>            mean decode-step latency; derived tok_s=..
   serve_cache_<kind>      cache bytes/token (all layers); derived ratio vs bf16
+  serve_read_fused_<kind> steady-state decode-step wall time with the fused
+                          payload read (min over interleaved time_arms
+                          iters); derived tok_s=..;bytes_per_token=..
+  serve_read_dense_<kind> ditto through the _dense_view reference; derived
+                          adds fused_speedup=..;agree=.. (greedy identity)
   serve_prefix_off_<kind> prefill tokens computed without the prefix cache
   serve_prefix_on_<kind>  ditto with it; derived hit_rate=..;compiles=..;
                           static_agree=.. (greedy tokens vs the --static path)
-  serve_spec_off_<kind>   engine steps to drain the speculative workload
+  serve_spec_off_<kind>   steady-state plain decode-step wall time (time_arms
+                          min) on the speculative workload
   serve_spec_ngram_<kind> ditto with ngram speculation; derived accept_rate=..;
                           tokens_per_step=..;agree=.. (tokens vs baseline)
 
-Also writes ``artifacts/BENCH_serve.json`` (speculative accept-rate and
-tokens/step per KV mode), folded into ``BENCH_summary.json`` by
-``benchmarks.run``.
+Also writes ``artifacts/BENCH_serve.json`` (fused vs dense decode throughput
+per quantized KV mode — the nightly regression gate reads
+``decode_throughput.<kind>.fused_speedup`` — plus the speculative
+accept-rate/tokens-per-step table, now with ``time_arms`` wall times),
+folded into ``BENCH_summary.json`` by ``benchmarks.run``.
 """
 from __future__ import annotations
 
@@ -27,7 +35,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .common import emit
+from .common import emit, time_arms
 
 
 KINDS = ("bf16", "fp4", "fp4-centered")
@@ -71,8 +79,95 @@ def run() -> None:
         emit(f"serve_cache_{kind}", 0.0,
              f"bytes_per_token={bpt:.1f};vs_bf16={ratio:.3f}")
 
+    artifact = {"decode_throughput": _run_decode_read_workload(
+        cfg, model, params)}
     _run_prefix_workload(cfg, model, params)
-    _run_spec_workload(cfg, model, params)
+    artifact["speculative_ngram_k4"] = _run_spec_workload(cfg, model, params)
+
+    os.makedirs(_ART, exist_ok=True)
+    with open(os.path.join(_ART, "BENCH_serve.json"), "w") as f:
+        json.dump(artifact, f, indent=2, sort_keys=True)
+
+
+def _steady_decode_engine(model, params, prompts, gen, **cfg_kw):
+    """Build an engine, submit the workload, and run it until every prompt
+    is past prefill and decoding — the steady state the timed arms sample."""
+    from repro.serve import Engine, EngineConfig
+
+    eng = Engine(model, params, EngineConfig(**cfg_kw))
+    for i, p in enumerate(prompts):
+        eng.submit(p, gen, seed=i)
+    for _ in range(64):
+        if not eng._prefilling and int(eng._active.sum()) == len(prompts):
+            break
+        eng.step()
+    else:
+        raise RuntimeError("prefill did not reach steady state")
+    eng.step()                      # pay the decode/verify jit compile
+    eng.reset_metrics()
+    return eng
+
+
+def _run_decode_read_workload(cfg, model, params) -> dict:
+    """Tentpole measurement: steady-state decode over a long committed
+    context, fused payload reads vs the dense ``_dense_view`` reference.
+
+    Arms interleave (``time_arms``), both engines decode the same prompts,
+    and the drained greedy tokens must be identical — the speed comparison
+    is only meaningful because the outputs are. ``fused_speedup < 1.0``
+    marks a ``"regression"`` in BENCH_summary.json (nightly-gated like
+    qgemm's ``prepared_speedup``)."""
+    page = 16
+    rng = np.random.default_rng(11)
+    prompt_len = 6 * page + 5                 # 6 committed pages + tail
+    gen = 40                                  # > warmup + iters timed steps
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+               for _ in range(2)]
+    kw = dict(n_slots=2, max_len=prompt_len + gen + page, page_size=page,
+              quant_mode="bf16", prefill_chunk=32)
+
+    artifact = {}
+    for kind in ("fp4", "fp4-centered"):
+        engines = {
+            read: _steady_decode_engine(model, params, prompts, gen,
+                                        kv_cache=kind, kv_read=read, **kw)
+            for read in ("fused", "dense")
+        }
+        stats = time_arms({read: (eng.step, ())
+                           for read, eng in engines.items()})
+        outs, summs = {}, {}
+        for read, eng in engines.items():
+            fin = sorted(eng.drain(), key=lambda r: r.rid)
+            outs[read] = [r.generated for r in fin]
+            summs[read] = eng.metrics.summary()
+        agree = float(np.mean([a == b for a, b in
+                               zip(outs["fused"], outs["dense"])]))
+        n_active = len(prompts)
+        row = {
+            "fused_tok_s": n_active / stats["fused"]["min_s"],
+            "dense_tok_s": n_active / stats["dense"]["min_s"],
+            "fused_speedup": (stats["dense"]["min_s"]
+                              / stats["fused"]["min_s"]),
+            "fused_step_us": stats["fused"]["min_s"] * 1e6,
+            "dense_step_us": stats["dense"]["min_s"] * 1e6,
+            "agree": agree,
+            "kv_bytes_read_per_token":
+                summs["fused"]["kv_bytes_read_per_token"],
+            "kv_dense_equiv_bytes_per_token":
+                summs["fused"]["kv_dense_equiv_bytes_per_token"],
+            "context_tokens": prompt_len,
+        }
+        artifact[kind] = row
+        emit(f"serve_read_fused_{kind}", row["fused_step_us"],
+             f"tok_s={row['fused_tok_s']:.1f};"
+             f"bytes_per_token={row['kv_bytes_read_per_token']:.0f}")
+        emit(f"serve_read_dense_{kind}", row["dense_step_us"],
+             f"tok_s={row['dense_tok_s']:.1f};"
+             f"fused_speedup={row['fused_speedup']:.2f};"
+             f"agree={agree:.2f}")
+        assert agree == 1.0, (
+            f"fused read diverged from the dense view on {kind}")
+    return artifact
 
 
 def _run_prefix_workload(cfg, model, params) -> None:
@@ -125,38 +220,42 @@ def _run_prefix_workload(cfg, model, params) -> None:
             assert agree == 1.0, "greedy outputs diverged from --static"
 
 
-def _run_spec_workload(cfg, model, params) -> None:
+def _run_spec_workload(cfg, model, params) -> dict:
     """Repetitive-text speculative workload: prompt-lookup (ngram) drafting
     must report accept-rate > 0 and > 1 token emitted per slot-step while
-    staying token-identical to the plain-decode baseline."""
-    from repro.serve import Engine, EngineConfig
-
+    staying token-identical to the plain-decode baseline. Both arms are
+    wall-clocked with interleaved ``time_arms`` over steady-state steps."""
     rng = np.random.default_rng(9)
     # repetitive text: a short pattern tiled, plus a distinct random tail
     prompts = [np.concatenate([
         np.tile(rng.integers(0, cfg.vocab_size, 4).astype(np.int32), 6),
         rng.integers(0, cfg.vocab_size, 5).astype(np.int32)])
         for _ in range(4)]
-    gen = 24
+    gen = 64                          # keep decoding through the timed steps
+    kw = dict(n_slots=2, max_len=96, page_size=16, quant_mode="bf16",
+              prefill_chunk=32)
 
     artifact = {}
     for kind in KINDS:
+        engines = {
+            "off": _steady_decode_engine(model, params, prompts[:2], gen,
+                                         kv_cache=kind, **kw),
+            "ngram": _steady_decode_engine(model, params, prompts[:2], gen,
+                                           kv_cache=kind, speculate="ngram",
+                                           draft_tokens=4, **kw),
+        }
+        stats = time_arms({name: (eng.step, ())
+                           for name, eng in engines.items()}, iters=6)
         results = {}
-        for spec in ("off", "ngram"):
-            eng = Engine(model, params, EngineConfig(
-                n_slots=2, max_len=64, kv_cache=kind, page_size=16,
-                quant_mode="bf16", prefill_chunk=32, speculate=spec,
-                draft_tokens=4))
-            for i, p in enumerate(prompts):
-                eng.submit(p, gen, seed=i)
+        for name, eng in engines.items():
             fin = sorted(eng.drain(), key=lambda r: r.rid)
-            results[spec] = (eng.metrics.summary(),
+            results[name] = (eng.metrics.summary(),
                              [r.generated for r in fin])
         (s_off, out_off), (s_on, out_on) = results["off"], results["ngram"]
         agree = float(np.mean([a == b for a, b in zip(out_off, out_on)]))
-        emit(f"serve_spec_off_{kind}", 0.0,
+        emit(f"serve_spec_off_{kind}", stats["off"]["min_s"] * 1e6,
              f"tokens={int(s_off['generated_tokens'])};tokens_per_step=1.00")
-        emit(f"serve_spec_ngram_{kind}", 0.0,
+        emit(f"serve_spec_ngram_{kind}", stats["ngram"]["min_s"] * 1e6,
              f"accept_rate={s_on['accept_rate']:.2f};"
              f"tokens_per_step={s_on['spec_tokens_per_step']:.2f};"
              f"agree={agree:.2f}")
@@ -169,12 +268,10 @@ def _run_spec_workload(cfg, model, params) -> None:
             "spec_steps": s_on["spec_steps"],
             "baseline_tokens_per_step": 1.0,
             "agree_with_baseline": agree,
+            "step_us_plain": stats["off"]["min_s"] * 1e6,
+            "step_us_ngram": stats["ngram"]["min_s"] * 1e6,
         }
-
-    os.makedirs(_ART, exist_ok=True)
-    with open(os.path.join(_ART, "BENCH_serve.json"), "w") as f:
-        json.dump({"speculative_ngram_k4": artifact}, f, indent=2,
-                  sort_keys=True)
+    return artifact
 
 
 if __name__ == "__main__":

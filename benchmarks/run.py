@@ -88,11 +88,18 @@ def check_staleness(written_at: str,
 
 
 def mark_regressions(summary: dict) -> list[str]:
-    """Flag quantized qgemm recipes whose prepared path is slower than
-    inline re-quantization: the per-step weight cache MUST pay for itself
-    (``prepared_speedup >= 1.0``). Mutates ``summary`` in place, setting a
-    loud ``"regression": true`` on each offending mode row, and returns
-    the offending mode names. The nightly CI job fails on any of them."""
+    """Flag perf inversions that MUST NOT ship. Two gates, same contract:
+
+    * quantized qgemm recipes whose prepared path is slower than inline
+      re-quantization (``prepared_speedup >= 1.0`` — the per-step weight
+      cache must pay for itself);
+    * serve decode throughput where the fused paged-attention read is
+      slower than the dense ``_dense_view`` it replaces
+      (``decode_throughput.<kind>.fused_speedup >= 1.0``).
+
+    Mutates ``summary`` in place, setting a loud ``"regression": true`` on
+    each offending row, and returns the offending names. The nightly CI
+    job fails on any of them."""
     offenders = []
     modes = (summary.get("qgemm") or {}).get("modes") or {}
     for mode, row in modes.items():
@@ -102,11 +109,22 @@ def mark_regressions(summary: dict) -> list[str]:
         if speedup is not None and speedup < 1.0:
             row["regression"] = True
             offenders.append(mode)
-    for mode in offenders:
-        print(f"WARNING: qgemm recipe {mode!r} REGRESSION: prepared weights "
-              f"are slower than inline re-quantization (prepared_speedup="
-              f"{modes[mode]['prepared_speedup']:.2f} < 1.0)",
-              file=sys.stderr)
+            print(f"WARNING: qgemm recipe {mode!r} REGRESSION: prepared "
+                  f"weights are slower than inline re-quantization "
+                  f"(prepared_speedup={speedup:.2f} < 1.0)",
+                  file=sys.stderr)
+    decode = (summary.get("serve") or {}).get("decode_throughput") or {}
+    for mode, row in decode.items():
+        if not isinstance(row, dict):
+            continue
+        speedup = row.get("fused_speedup")
+        if speedup is not None and speedup < 1.0:
+            row["regression"] = True
+            offenders.append(f"serve:{mode}")
+            print(f"WARNING: serve decode {mode!r} REGRESSION: the fused "
+                  f"paged-attention read is slower than the dense view it "
+                  f"replaces (fused_speedup={speedup:.2f} < 1.0)",
+                  file=sys.stderr)
     return offenders
 
 

@@ -261,6 +261,11 @@ def main() -> None:
         print(f"\nWARNING: {int(fallbacks)} fused-backend fallback(s) "
               f"during this report — pipelines the fused Pallas kernels "
               f"could not run took the slower XLA stage path")
+    paged = global_hub().counter("quant/paged_attn_fallback")
+    if paged:
+        print(f"\nWARNING: {int(paged)} paged-attention read fallback(s) "
+              f"during this report — fused FP4 KV reads dropped to the "
+              f"dense _dense_view path (bandwidth win lost)")
 
     if args.json_out:
         with open(args.json_out, "w") as f:

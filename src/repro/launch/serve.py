@@ -108,6 +108,7 @@ def run_engine(args) -> None:
                         if args.telemetry_out else None)
     eng = Engine(model, params, EngineConfig(
         n_slots=args.slots, max_len=max_len, kv_cache=args.kv_cache,
+        kv_read=args.kv_read,
         page_size=args.page_size, quant_mode=args.quant, seed=args.seed,
         prefill_chunk=args.prefill_chunk,
         prefill_token_budget=args.prefill_budget,
@@ -145,6 +146,11 @@ def run_engine(args) -> None:
           f"occupancy {summ['mean_occupancy']:.2f}")
     print(f"kv-cache bytes/token (all layers): "
           f"{summ['cache_bytes_per_token']:.0f}")
+    print(f"kv read path: "
+          f"{'fused' if summ['kv_read_fused'] else 'dense'}, "
+          f"{summ['kv_bytes_read_per_token']:.0f} bytes/token read "
+          f"(dense-equiv {summ['kv_dense_equiv_bytes_per_token']:.0f}), "
+          f"decode read {summ['decode_kv_read_gbps']:.2f} GB/s")
     print(f"prefill tokens computed {int(summ['prefill_tokens_computed'])} "
           f"(padded {int(summ['prefill_tokens_padded'])}), "
           f"prefix hit-rate {summ['prefix_hit_rate']:.2f} "
@@ -163,6 +169,10 @@ def run_engine(args) -> None:
         print(f"WARNING: {int(summ['skipped_hadamard'])} ragged-axis "
               f"Hadamard skip(s) — a rotation stage silently downgraded "
               f"(see core/pipeline.plan_summary)")
+    if summ["paged_attn_fallback"]:
+        print(f"WARNING: {int(summ['paged_attn_fallback'])} paged-attention "
+              f"read fallback(s) — fused FP4 KV reads dropped to the dense "
+              f"_dense_view path")
     if tracer is not None:
         tracer.save(args.trace_out)
         print(f"wrote Chrome trace ({len(tracer.events)} events, "
@@ -195,6 +205,12 @@ def main() -> None:
     # engine knobs
     ap.add_argument("--kv-cache", default="bf16",
                     choices=["bf16", "fp4", "fp4-centered"])
+    ap.add_argument("--kv-read", default="fused",
+                    choices=["fused", "dense"],
+                    help="quantized-cache decode read path: fused attends "
+                         "off the stored page payload (packed codes + "
+                         "scales + mean); dense dequantizes the reference "
+                         "_dense_view first")
     ap.add_argument("--page-size", type=int, default=64)
     ap.add_argument("--prefill-chunk", type=int, default=64,
                     help="chunked-prefill chunk size (jit shapes come from "

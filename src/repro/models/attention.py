@@ -10,6 +10,7 @@ memory instead, the XLA analogue of a flash kernel's tiling.
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -184,24 +185,49 @@ def gqa_apply(
         assert decode_pos is not None
         if adapter is None:
             adapter = dense_gqa_adapter(cfg)
+        # Quantized adapters with read_backend="fused" attend straight off
+        # the stored page payload (kernels/paged_attention) — no dense KV
+        # view is ever built. A non-f32 softmax policy cannot be honored by
+        # the f32 online-softmax kernel: loud counted fallback to the dense
+        # path (quant/paged_attn_fallback).
+        fused = (getattr(adapter, "read_backend", "dense") == "fused"
+                 and hasattr(adapter, "update_attend"))
+        if fused and not adapter.fused_read_ok(smd):
+            adapter.note_fallback(
+                f"attn_softmax_dtype={cfg.attn_softmax_dtype} (the fused "
+                f"paged read accumulates its online softmax in float32)")
+            fused = False
         if s == 1:
-            (ck, cv), new_cache = adapter.update(cache, (k[:, 0], v[:, 0]),
-                                                 decode_pos)
-            qpos = decode_pos[:, None]
+            if fused:
+                out, new_cache = adapter.update_attend(
+                    cache, (k[:, 0], v[:, 0]), decode_pos, q)
+            else:
+                (ck, cv), new_cache = adapter.update(
+                    cache, (k[:, 0], v[:, 0]), decode_pos)
+                qpos = decode_pos[:, None]
         else:
             # Speculative verify: the S-token span [t0, d1..d_{S-1}] writes
             # into per-layer scratch (committed storage untouched until the
             # adapter's commit_span); queries attend causally over the
-            # dense view with the span overlaid at its absolute positions.
-            (ck, cv), new_cache = adapter.update_span(cache, (k, v),
-                                                      decode_pos)
-            qpos = decode_pos[:, None] + jnp.arange(s)[None, :]
-        t = ck.shape[1]
-        kpos = jnp.arange(t)
-        out = attention_core(q, ck, cv, qpos, kpos, causal=True,
-                             softmax_dtype=smd)
+            # dense view with the span overlaid at its absolute positions
+            # (fused: the span is its own causally-masked exact block).
+            if fused:
+                out, new_cache = adapter.update_span_attend(
+                    cache, (k, v), decode_pos, q)
+            else:
+                (ck, cv), new_cache = adapter.update_span(cache, (k, v),
+                                                          decode_pos)
+                qpos = decode_pos[:, None] + jnp.arange(s)[None, :]
+        if not fused:
+            t = ck.shape[1]
+            kpos = jnp.arange(t)
+            out = attention_core(q, ck, cv, qpos, kpos, causal=True,
+                                 softmax_dtype=smd)
 
-    out = out.reshape(b, s, cfg.num_heads * hd)
+    # The quantized decode reads (fused kernel AND the f32 dense view) hand
+    # back float32 context; round to the residual dtype at one shared point
+    # so the out-projection and layer carry stay bf16 on every path.
+    out = out.astype(x.dtype).reshape(b, s, cfg.num_heads * hd)
     y = ctx.gemm(out, p["wo"], site=4, role="attn_o")
     return y, new_cache
 
@@ -289,24 +315,39 @@ def mla_apply(
     kr_new = apply_rope(kr_new[:, :, None, :], cos, sin)[:, :, 0, :]
     if adapter is None:
         adapter = dense_mla_adapter(cfg)
-    (cc, ckr), new_cache = adapter.update(cache, (c_new[:, 0], kr_new[:, 0]),
-                                          decode_pos)
 
     wkv_b = p["wkv_b"].astype(x.dtype).reshape(rkv, nh, dn + dv)
     w_k, w_v = wkv_b[..., :dn], wkv_b[..., dn:]
     q_abs = jnp.einsum("bqnd,rnd->bqnr", q_nope, w_k,
                        preferred_element_type=jnp.float32).astype(x.dtype)
-    t = cc.shape[1]
-    scores = (
-        jnp.einsum("bqnr,btr->bqnt", q_abs, cc, preferred_element_type=jnp.float32)
-        + jnp.einsum("bqnd,btd->bqnt", q_rope, ckr,
-                     preferred_element_type=jnp.float32)
-    ) / jnp.sqrt(jnp.float32(dn + dr))
-    mask = decode_pos[:, None, None, None] >= jnp.arange(t)[None, None, None, :]
-    scores = jnp.where(mask, scores, NEG_INF)
-    w = jax.nn.softmax(scores, axis=-1)
-    ctx_c = jnp.einsum("bqnt,btr->bqnr", w.astype(cc.dtype), cc,
-                       preferred_element_type=jnp.float32).astype(x.dtype)
+    # Quantized latent adapters with read_backend="fused" attend straight
+    # off the stored c-page payload (kernels/paged_attention); the absorbed
+    # score path always accumulates in f32, so no softmax-dtype fallback
+    # exists here.
+    fused = (getattr(adapter, "read_backend", "dense") == "fused"
+             and hasattr(adapter, "update_attend"))
+    if fused:
+        ctx_lat, new_cache = adapter.update_attend(
+            cache, (c_new[:, 0], kr_new[:, 0]), decode_pos,
+            q_abs[:, 0], q_rope[:, 0],
+            sm_scale=1.0 / math.sqrt(dn + dr))
+        ctx_c = ctx_lat[:, None].astype(x.dtype)
+    else:
+        (cc, ckr), new_cache = adapter.update(
+            cache, (c_new[:, 0], kr_new[:, 0]), decode_pos)
+        t = cc.shape[1]
+        scores = (
+            jnp.einsum("bqnr,btr->bqnt", q_abs, cc,
+                       preferred_element_type=jnp.float32)
+            + jnp.einsum("bqnd,btd->bqnt", q_rope, ckr,
+                         preferred_element_type=jnp.float32)
+        ) / jnp.sqrt(jnp.float32(dn + dr))
+        mask = (decode_pos[:, None, None, None]
+                >= jnp.arange(t)[None, None, None, :])
+        scores = jnp.where(mask, scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        ctx_c = jnp.einsum("bqnt,btr->bqnr", w.astype(cc.dtype), cc,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
     out = jnp.einsum("bqnr,rnd->bqnd", ctx_c, w_v,
                      preferred_element_type=jnp.float32).astype(x.dtype)
     y = ctx.gemm(out.reshape(b, s, nh * dv), p["wo"], site=5, role="attn_o")

@@ -28,6 +28,16 @@ Adapter protocol (duck-typed; all shapes static except array data):
         depend only on B (the serving engine's bucket-grid compile fix).
   prefill_buffer(num_layers, max_len) -> zeroed chunked-prefill buffer
 
+Optional fused-read surface (quantized adapters only): adapters that carry
+``read_backend == "fused"`` plus ``update_attend`` / ``update_span_attend``
+let the attention layers skip the dense view entirely — the adapter appends
+the new token(s) and runs paged flash-decode attention directly over the
+stored page payload (``repro.kernels.paged_attention``), with
+``fused_read_ok(softmax_dtype)`` / ``note_fallback(reason)`` implementing
+the loud counted-fallback contract (``quant/paged_attn_fallback``). Dense
+adapters expose none of these, so ``getattr(adapter, "read_backend",
+"dense")`` keeps them on the classic update-then-attend path.
+
 Prefix-cache hooks (extract/write/load page payloads) ride along on the
 same adapters — see the serving engine (``repro.serve.engine``).
 """

@@ -94,6 +94,10 @@ class EngineConfig:
     n_slots: int = 4                 # fixed decode batch width
     max_len: int = 256               # per-slot cache horizon (prompt + gen)
     kv_cache: str = "bf16"           # bf16 | fp4 | fp4-centered
+    kv_read: str = "fused"           # quantized-cache decode read path:
+                                     # fused (attend off the stored payload,
+                                     # kernels/paged_attention) | dense
+                                     # (_dense_view reference reads)
     page_size: int = 64              # tokens per cache page (quantized
                                      # payload granularity AND prefix-cache
                                      # sharing granularity)
@@ -153,7 +157,24 @@ class Engine:
                 f"frontends ({cfg.name}: input_mode={cfg.input_mode!r}) "
                 "have no prefill wiring here")
         self.config = config
-        self.adapter = make_adapter(cfg, config.kv_cache, config.page_size)
+        if config.kv_read not in ("fused", "dense"):
+            raise ValueError(
+                f"kv_read must be 'fused' or 'dense', got {config.kv_read!r}")
+        self.adapter = make_adapter(cfg, config.kv_cache, config.page_size,
+                                    read_backend=config.kv_read)
+        # Effective decode read path: "fused" only when the adapter actually
+        # carries the paged-attention read methods (bf16 caches stay dense).
+        self._kv_read = (config.kv_read
+                         if getattr(self.adapter, "read_backend", "dense")
+                         == "fused" and hasattr(self.adapter, "update_attend")
+                         else "dense")
+        # Per-token KV bytes the decode step streams per layer: the packed
+        # payload when reading fused, the dense-equivalent otherwise.
+        self._kv_read_bytes = self.adapter.bytes_per_token()
+        if self._kv_read != "fused":
+            dense_fn = getattr(self.adapter, "dense_equiv_bytes_per_token",
+                               self.adapter.bytes_per_token)
+            self._kv_read_bytes = dense_fn()
         # Fresh Model instance so the caller's adapter choice is untouched.
         self.model = Model(cfg, model.remat_policy, cache_adapter=self.adapter)
         self.params = params
@@ -242,9 +263,14 @@ class Engine:
         if self.telemetry is not None:
             self.telemetry.reset()
             kw["hub"] = self.telemetry
+        dense_fn = getattr(self.adapter, "dense_equiv_bytes_per_token",
+                           self.adapter.bytes_per_token)
         self.metrics = ServeMetrics(
             cache_bytes_per_token=self.adapter.bytes_per_token(),
-            num_layers=self.model.cfg.num_layers, **kw,
+            num_layers=self.model.cfg.num_layers,
+            kv_read=self._kv_read,
+            kv_read_bytes_per_token=self._kv_read_bytes,
+            kv_dense_equiv_bytes_per_token=dense_fn(), **kw,
         )
         self.metrics.prefill_compiles = len(self._prefill_shapes)
         self.metrics.decode_compiles = len(self._decode_shapes)
@@ -377,12 +403,18 @@ class Engine:
                 budget -= self._prefill_chunk_step(st, budget, finished)
 
             n_active = int(self._active.sum())
+            # KV bytes this step's attention streams from the cache: every
+            # active slot reads its whole committed context in every layer.
+            # The span arg makes the read-path switch visible in Perfetto.
+            kv_bytes = (float(self._pos[self._active].sum() + n_active)
+                        * self._kv_read_bytes * self.model.cfg.num_layers)
             if n_active and self.drafter is not None:
                 self._speculative_step(finished)
             elif n_active:
                 self._track_compile(self._decode_shapes,
                                     ("decode", self.config.n_slots))
-                with self._span("engine.decode", n_active=n_active):
+                with self._span("engine.decode", n_active=n_active,
+                                kv_read=self._kv_read, kv_bytes=kv_bytes):
                     nxt, self.caches = self._decode(
                         self.params, self.caches,
                         jnp.asarray(self._tokens), jnp.asarray(self._pos),
@@ -413,11 +445,13 @@ class Engine:
 
         self._step_idx += 1
         latency = self.metrics.now() - t_start
-        self.metrics.record_step(latency, n_active, self.scheduler.occupancy)
+        self.metrics.record_step(latency, n_active, self.scheduler.occupancy,
+                                 kv_read_bytes=kv_bytes if n_active else 0.0)
         self.metrics.hub.emit(
             "serve.step", step=self._step_idx - 1, latency_s=latency,
             n_active=n_active, occupancy=self.scheduler.occupancy,
-            finished=len(finished))
+            finished=len(finished), kv_read=self._kv_read,
+            kv_read_bytes=kv_bytes if n_active else 0.0)
         return finished
 
     def _track_compile(self, shapes: set, key) -> None:

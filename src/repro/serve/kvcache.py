@@ -28,6 +28,7 @@ when centered) vs 2 B/elem for bf16 — ~0.28-0.30x.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import OrderedDict
 from typing import Any, Dict, Optional, Tuple
 
@@ -44,8 +45,35 @@ from repro.core.nvfp4 import (
     quantize_block_scales,
     unpack_nibbles,
 )
+from repro.kernels.paged_attention import paged_attend_gqa, paged_attend_mla
 
 _EPS = 1e-30
+
+
+# --------------------------------------------------------------------------
+# Loud counted fallback (mirrors core/pipeline's quant/fused_fallback): a
+# decode step the fused paged-attention read was asked to serve went through
+# the dense `_dense_view` path instead. Counted per trace into telemetry,
+# warned once per reason.
+# --------------------------------------------------------------------------
+
+_PAGED_ATTN_WARNED: set = set()
+
+
+def reset_paged_attn_fallback_warnings() -> None:
+    """Clear the once-per-reason warning dedup (tests)."""
+    _PAGED_ATTN_WARNED.clear()
+
+
+def _paged_attn_fallback(reason: str) -> None:
+    from repro.obs.telemetry import global_hub
+    global_hub().count("quant/paged_attn_fallback")
+    if reason not in _PAGED_ATTN_WARNED:
+        _PAGED_ATTN_WARNED.add(reason)
+        warnings.warn(
+            f"paged FP4 attention fell back to the dense-view read path: "
+            f"{reason}. Counted in telemetry as quant/paged_attn_fallback.",
+            stacklevel=3)
 
 
 # --------------------------------------------------------------------------
@@ -139,6 +167,10 @@ class QuantizedKVAdapter:
     centered: bool = True
     block_size: int = BLOCK_SIZE
     dtype_name: str = "bfloat16"
+    # Decode read path: "fused" attends straight off the stored payload via
+    # kernels/paged_attention (no dense KV tensor); "dense" keeps the
+    # _dense_view reference reads. Writes are identical either way.
+    read_backend: str = "fused"
 
     streams = ("k", "v")
 
@@ -146,6 +178,16 @@ class QuantizedKVAdapter:
         assert self.head_dim % self.block_size == 0, (
             f"head_dim {self.head_dim} not divisible by NVFP4 block "
             f"{self.block_size} — quantized KV cache unsupported")
+        assert self.read_backend in ("fused", "dense"), self.read_backend
+
+    # ------------------------------------------------- fused-read policy
+    def fused_read_ok(self, softmax_dtype) -> bool:
+        """The fused kernel accumulates its online softmax in float32; a
+        non-f32 softmax policy cannot be honored and must fall back."""
+        return jnp.dtype(softmax_dtype) == jnp.float32
+
+    def note_fallback(self, reason: str) -> None:
+        _paged_attn_fallback(reason)
 
     @property
     def kind(self) -> str:
@@ -246,19 +288,39 @@ class QuantizedKVAdapter:
         return new
 
     def _dense_view(self, st, pidx):
-        """Dense attendable (b, cap, 2, n, hd) view: dequantize committed
-        pages, overlay the exact bf16 tail over the current page's span
-        (stale tail entries land at future positions and are causally
-        masked)."""
+        """Dense attendable (b, cap, 2, n, hd) float32 view: dequantize the
+        *live* committed pages, overlay the exact bf16 tail over the current
+        page's span (stale tail entries land at future positions and are
+        causally masked).
+
+        Pages past ``max(pidx)`` have never been committed; the page loop's
+        dynamic trip count skips them, so a short context stops paying
+        dequant for empty capacity. Views are float32 (not bf16) so that
+        this reference path and the fused read differ only by float32
+        reassociation — bf16 views would round ``res + mu`` to 2^-9 and the
+        two paths could disagree at the greedy-argmax level."""
         p = self.page_size
-        deq = decode_pages(st["codes"], st["scales"], st["pamax"],
-                           self._mean_or_none(st), dtype=self.dtype,
-                           block_size=self.block_size)
-        b, n_pages = deq.shape[:2]
+        b, n_pages = st["codes"].shape[:2]
         cap = n_pages * p
-        dense = deq.reshape((b, cap) + deq.shape[3:])              # (b,cap,2,n,hd)
+        mean = self._mean_or_none(st)
+        dense = jnp.zeros((b, cap, 2, self.num_kv_heads, self.head_dim),
+                          jnp.float32)
+
+        def body(j, dense):
+            deq = decode_pages(
+                jnp.take(st["codes"], j, axis=1),
+                jnp.take(st["scales"], j, axis=1),
+                jnp.take(st["pamax"], j, axis=1),
+                None if mean is None else jnp.take(mean, j, axis=1),
+                dtype=jnp.float32, block_size=self.block_size)
+            return jax.lax.dynamic_update_slice_in_dim(dense, deq, j * p,
+                                                       axis=1)
+
+        n_live = jnp.minimum(jnp.max(pidx), n_pages - 1) + 1
+        dense = jax.lax.fori_loop(0, n_live, body, dense)
         span = pidx[:, None] * p + jnp.arange(p)[None, :]          # (b,P)
-        return dense.at[jnp.arange(b)[:, None], span].set(st["tail"])
+        return dense.at[jnp.arange(b)[:, None], span].set(
+            st["tail"].astype(jnp.float32))
 
     def update(self, cache, toks, pos):
         """Write one token per slot at ``pos``; return dense K/V views."""
@@ -268,6 +330,48 @@ class QuantizedKVAdapter:
         new = self._append(cache, tok, pos, jnp.ones((b,), bool))
         dense = self._dense_view(new, pos // self.page_size)
         return (dense[:, :, 0], dense[:, :, 1]), new
+
+    # ------------------------------------------------- fused payload reads
+    def update_attend(self, cache, toks, pos, q, *, backend: str = "auto"):
+        """Plain-decode append + attend with NO dense KV materialization.
+
+        Identical write path to :meth:`update` (the shared ``_append``), but
+        the read goes through ``kernels/paged_attention``: committed pages
+        are consumed as stored (packed codes + block scales + amax + mean,
+        the mean folded analytically) and the bf16 tail page is overlaid
+        exactly. ``q``: (b, 1, n_heads, hd) post-RoPE queries. Returns
+        (attended (b, 1, n_heads, hd) float32, new_cache).
+        """
+        k_tok, v_tok = toks
+        b = k_tok.shape[0]
+        tok = jnp.stack([k_tok, v_tok], axis=1).astype(self.dtype)
+        new = self._append(cache, tok, pos, jnp.ones((b,), bool))
+        out = paged_attend_gqa(
+            q, new["codes"], new["scales"], new["pamax"],
+            self._mean_or_none(new), new["tail"], pos,
+            page_size=self.page_size, block_size=self.block_size,
+            backend=backend)
+        return out, new
+
+    def update_span_attend(self, cache, toks, pos, q, *,
+                           backend: str = "auto"):
+        """Speculative verify span write + fused attend (no dense KV).
+
+        Mirrors :meth:`update_span`: the S-token span lands only in the
+        ``scratch`` leaf and is attended as its own causally-masked exact
+        block alongside the stored pages and the tail. ``q``: (b, S,
+        n_heads, hd). Returns (attended (b, S, n_heads, hd) f32, new_cache).
+        """
+        k_tok, v_tok = toks                                # (b, S, n, hd)
+        tok = jnp.stack([k_tok, v_tok], axis=2).astype(self.dtype)
+        new = dict(cache)
+        new["scratch"] = tok
+        out = paged_attend_gqa(
+            q, cache["codes"], cache["scales"], cache["pamax"],
+            self._mean_or_none(cache), cache["tail"], pos,
+            page_size=self.page_size, block_size=self.block_size,
+            span=tok, backend=backend)
+        return out, new
 
     # ------------------------------------------------- speculative span
     def update_span(self, cache, toks, pos):
@@ -422,6 +526,304 @@ class QuantizedKVAdapter:
         return float(self.page_size * 2 * self.num_kv_heads * self.head_dim
                      * self.dtype.itemsize)
 
+    def dense_equiv_bytes_per_token(self) -> float:
+        """Bytes/token a dense bf16 cache would read for the same context
+        (k+v, one layer) — the roofline the fused read path is measured
+        against."""
+        return float(2 * self.num_kv_heads * self.head_dim
+                     * self.dtype.itemsize)
+
+
+# --------------------------------------------------------------------------
+# Quantized MLA latent adapter: FP4 c pages + exact kr ring
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedLatentAdapter:
+    """Paged NVFP4 cache for MLA absorbed decode.
+
+    MLA's compressed latent ``c`` doubles as score key and value stream, so
+    it is the only thing worth quantizing: pages of ``c`` get the same
+    mean-centered two-level NVFP4 payload as the GQA K/V pages (singleton
+    stream/head axes through the shared :func:`encode_pages` codec). The
+    small per-token RoPE key ``kr`` stays an exact bf16 ring — its head dim
+    (``qk_rope_head_dim``) is not 16-block-alignable in the reduced configs
+    and it is a few percent of the latent's bytes.
+
+    Decode reads go through ``kernels/paged_attention.paged_attend_mla``
+    when ``read_backend == "fused"`` (payload as stored, analytic mean
+    fold) or the float32 ``_dense_view`` otherwise. The engine's MLA path
+    is whole-prompt prefill without speculation or prefix caching, so the
+    span/page-payload protocol hooks intentionally raise.
+    """
+
+    kv_lora_rank: int
+    rope_head_dim: int
+    page_size: int = 64
+    centered: bool = True
+    block_size: int = BLOCK_SIZE
+    dtype_name: str = "bfloat16"
+    read_backend: str = "fused"
+
+    streams = ("c", "kr")
+
+    def __post_init__(self):
+        assert self.kv_lora_rank % self.block_size == 0, (
+            f"kv_lora_rank {self.kv_lora_rank} not divisible by NVFP4 "
+            f"block {self.block_size} — quantized latent cache unsupported")
+        assert self.read_backend in ("fused", "dense"), self.read_backend
+
+    @property
+    def kind(self) -> str:
+        return "fp4-centered" if self.centered else "fp4"
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.dtype_name)
+
+    def n_pages(self, max_len: int) -> int:
+        return -(-max_len // self.page_size)
+
+    def capacity(self, max_len: int) -> int:
+        return self.n_pages(max_len) * self.page_size
+
+    def fused_read_ok(self, softmax_dtype) -> bool:
+        return jnp.dtype(softmax_dtype) == jnp.float32
+
+    def note_fallback(self, reason: str) -> None:
+        _paged_attn_fallback(reason)
+
+    def _shapes(self, batch: int, max_len: int) -> Dict[str, Tuple]:
+        np_, p = self.n_pages(max_len), self.page_size
+        r, dr, bs = self.kv_lora_rank, self.rope_head_dim, self.block_size
+        shapes = {
+            "codes": ((batch, np_, p, r // 2), jnp.uint8),
+            "scales": ((batch, np_, p, r // bs), jnp.float8_e4m3fn),
+            "pamax": ((batch, np_), jnp.float32),
+            "tail": ((batch, p, r), self.dtype),
+            "kr": ((batch, np_ * p, dr), self.dtype),
+        }
+        if self.centered:
+            shapes["mean"] = ((batch, np_, r), self.dtype)
+        return shapes
+
+    def layer_spec(self, batch: int, max_len: int) -> Dict[str, Any]:
+        return {k: jax.ShapeDtypeStruct(s, d)
+                for k, (s, d) in self._shapes(batch, max_len).items()}
+
+    def blank(self, num_layers: int, batch: int, max_len: int):
+        return {k: jnp.zeros((num_layers,) + s, d)
+                for k, (s, d) in self._shapes(batch, max_len).items()}
+
+    # ------------------------------------------------------------ codec
+    # The latent is a single stream with no head axis; singleton axes route
+    # it through the exact same encode/decode arithmetic as the K/V pages.
+    def _encode(self, pages):
+        """(..., P, r) -> (codes (..., P, r//2), scales, pamax (...,),
+        mean (..., r))."""
+        codes, scales, pamax, mu = encode_pages(
+            pages[..., None, None, :], centered=self.centered,
+            block_size=self.block_size)
+        return (codes[..., 0, 0, :], scales[..., 0, 0, :],
+                pamax[..., 0], mu[..., 0, 0, :])
+
+    def _decode(self, codes, scales, pamax, mean):
+        """One page batch (b, P, r//2)+... -> (b, P, r) float32."""
+        deq = decode_pages(
+            codes[:, :, None, None, :], scales[:, :, None, None, :],
+            pamax[:, None],
+            None if mean is None else mean[:, None, None, :],
+            dtype=jnp.float32, block_size=self.block_size)
+        return deq[:, :, 0, 0]
+
+    def _mean_or_none(self, cache):
+        return cache["mean"] if self.centered else None
+
+    @property
+    def _page_keys(self):
+        return ("codes", "scales", "pamax") + (
+            ("mean",) if self.centered else ())
+
+    # ------------------------------------------------------------ ops
+    def _append(self, st, c_tok, kr_tok, pos, active):
+        """One latent append: kr into the exact ring, c into the bf16 tail,
+        page-encode on tail fill — the same write discipline as
+        ``QuantizedKVAdapter._append``."""
+        b = c_tok.shape[0]
+        p = self.page_size
+        bidx = jnp.arange(b)
+        tidx = pos % p
+        pidx = pos // p
+
+        m1 = active[:, None]
+        kr = st["kr"].at[bidx, pos].set(
+            jnp.where(m1, kr_tok.astype(self.dtype), st["kr"][bidx, pos]))
+        tail = st["tail"].at[bidx, tidx].set(
+            jnp.where(m1, c_tok.astype(self.dtype), st["tail"][bidx, tidx]))
+
+        commit = active & (tidx == p - 1)
+        page_keys = self._page_keys
+
+        def commit_pages(ops):
+            codes_new, scales_new, pamax_new, mu_new = self._encode(tail)
+            news = {"codes": codes_new, "scales": scales_new,
+                    "pamax": pamax_new}
+            if self.centered:
+                news["mean"] = mu_new.astype(self.dtype)
+
+            def scatter(leaf, new):
+                cur = leaf[bidx, pidx]
+                m = commit.reshape((b,) + (1,) * (cur.ndim - 1))
+                return leaf.at[bidx, pidx].set(jnp.where(m, new, cur))
+
+            return tuple(scatter(leaf, news[k])
+                         for k, leaf in zip(page_keys, ops))
+
+        committed = jax.lax.cond(
+            jnp.any(commit), commit_pages, lambda ops: ops,
+            tuple(st[k] for k in page_keys))
+
+        new = dict(st)
+        new["kr"] = kr
+        new["tail"] = tail
+        new.update(zip(page_keys, committed))
+        return new
+
+    def _dense_view(self, st, pidx):
+        """(b, cap, r) float32 latent view: live committed pages dequantized
+        (dynamic page-loop bound, as in ``QuantizedKVAdapter._dense_view``)
+        with the exact tail overlaid on the current page's span."""
+        p = self.page_size
+        b, n_pages = st["codes"].shape[:2]
+        cap = n_pages * p
+        mean = self._mean_or_none(st)
+        dense = jnp.zeros((b, cap, self.kv_lora_rank), jnp.float32)
+
+        def body(j, dense):
+            deq = self._decode(
+                jnp.take(st["codes"], j, axis=1),
+                jnp.take(st["scales"], j, axis=1),
+                jnp.take(st["pamax"], j, axis=1),
+                None if mean is None else jnp.take(mean, j, axis=1))
+            return jax.lax.dynamic_update_slice_in_dim(dense, deq, j * p,
+                                                       axis=1)
+
+        n_live = jnp.minimum(jnp.max(pidx), n_pages - 1) + 1
+        dense = jax.lax.fori_loop(0, n_live, body, dense)
+        span = pidx[:, None] * p + jnp.arange(p)[None, :]
+        return dense.at[jnp.arange(b)[:, None], span].set(
+            st["tail"].astype(jnp.float32))
+
+    def update(self, cache, toks, pos):
+        """Append one latent token per slot; return dense (c, kr) views."""
+        c_tok, kr_tok = toks
+        b = c_tok.shape[0]
+        new = self._append(cache, c_tok, kr_tok, pos, jnp.ones((b,), bool))
+        cc = self._dense_view(new, pos // self.page_size)
+        return (cc, new["kr"]), new
+
+    def update_attend(self, cache, toks, pos, q_abs, q_rope, *,
+                      sm_scale: float):
+        """Append + absorbed-attend straight off the stored latent payload.
+
+        ``q_abs``: (b, n_heads, rkv) absorbed queries; ``q_rope``: (b,
+        n_heads, dr). Returns (attended latent (b, n_heads, rkv) float32,
+        new_cache)."""
+        c_tok, kr_tok = toks
+        b = c_tok.shape[0]
+        new = self._append(cache, c_tok, kr_tok, pos, jnp.ones((b,), bool))
+        ctx = paged_attend_mla(
+            q_abs, q_rope, new["codes"], new["scales"], new["pamax"],
+            self._mean_or_none(new), new["kr"], new["tail"], pos,
+            page_size=self.page_size, block_size=self.block_size,
+            sm_scale=sm_scale)
+        return ctx, new
+
+    # The engine serves MLA through whole-prompt prefill without
+    # speculation or prefix caching (see Engine.__init__), so these
+    # protocol hooks are structurally unreachable.
+    def update_span(self, cache, toks, pos):
+        raise NotImplementedError(
+            "speculative spans require the chunked GQA serving path")
+
+    def commit_span(self, caches, pos, n_commit):
+        raise NotImplementedError(
+            "speculative spans require the chunked GQA serving path")
+
+    def prefill_buffer(self, num_layers: int, max_len: int):
+        raise NotImplementedError(
+            "MLA serves via whole-prompt padded prefill, not chunked "
+            "context buffers")
+
+    def extract_page_payload(self, caches, slot, page_idx, page_size):
+        raise NotImplementedError(
+            "prefix-cache page sharing requires the chunked GQA path")
+
+    def write_page_payload(self, caches, slot, start, payload):
+        raise NotImplementedError(
+            "prefix-cache page sharing requires the chunked GQA path")
+
+    def insert_from_buffer(self, caches, buf, slot, length):
+        """Quantize + place one whole-prompt prefill into ``slot``.
+
+        ``buf``: {"c": (L, 1, T, rkv), "kr": (L, 1, T, dr)} from
+        ``prefill_padded``, where T is the power-of-two prompt bucket —
+        cropped or zero-padded to the slot capacity here (unlike the GQA
+        chunked buffer, T need not equal capacity)."""
+        p = self.page_size
+        nl, npg = caches["codes"].shape[0], caches["codes"].shape[2]
+        cap = npg * p
+
+        def fit(src):                                  # (L, T, *f) -> cap
+            t = src.shape[1]
+            if t >= cap:
+                src = src[:, :cap]
+            else:
+                src = jnp.pad(src, [(0, 0), (0, cap - t)]
+                              + [(0, 0)] * (src.ndim - 2))
+            mask = (jnp.arange(cap) < length).reshape(
+                (1, cap) + (1,) * (src.ndim - 2))
+            return jnp.where(mask, src, 0)
+
+        c = fit(buf["c"][:, 0]).astype(self.dtype)     # (L, cap, r)
+        kr = fit(buf["kr"][:, 0]).astype(self.dtype)
+        cp = c.reshape(nl, npg, p, self.kv_lora_rank)
+        codes, scales, pamax, mu = self._encode(cp)
+        n_full = length // p
+
+        def mask_pages(a):
+            pv = (jnp.arange(npg) < n_full).reshape(
+                (1, npg) + (1,) * (a.ndim - 2))
+            return jnp.where(pv, a, jnp.zeros_like(a))
+
+        rows = {"codes": mask_pages(codes), "scales": mask_pages(scales),
+                "pamax": mask_pages(pamax), "kr": kr}
+        if self.centered:
+            rows["mean"] = mask_pages(mu.astype(self.dtype))
+        tail_c = jnp.take(cp, jnp.clip(n_full, 0, npg - 1), axis=1)
+        rem = length - n_full * p
+        tmask = (jnp.arange(p) < rem).reshape(1, p, 1)
+        rows["tail"] = jnp.where(tmask, tail_c, 0).astype(self.dtype)
+        return {k: caches[k].at[:, slot].set(rows[k]) for k in caches}
+
+    # ------------------------------------------------------------ cost
+    def bytes_per_token(self) -> float:
+        """Marginal storage per committed token (c pages + kr ring, one
+        layer)."""
+        r, p, bs = self.kv_lora_rank, self.page_size, self.block_size
+        bytes_ = r / 2 + r / bs + 4.0 / p
+        if self.centered:
+            bytes_ += r * self.dtype.itemsize / p
+        return float(bytes_ + self.rope_head_dim * self.dtype.itemsize)
+
+    def overhead_bytes_per_slot(self) -> float:
+        return float(self.page_size * self.kv_lora_rank
+                     * self.dtype.itemsize)
+
+    def dense_equiv_bytes_per_token(self) -> float:
+        return float((self.kv_lora_rank + self.rope_head_dim)
+                     * self.dtype.itemsize)
+
 
 # --------------------------------------------------------------------------
 # Shared-prefix page cache: content-addressed, ref-counted committed pages
@@ -522,18 +924,35 @@ class PagePool:
                 over -= 1
 
 
-def make_adapter(cfg, kv_cache: str, page_size: int = 64):
+def make_adapter(cfg, kv_cache: str, page_size: int = 64,
+                 read_backend: str = "fused"):
     """Build the cache adapter for a serving cache mode.
 
     kv_cache: ``bf16`` (dense), ``fp4`` (paged NVFP4), ``fp4-centered``
     (paged NVFP4 with the per-page mean split — the paper-informed mode).
+    read_backend (quantized modes only): ``fused`` attends straight off the
+    stored payload via ``kernels/paged_attention``; ``dense`` keeps the
+    ``_dense_view`` reference reads (by-design, not counted as a fallback).
     """
     from repro.models.cache import default_adapter
 
     if kv_cache == "bf16":
         return default_adapter(cfg)
     if kv_cache in ("fp4", "fp4-centered"):
-        if cfg.family in ("ssm", "hybrid") or cfg.attention != "gqa":
+        if cfg.family in ("ssm", "hybrid"):
+            raise NotImplementedError(
+                f"quantized KV cache requires a GQA attention cache; "
+                f"{cfg.name} is family={cfg.family}/attention={cfg.attention}")
+        if cfg.attention == "mla":
+            return QuantizedLatentAdapter(
+                kv_lora_rank=cfg.kv_lora_rank,
+                rope_head_dim=cfg.qk_rope_head_dim,
+                page_size=page_size,
+                centered=kv_cache == "fp4-centered",
+                dtype_name=cfg.compute_dtype,
+                read_backend=read_backend,
+            )
+        if cfg.attention != "gqa":
             raise NotImplementedError(
                 f"quantized KV cache requires a GQA attention cache; "
                 f"{cfg.name} is family={cfg.family}/attention={cfg.attention}")
@@ -543,5 +962,6 @@ def make_adapter(cfg, kv_cache: str, page_size: int = 64):
             page_size=page_size,
             centered=kv_cache == "fp4-centered",
             dtype_name=cfg.compute_dtype,
+            read_backend=read_backend,
         )
     raise ValueError(f"unknown kv cache mode {kv_cache!r}")

@@ -28,6 +28,13 @@ from .scheduler import Request
 class ServeMetrics:
     cache_bytes_per_token: float = 0.0    # per layer, set by the engine
     num_layers: int = 0
+    # Decode read path (set by the engine): "fused" reads the committed page
+    # payload as stored (kernels/paged_attention), "dense" goes through the
+    # _dense_view reference. kv_read_bytes_per_token is per layer — the
+    # packed payload when fused, the dense-equivalent otherwise.
+    kv_read: str = "dense"
+    kv_read_bytes_per_token: float = 0.0
+    kv_dense_equiv_bytes_per_token: float = 0.0
     hub: Telemetry = dataclasses.field(default_factory=Telemetry)
 
     finished: List[Request] = dataclasses.field(default_factory=list)
@@ -48,13 +55,22 @@ class ServeMetrics:
         return time.perf_counter()
 
     # -------------------------------------------------------------- recording
-    def record_step(self, latency_s: float, n_active: int, occupancy: float):
+    def record_step(self, latency_s: float, n_active: int, occupancy: float,
+                    kv_read_bytes: float = 0.0):
         if self._t0 is None:
             self._t0 = time.perf_counter() - latency_s
         self._t1 = time.perf_counter()
         self.hub.observe("serve/step_latency_s", latency_s)
         self.hub.observe("serve/step_active", n_active)
         self.hub.observe("serve/step_occupancy", occupancy)
+        if kv_read_bytes > 0.0:
+            # decode-bandwidth gauge: bytes of KV payload the step's
+            # attention streams, and the achieved read rate
+            self.hub.observe("serve/decode_kv_read_bytes", kv_read_bytes)
+            if latency_s > 0.0:
+                gbps = kv_read_bytes / latency_s / 1e9
+                self.hub.gauge("serve/decode_kv_read_gbps", gbps)
+                self.hub.observe("serve/decode_kv_read_gbps", gbps)
 
     def record_finished(self, req: Request):
         self.finished.append(req)
@@ -126,6 +142,14 @@ class ServeMetrics:
             "p95_step_ms": float(np.percentile(lat, 95) * 1e3),
             "mean_occupancy": float(np.mean(self.step_occupancy or [0.0])),
             "cache_bytes_per_token": self.cache_bytes_per_token * self.num_layers,
+            # decode read path: bytes/token the attention step actually
+            # streams vs what a dense bf16 read would, all layers included
+            "kv_read_fused": 1.0 if self.kv_read == "fused" else 0.0,
+            "kv_bytes_read_per_token":
+                self.kv_read_bytes_per_token * self.num_layers,
+            "kv_dense_equiv_bytes_per_token":
+                self.kv_dense_equiv_bytes_per_token * self.num_layers,
+            "decode_kv_read_gbps": h.mean("serve/decode_kv_read_gbps"),
             "prefill_tokens_computed": c("serve/prefill_tokens_computed"),
             "prefill_tokens_padded": c("serve/prefill_tokens_padded"),
             "prefix_hit_tokens": c("serve/prefix_hit_tokens"),
@@ -159,4 +183,9 @@ class ServeMetrics:
             # (unsupported shape/config) — the fused analogue of the
             # skipped-Hadamard downgrade signal
             "fused_fallback": global_hub().counter("quant/fused_fallback"),
+            # fused paged-attention reads that fell back to the dense view
+            # (unsupported softmax dtype etc.) — loud, counted, and surfaced
+            # by quantwatch like the other two downgrade signals
+            "paged_attn_fallback":
+                global_hub().counter("quant/paged_attn_fallback"),
         }
