@@ -4,7 +4,21 @@ reduce wall time per comm recipe vs the bf16 baseline.
 The W4A4G4 wire contract: an ``nvfp4_centered`` bucket ships 4-bit codes +
 one E4M3 scale per 16-block + the fp32 exact mean, which must land at
 <= 0.30x the bytes of a plain bf16 all-reduce. Wall times are the jitted
-4-virtual-shard sharded reduce on CPU (relative comparisons only).
+4-virtual-shard sharded reduce on CPU (relative comparisons only), timed
+with interleaved arms (``time_arms``) so machine drift hits every recipe
+equally; ratios use min-of-iters.
+
+The nvfp4 recipes are timed twice — once per wire representation:
+
+* ``packed``  — ``encode_bucket`` emits a :class:`WirePacket` (E2M1
+  nibbles + E4M3 block scales + amax + mean) and ``fold_packet_shards``
+  decodes inside the fold, reading ~0.56*S bytes/elem.
+* ``decoded`` — the QDQ-simulated fp32 wire folded by ``fold_shards``,
+  reading 4*S bytes/elem regardless of the wire format.
+
+``wire_speedup = decoded_min / packed_min`` (>= 1.0 is the nightly gate:
+the packed wire must pay for its bits). ``reduce_us``/``time_vs_bf16``
+for nvfp4 rows report the packed wire — the shipping default.
 
 Rows (name,us_per_call,derived):
   comm_reduce_<recipe>   jitted 4-shard encode+reduce    bytes ratio vs bf16
@@ -19,12 +33,13 @@ import os
 import jax
 import jax.numpy as jnp
 
-from .common import emit, time_jitted
+from .common import emit, time_arms
 
 ART_DIR = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "artifacts")
 
 RECIPES = ["fp32", "bf16", "int8_ef", "nvfp4", "nvfp4_centered"]
+PACKED_RECIPES = ("nvfp4", "nvfp4_centered")
 SHARDS = 4
 
 
@@ -45,53 +60,80 @@ def run() -> None:
         jax.tree.map(lambda a, i=i: a + 0.01 * i, grads) for i in range(SHARDS)
     ]
 
-    results = {"shards": SHARDS, "recipes": {}}
-    baseline_us = None
+    arms = {}
+    meta = {}
     for name in RECIPES:
         layout = coll.build_layout(grads, default_recipe=name,
                                    bucket_mb=1.0)
-        ws = layout.wire_summary()
+        meta[name] = layout.wire_summary()
         state = coll.init_comm_state(grads, default_recipe=name,
                                      bucket_mb=1.0, dp_shards=SHARDS)
         ef0 = state.get("comm", {}).get("ef", {})
 
-        def reduce_fn(shard_trees, ef):
-            # the sharded train step's wire semantics minus the mesh, via
-            # the same collectives helpers it uses (encode_shard_buckets +
-            # fold_shards — shared implementation, no drift)
-            stacks = {b.name: [] for b in layout.buckets}
-            new_ef = dict(ef)
-            for s, tree in enumerate(shard_trees):
-                flats = coll.bucketize(layout, tree)
-                rows = {n: ef[n][s] for n in ef} if ef else None
-                wires, ef_s = coll.encode_shard_buckets(layout, flats, rows)
-                for n, w in wires.items():
-                    stacks[n].append(w)
-                for n, e in ef_s.items():
-                    new_ef[n] = new_ef[n].at[s].set(e)
-            acc = {n: coll.fold_shards(jnp.stack(ws), SHARDS)
-                   for n, ws in stacks.items()}
-            return coll.debucketize(layout, acc, grads), new_ef
+        def make_reduce(layout=layout, packed=False):
+            def reduce_fn(shard_trees, ef):
+                # the sharded train step's wire semantics minus the mesh,
+                # via the same collectives helpers it uses
+                # (encode_shard_buckets + fold_shards/fold_packet_shards —
+                # shared implementation, no drift)
+                stacks = {b.name: [] for b in layout.buckets}
+                new_ef = dict(ef)
+                for s, tree in enumerate(shard_trees):
+                    flats = coll.bucketize(layout, tree)
+                    rows = {n: ef[n][s] for n in ef} if ef else None
+                    wires, ef_s = coll.encode_shard_buckets(layout, flats,
+                                                            rows,
+                                                            packed=packed)
+                    for n, w in wires.items():
+                        stacks[n].append(w)
+                    for n, e in ef_s.items():
+                        new_ef[n] = new_ef[n].at[s].set(e)
+                acc = {}
+                for b in layout.buckets:
+                    ws = stacks[b.name]
+                    if isinstance(ws[0], coll.WirePacket):
+                        pk = jax.tree.map(lambda *xs: jnp.stack(xs), *ws)
+                        acc[b.name] = coll.fold_packet_shards(
+                            coll.get_comm_recipe(b.recipe), pk, SHARDS,
+                            n=b.size)
+                    else:
+                        acc[b.name] = coll.fold_shards(jnp.stack(ws), SHARDS)
+                return coll.debucketize(layout, acc, grads), new_ef
+            return reduce_fn
 
-        fn = jax.jit(reduce_fn)
-        t = time_jitted(fn, shard_grads, ef0)
-        us = t["mean_s"] * 1e6
-        if name == "bf16":
-            baseline_us = us
-        results["recipes"][name] = {
-            "reduce_us": us,
+        args = (shard_grads, ef0)
+        if name in PACKED_RECIPES:
+            arms[f"{name}:packed"] = (jax.jit(make_reduce(packed=True)), args)
+            arms[f"{name}:decoded"] = (jax.jit(make_reduce()), args)
+        else:
+            arms[name] = (jax.jit(make_reduce()), args)
+
+    stats = time_arms(arms)
+    baseline_us = stats["bf16"]["min_s"] * 1e6
+
+    results = {"shards": SHARDS, "timing": "time_arms/min-of-iters",
+               "recipes": {}}
+    for name in RECIPES:
+        ws = meta[name]
+        row = {
             "bytes_per_step": ws["total_bytes_per_step"],
             "ratio_vs_bf16": ws["ratio_vs_bf16"],
             "num_buckets": ws["num_buckets"],
         }
-        emit(f"comm_reduce_{name}", us,
-             f"bytes_ratio_vs_bf16={ws['ratio_vs_bf16']:.3f};"
-             f"buckets={ws['num_buckets']}")
-
-    for name in RECIPES:
-        if baseline_us:
-            results["recipes"][name]["time_vs_bf16"] = (
-                results["recipes"][name]["reduce_us"] / baseline_us)
+        derived = (f"bytes_ratio_vs_bf16={ws['ratio_vs_bf16']:.3f};"
+                   f"buckets={ws['num_buckets']}")
+        if name in PACKED_RECIPES:
+            packed_us = stats[f"{name}:packed"]["min_s"] * 1e6
+            decoded_us = stats[f"{name}:decoded"]["min_s"] * 1e6
+            row["reduce_us"] = packed_us
+            row["decoded_reduce_us"] = decoded_us
+            row["wire_speedup"] = decoded_us / packed_us
+            derived += f";wire_speedup={row['wire_speedup']:.3f}"
+        else:
+            row["reduce_us"] = stats[name]["min_s"] * 1e6
+        row["time_vs_bf16"] = row["reduce_us"] / baseline_us
+        results["recipes"][name] = row
+        emit(f"comm_reduce_{name}", row["reduce_us"], derived)
 
     fp4 = results["recipes"]["nvfp4_centered"]["ratio_vs_bf16"]
     assert fp4 <= 0.30, f"FP4 wire ratio {fp4} exceeds 0.30x bf16"

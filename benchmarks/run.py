@@ -88,14 +88,19 @@ def check_staleness(written_at: str,
 
 
 def mark_regressions(summary: dict) -> list[str]:
-    """Flag perf inversions that MUST NOT ship. Two gates, same contract:
+    """Flag perf inversions that MUST NOT ship. Three gates, same contract:
 
     * quantized qgemm recipes whose prepared path is slower than inline
       re-quantization (``prepared_speedup >= 1.0`` — the per-step weight
       cache must pay for itself);
     * serve decode throughput where the fused paged-attention read is
       slower than the dense ``_dense_view`` it replaces
-      (``decode_throughput.<kind>.fused_speedup >= 1.0``).
+      (``decode_throughput.<kind>.fused_speedup >= 1.0``);
+    * comm nvfp4 recipes whose packed wire folds slower than the decoded
+      fp32 wire it replaces (``wire_speedup >= 1.0``), or whose packed
+      reduce is not under the bf16 baseline
+      (``nvfp4_centered.time_vs_bf16 < 1.0`` — the paper's G4 wire must
+      pay for its bits in time, not just bytes).
 
     Mutates ``summary`` in place, setting a loud ``"regression": true`` on
     each offending row, and returns the offending names. The nightly CI
@@ -125,6 +130,25 @@ def mark_regressions(summary: dict) -> list[str]:
                   f"paged-attention read is slower than the dense view it "
                   f"replaces (fused_speedup={speedup:.2f} < 1.0)",
                   file=sys.stderr)
+    recipes = (summary.get("comm") or {}).get("recipes") or {}
+    for name, row in recipes.items():
+        if not isinstance(row, dict):
+            continue
+        speedup = row.get("wire_speedup")
+        if speedup is not None and speedup < 1.0:
+            row["regression"] = True
+            offenders.append(f"comm:{name}")
+            print(f"WARNING: comm recipe {name!r} REGRESSION: the packed "
+                  f"wire fold is slower than the decoded fp32 fold it "
+                  f"replaces (wire_speedup={speedup:.2f} < 1.0)",
+                  file=sys.stderr)
+        ratio = row.get("time_vs_bf16")
+        if name == "nvfp4_centered" and ratio is not None and ratio >= 1.0:
+            row["regression"] = True
+            offenders.append(f"comm:{name}:time_vs_bf16")
+            print(f"WARNING: comm recipe {name!r} REGRESSION: the packed "
+                  f"reduce is no faster than the bf16 wire "
+                  f"(time_vs_bf16={ratio:.2f} >= 1.0)", file=sys.stderr)
     return offenders
 
 

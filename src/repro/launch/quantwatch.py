@@ -266,6 +266,11 @@ def main() -> None:
         print(f"\nWARNING: {int(paged)} paged-attention read fallback(s) "
               f"during this report — fused FP4 KV reads dropped to the "
               f"dense _dense_view path (bandwidth win lost)")
+    wire = global_hub().counter("quant/wire_fold_fallback")
+    if wire:
+        print(f"\nWARNING: {int(wire)} packed-wire fold fallback(s) "
+              f"during this report — gradient packets dropped to the "
+              f"decode-then-scan reference fold (4x S bytes/elem read)")
 
     if args.json_out:
         with open(args.json_out, "w") as f:

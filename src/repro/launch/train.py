@@ -63,6 +63,11 @@ def main() -> None:
                     help="virtual DP shard count for the sharded step "
                          "(0 = one per data-parallel device); >1 on one "
                          "device simulates the multi-device wire bitwise")
+    ap.add_argument("--wire", default="packed", choices=("packed", "decoded"),
+                    help="nvfp4 wire representation: 'packed' folds E2M1 "
+                         "nibble packets directly (decode-inside-the-fold), "
+                         "'decoded' ships the QDQ-simulated fp32 buffer; "
+                         "non-nvfp4 recipes ignore this")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -91,6 +96,7 @@ def main() -> None:
         grad_compression=args.grad_compression,
         comm_recipe=args.comm_recipe,
         comm_bucket_mb=args.comm_bucket_mb,
+        wire_format=args.wire,
         quant_probes=telemetry_on,
         optimizer=adamw.OptimizerConfig(
             peak_lr=args.lr, warmup_steps=args.warmup, total_steps=args.steps
@@ -138,10 +144,11 @@ def main() -> None:
         else:
             ws = raw_step.comm_layout.wire_summary()
             logging.info(
-                "sharded step: %d device(s), %d DP shard(s), wire=%s, "
-                "%d bucket(s), %.0f wire bytes/step/shard (%.2fx bf16 "
-                "reduce)",
+                "sharded step: %d device(s), %d DP shard(s), wire=%s "
+                "(%s), %d bucket(s), %.0f wire bytes/step/shard (%.2fx "
+                "bf16 reduce)",
                 n_dev, raw_step.dp_shards, raw_step.comm_recipe,
+                getattr(raw_step, "wire_format", "packed"),
                 ws["num_buckets"], ws["total_bytes_per_step"],
                 ws["ratio_vs_bf16"])
         step_fn = jax.jit(raw_step, donate_argnums=(0, 1))

@@ -133,7 +133,11 @@ def comm_bucket_stats(recipe, corrected: jax.Array,
     """Quant-health probe of one gradient bucket's wire encoding.
 
     ``corrected`` is the EF-corrected flat fp32 bucket, ``wire`` its decoded
-    wire value (``collectives.encode_bucket``). A flat bucket is the (l, 1)
+    wire value — either the QDQ-simulated fp32 buffer or the production
+    :class:`~repro.parallel.collectives.WirePacket` run through
+    ``decode_packet`` (``collectives.bucket_probe_stats`` passes whichever
+    the train step already encoded, so probes never encode a bucket twice;
+    both decode to bitwise the same values). A flat bucket is the (l, 1)
     case of the §2 diagnostics: R = |mean| / rms. ``ef_norm`` is the norm of
     the residual the error-feedback buffer will carry to the next step.
     """

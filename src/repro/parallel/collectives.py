@@ -34,24 +34,43 @@ sharing a (recipe, dtype) pair are packed together, ``per_tensor`` recipes
 
 Error feedback (1-bit-Adam / EF-SGD lineage) is carried in the optimizer
 state under ``state["comm"]["ef"]`` and stored in the **gradient dtype** —
-not a second full fp32 copy of the params. The codec simulates the wire with
-quantize–dequantize, so numerics are exactly what a real low-bit collective
-would deliver; :func:`bucket_wire_bytes` accounts the bytes that *would*
-travel (payload + scales + the fp32 mean side-channel).
+not a second full fp32 copy of the params.
+
+Two wire formats share one codec:
+
+* **decoded** (the QDQ simulation): every shard dequantizes its bucket back
+  to fp32 before the fold — numerically faithful, but the reduce reads
+  ``4 x S`` bytes/elem regardless of the wire format.
+* **packed** (the default): nvfp4 buckets travel as :class:`WirePacket`
+  bytes — packed E2M1 nibbles + raw E4M3 block-scale bytes + fp32
+  amax/mean scalars — and ``kernels/wire_fold.py`` decodes them *inside*
+  the fold, reading ~0.5625 bytes/elem/shard with the centered mean folded
+  analytically as S fp32 scalars. Error feedback is computed from the
+  packet's decoded value, so EF numerics are identical across formats;
+  the fold itself is pinned bitwise to the decode-then-``lax.scan`` left
+  fold in global shard order, preserving device-count invariance.
+
+:func:`bucket_wire_bytes` accounts the bytes that travel (payload + scales
++ the fp32 mean side-channel) — for packed nvfp4 they are now the bytes
+the fold actually reads.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from fnmatch import fnmatch
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.formats import BLOCK_SIZE
+from repro.core.nvfp4 import (encode_e2m1_codes, pack_nibbles,
+                              quantize_block_scales)
 from repro.core.pipeline import (Center, Operand, Quantize, apply_stages,
                                  _fused_fallback, _fused_interpret)
 from repro.core.qgemm import QuantConfig
+from repro.kernels import wire_fold
 
 # QuantConfig consumed by apply_stages for wire payloads: blockwise NVFP4,
 # RN elements (error feedback de-biases; the wire carries no SR stream).
@@ -351,6 +370,24 @@ def _wire_cols(n: int) -> Optional[int]:
     return None
 
 
+def _pad_tail(flat: jax.Array, pad: int,
+              mu: Optional[jax.Array]) -> jax.Array:
+    """Extend a flat bucket by ``pad`` elements WITHOUT corrupting the
+    shared tail 16-block scale: centered buckets are padded with the bucket
+    mean itself (PR 7's mu-padding trick — the padded entries center to
+    exact zeros), uncentered with zeros. Either way the padding contributes
+    0 to every amax, so the quantization of the REAL entries is bitwise the
+    unpadded stage path's (``nvfp4_qdq`` zero-pads the residual the same
+    way internally)."""
+    if pad == 0:
+        return flat
+    if mu is None:
+        fill = jnp.zeros((pad,), flat.dtype)
+    else:
+        fill = jnp.broadcast_to(mu.astype(flat.dtype), (pad,))
+    return jnp.concatenate([flat, fill])
+
+
 def _fused_bucket_qdq(corrected: jax.Array,
                       *, center: bool) -> Optional[jax.Array]:
     """One-pass Pallas encode of an nvfp4 wire bucket; None -> stage path.
@@ -360,24 +397,154 @@ def _fused_bucket_qdq(corrected: jax.Array,
     bucket mean broadcasts to a lane vector for the kernel's Center. The
     decoded wire is bitwise the stage path's (same mean, same blocks, same
     per-tensor amax — max is order-invariant) within one jit regime.
+    Ragged buckets (size not a multiple of the quant block) are mu-padded
+    to the next block boundary (:func:`_pad_tail`) instead of falling back
+    to the stage path, and the padding is sliced off the decoded wire.
     """
-    m = _wire_cols(corrected.shape[-1])
-    if corrected.ndim != 1 or m is None:
+    if corrected.ndim != 1:
         _fused_fallback(
-            f"wire bucket shape {corrected.shape} has no block-aligned "
-            f"tiling")
+            f"wire bucket shape {corrected.shape} is not flat")
         return None
+    n = corrected.shape[-1]
+    mu_s = jnp.mean(corrected.astype(jnp.float32)) if center else None
+    pad = (-n) % BLOCK_SIZE
+    padded = _pad_tail(corrected, pad, mu_s)
+    m = _wire_cols(n + pad)
     from repro.kernels.fused import center_hadamard_qdq_2d
     interpret = _fused_interpret()
-    x2 = corrected.reshape(-1, m)
-    mu_s = None
+    x2 = padded.reshape(-1, m)
     mu_row = None
     if center:
-        mu_s = jnp.mean(corrected.astype(jnp.float32))
         mu_row = jnp.broadcast_to(mu_s.reshape(1, 1), (1, m))
     res_q = center_hadamard_qdq_2d(x2, mu_row, None, None, rotate=False,
-                                   interpret=interpret).reshape(-1)
+                                   interpret=interpret).reshape(-1)[:n]
     return res_q + mu_s if center else res_q
+
+
+# --------------------------------------------------------------------------
+# Packed wire: real bytes end-to-end (decode happens inside the fold)
+# --------------------------------------------------------------------------
+
+class WirePacket(NamedTuple):
+    """One nvfp4 bucket's actual wire bytes (what a real collective ships).
+
+    The payload is padded to whole nibble-pair blocks
+    (:func:`packet_wire_elems` elements) with the mu-padding trick, so a
+    bucket of ``n`` gradients travels as ``~0.5625*n`` bytes + 8 scalar
+    bytes instead of ``4*n``:
+
+      codes    (padded_n/2,)  uint8  packed E2M1 nibble pairs, low first
+      scales   (padded_n/16,) uint8  raw E4M3 per-16-block scale bytes
+      amax     ()             fp32   per-bucket amax of the quantized
+                                     operand (s_t is re-derived at decode)
+      mean     ()             fp32   exact bucket mean (0.0 uncentered)
+
+    A NamedTuple, hence a jax pytree: packets stack/all-gather leaf-wise
+    through ``shard_map`` exactly like the decoded fp32 wires they replace.
+    ``kernels/wire_fold.py`` folds S stacked packets without ever
+    materializing the decoded (S, B) fp32 stack.
+    """
+
+    codes: jax.Array
+    scales: jax.Array
+    amax: jax.Array
+    mean: jax.Array
+
+
+#: Decoded wire buffers are plain arrays; packed wires are WirePackets.
+WireValue = Union[jax.Array, WirePacket]
+
+
+def packet_wire_elems(n: int) -> int:
+    """Padded payload element count of an ``n``-element bucket's packet
+    (whole 2*BLOCK_SIZE groups, so codes pack to whole bytes per block)."""
+    return n + (-n) % (2 * BLOCK_SIZE)
+
+
+def _packed_cols(n_padded: int) -> int:
+    """Widest nibble-pair-aligned column count tiling a padded payload
+    (always succeeds: the payload is a multiple of 2*BLOCK_SIZE)."""
+    for m in _WIRE_TILE_COLS:
+        if m % (2 * BLOCK_SIZE) == 0 and n_padded % m == 0:
+            return m
+    raise AssertionError(f"padded payload {n_padded} not 32-aligned")
+
+
+def _encode_bucket_packet(corrected: jax.Array, *,
+                          center: bool) -> WirePacket:
+    """Encode one flat fp32 bucket into its :class:`WirePacket`.
+
+    The fused path reuses PR 7's pack kernel (`center_hadamard_pack_2d`)
+    on the (rows, m) view; the stage twin is the ``core/nvfp4`` codec
+    chain. Both produce identical bytes, and decoding them
+    (:func:`decode_packet`) is bitwise the decoded wire of
+    :func:`_fused_bucket_qdq` / the stage QDQ — same q, same scales, same
+    per-tensor amax — so error feedback is unchanged by the wire format.
+    """
+    n = corrected.shape[-1]
+    xf = corrected.astype(jnp.float32)
+    mu_s = jnp.mean(xf) if center else None
+    pad = packet_wire_elems(n) - n
+    padded = _pad_tail(xf, pad, mu_s)
+    if WIRE_FUSED:
+        from repro.kernels.fused import center_hadamard_pack_2d, fused_amax_2d
+        interpret = _fused_interpret()
+        m = _packed_cols(padded.shape[-1])
+        x2 = padded.reshape(-1, m)
+        mu_row = None
+        if center:
+            mu_row = jnp.broadcast_to(mu_s.reshape(1, 1), (1, m))
+        amax2 = fused_amax_2d(x2, mu_row, rotate=False, interpret=interpret)
+        codes2, scales2, _ = center_hadamard_pack_2d(
+            x2, mu_row, amax2, None, rotate=False, interpret=interpret)
+        codes = codes2.reshape(-1)
+        scales = jax.lax.bitcast_convert_type(scales2, jnp.uint8).reshape(-1)
+        amax = amax2.reshape(())
+    else:
+        res = padded - mu_s if center else padded
+        rb = res.reshape(-1, BLOCK_SIZE)
+        absr = jnp.abs(rb)
+        amax = jnp.max(absr)
+        s_t = wire_fold.shard_tensor_scales(amax)
+        s_b = quantize_block_scales(jnp.max(absr, axis=-1), s_t)
+        codes4 = encode_e2m1_codes(rb, s_b.astype(jnp.float32) * s_t)
+        codes = pack_nibbles(codes4.reshape(-1))
+        scales = jax.lax.bitcast_convert_type(s_b, jnp.uint8)
+    mean = mu_s if center else jnp.float32(0.0)
+    return WirePacket(codes=codes, scales=scales, amax=amax, mean=mean)
+
+
+def decode_packet(recipe: CommRecipe, packet: WirePacket,
+                  n: int) -> jax.Array:
+    """Packet -> the (n,) fp32 value the receiving side decodes.
+
+    Bitwise the decoded-wire (QDQ simulation) value of the same bucket:
+    residual = codes x E4M3 scales x re-derived s_t, padding sliced off,
+    plus the exact mean for centered recipes.
+    """
+    v = wire_fold.decode_wire_values(
+        packet.codes, packet.scales,
+        wire_fold.shard_tensor_scales(packet.amax))[:n]
+    return v + packet.mean if recipe.center else v
+
+
+def fold_packet_shards(recipe: CommRecipe, stacked: WirePacket,
+                       num_shards: int, *, n: int,
+                       backend: str = "auto") -> jax.Array:
+    """Fold an (S,)-stacked :class:`WirePacket` into the (n,) reduced bucket.
+
+    The packed twin of :func:`fold_shards`: ``kernels/wire_fold.py``
+    decodes each shard's bytes inside the same fixed-order left fold
+    (bitwise ``fold_packets_reference``, i.e. decode-then-scan), with the
+    centered mean folded analytically as S fp32 scalars. Device-count
+    invariance is inherited: the fold is a deterministic function of the
+    globally-ordered packet stack.
+    """
+    mean = stacked.mean if recipe.center else None
+    acc = wire_fold.fold_packets(stacked.codes, stacked.scales,
+                                 stacked.amax, mean, num_shards,
+                                 backend=backend)
+    return acc[:n]
 
 
 def _fold_kernel(x_ref, o_ref, *, num_shards: int):
@@ -424,28 +591,38 @@ def encode_bucket(
     recipe: CommRecipe,
     flat: jax.Array,
     ef: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """Encode one flat fp32 bucket for the wire; return its decoded value.
+    *,
+    packed: bool = False,
+) -> Tuple[WireValue, Optional[jax.Array]]:
+    """Encode one flat fp32 bucket for the wire.
 
-    Returns ``(wire_value, new_ef)`` where ``wire_value`` is what the
-    receiving side decodes (QDQ simulation — mean + quantized residual for
-    centered recipes) and ``new_ef`` the updated error-feedback residual in
-    the EF storage dtype (None when the recipe carries no EF).
+    Returns ``(wire, new_ef)``. With ``packed=False`` (the QDQ simulation)
+    ``wire`` is the decoded fp32 value the receiving side would see; with
+    ``packed=True`` the nvfp4 payloads emit a :class:`WirePacket` — the
+    actual wire bytes — and the receiving side decodes inside the fold
+    (:func:`fold_packet_shards`). ``new_ef`` is the updated error-feedback
+    residual in the EF storage dtype (None when the recipe carries no EF);
+    it is always computed from the packet's *decoded* value, so EF numerics
+    are identical across wire formats.
 
     The nvfp4 payloads run through the shared pipeline stages
-    (:data:`MEAN_OP` / :data:`RESIDUAL_NVFP4_OP` / :data:`RAW_NVFP4_OP`), so
-    the wire's centering + quantization is literally the GeMM core's.
+    (:data:`MEAN_OP` / :data:`RESIDUAL_NVFP4_OP` / :data:`RAW_NVFP4_OP`) or
+    their fused/packed twins, so the wire's centering + quantization is
+    literally the GeMM core's.
     """
     corrected = flat
     if ef is not None:
         corrected = flat + ef.astype(jnp.float32)
 
+    wire: WireValue
     if recipe.is_identity:
         wire = corrected
     elif recipe.payload == "bf16" and not recipe.center:
         wire = corrected.astype(jnp.bfloat16).astype(jnp.float32)
     elif recipe.payload == "int8" and not recipe.center:
         wire = _q_int8(corrected)
+    elif recipe.payload == "nvfp4" and packed:
+        wire = _encode_bucket_packet(corrected, center=recipe.center)
     elif recipe.payload == "nvfp4":
         wire = (_fused_bucket_qdq(corrected, center=recipe.center)
                 if WIRE_FUSED else None)
@@ -463,7 +640,9 @@ def encode_bucket(
     new_ef = None
     if recipe.error_feedback:
         ef_dt = ef.dtype if ef is not None else jnp.float32
-        new_ef = (corrected - wire).astype(ef_dt)
+        decoded = (decode_packet(recipe, wire, corrected.shape[-1])
+                   if isinstance(wire, WirePacket) else wire)
+        new_ef = (corrected - decoded).astype(ef_dt)
     return wire, new_ef
 
 
@@ -473,23 +652,27 @@ def encode_shard_buckets(
     ef_rows: Optional[Dict[str, jax.Array]] = None,
     *,
     codec_on: bool = True,
-) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+    packed: bool = False,
+) -> Tuple[Dict[str, WireValue], Dict[str, jax.Array]]:
     """Encode one wire participant's buckets.
 
     ``flats``: {bucket name: flat fp32 buffer} from :func:`bucketize`;
     ``ef_rows``: this participant's EF buffers for EF-carrying buckets.
-    Returns ``(wires, new_ef_rows)``; with ``codec_on=False`` (a single
-    participant — no wire exists) buffers pass through and EF is untouched.
-    The single implementation behind both the sharded train step and the
-    mesh-free benchmark reduce, so their semantics cannot drift.
+    ``packed=True`` makes nvfp4 buckets emit :class:`WirePacket` bytes
+    (fold with :func:`fold_packet_shards`); other payloads always stay
+    decoded buffers. Returns ``(wires, new_ef_rows)``; with
+    ``codec_on=False`` (a single participant — no wire exists) buffers pass
+    through and EF is untouched. The single implementation behind both the
+    sharded train step and the mesh-free benchmark reduce, so their
+    semantics cannot drift.
     """
-    wires: Dict[str, jax.Array] = {}
+    wires: Dict[str, WireValue] = {}
     new_ef: Dict[str, jax.Array] = {}
     for b in layout.buckets:
         if codec_on:
             row = (ef_rows or {}).get(b.name)
             w, ef2 = encode_bucket(get_comm_recipe(b.recipe), flats[b.name],
-                                   row)
+                                   row, packed=packed)
         else:
             w, ef2 = flats[b.name], None
         wires[b.name] = w
@@ -504,13 +687,19 @@ def bucket_probe_stats(
     ef_rows: Optional[Dict[str, jax.Array]] = None,
     *,
     codec_on: bool = True,
+    wires: Optional[Dict[str, WireValue]] = None,
 ) -> Dict[str, Dict[str, jax.Array]]:
     """Quant-health probe of every bucket's wire encoding.
 
-    A stop-gradient *duplicate* of :func:`encode_shard_buckets`: the
-    production encode path is untouched (probes cannot perturb the wire,
-    and probes-off graphs stay bitwise identical), at the cost of encoding
-    each probed bucket twice. Returns
+    When the caller passes the production ``wires`` (the
+    :func:`encode_shard_buckets` output — decoded buffers or
+    :class:`WirePacket`\\ s), the probe consumes them under
+    ``stop_gradient`` instead of re-encoding, halving the probe-on encode
+    cost; packets are decoded to the value the receiving side sees. With
+    ``wires=None`` it remains a stop-gradient *duplicate* of the encode
+    (each probed bucket encoded twice). Either way the production path is
+    untouched — probes cannot perturb the wire, and probes-off graphs stay
+    bitwise identical. Returns
     ``{bucket name: repro.obs.probes.comm_bucket_stats(...)}`` — R,
     clip/underflow rate, bin occupancy, and the EF-residual norm per bucket.
     """
@@ -525,7 +714,15 @@ def bucket_probe_stats(
             row = jax.lax.stop_gradient(row)
         corrected = (flat if row is None
                      else flat + row.astype(jnp.float32))
-        wire = encode_bucket(r, flat, row)[0] if codec_on else corrected
+        if wires is not None and b.name in wires:
+            w = wires[b.name]
+            if isinstance(w, WirePacket):
+                w = decode_packet(r, w, flat.shape[-1])
+            wire = jax.lax.stop_gradient(w).astype(jnp.float32)
+        elif codec_on:
+            wire = encode_bucket(r, flat, row)[0]
+        else:
+            wire = corrected
         out[b.name] = comm_bucket_stats(r, corrected, wire)
     return out
 

@@ -188,4 +188,9 @@ class ServeMetrics:
             # by quantwatch like the other two downgrade signals
             "paged_attn_fallback":
                 global_hub().counter("quant/paged_attn_fallback"),
+            # packed-wire folds that fell back to the decode-then-scan
+            # reference (unsupported packet shape etc.) — the comm-path
+            # downgrade signal: the fold still reads 4*S bytes/elem there
+            "wire_fold_fallback":
+                global_hub().counter("quant/wire_fold_fallback"),
         }

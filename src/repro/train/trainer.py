@@ -75,6 +75,12 @@ class TrainConfig:
                                      # policy's comm= clause, then
                                      # grad_compression, then fp32
     comm_bucket_mb: float = 4.0      # flat-buffer bucket size (MiB)
+    wire_format: str = "packed"      # nvfp4 DP-wire transport: "packed"
+                                     # ships WirePacket bytes and decodes
+                                     # inside the fold (~0.56S bytes/elem
+                                     # read); "decoded" is the legacy QDQ
+                                     # simulation (4S bytes/elem). EF
+                                     # numerics are identical either way.
     quant_probes: bool = False       # in-graph quant-health probes
                                      # (repro.obs.probes): per-site stats
                                      # land in the step metrics under
@@ -377,6 +383,11 @@ def make_sharded_train_step(
     dp_entry = dp_axes[0] if len(dp_axes) == 1 else dp_axes
     codec_on = S > 1                    # identity wire on a single shard
 
+    if tcfg.wire_format not in ("packed", "decoded"):
+        raise ValueError(f"TrainConfig.wire_format={tcfg.wire_format!r}; "
+                         f"expected 'packed' or 'decoded'")
+    packed_wire = codec_on and tcfg.wire_format == "packed"
+
     wire = resolve_comm_recipe(tcfg, policy)
     aparams = model.abstract_params()
     pspecs = jax.tree.map(
@@ -424,12 +435,16 @@ def make_sharded_train_step(
             flats = coll.bucketize(layout, grads_s)
             ef_rows = ({n: opt_l["comm"]["ef"][n][j] for n in ef_names}
                        if ef_names else None)
+            w_j, ef_j = coll.encode_shard_buckets(layout, flats, ef_rows,
+                                                  codec_on=codec_on,
+                                                  packed=packed_wire)
             if tcfg.quant_probes:
                 probe_tapes.append(mets_s.get("quant_probes", {}))
+                # probes consume the production wires (packets decoded
+                # under stop_gradient) instead of re-encoding each bucket
                 comm_tapes.append(coll.bucket_probe_stats(
-                    layout, flats, ef_rows, codec_on=codec_on))
-            w_j, ef_j = coll.encode_shard_buckets(layout, flats, ef_rows,
-                                                  codec_on=codec_on)
+                    layout, flats, ef_rows, codec_on=codec_on,
+                    wires=w_j if codec_on else None))
             for b in layout.buckets:
                 wires[b.name].append(w_j[b.name])
             for n in ef_names:
@@ -442,14 +457,23 @@ def make_sharded_train_step(
                 stack = jax.lax.all_gather(stack, a, axis=0, tiled=True)
             return stack
 
-        # Fold in shard order (collectives.fold_shards) — the same sequence
-        # of fp32 adds on every device count dividing S, which is what
-        # makes 1-device and 8-device runs bitwise-identical.
-        acc_flats = {
-            b.name: coll.fold_shards(
-                gather_stacked(jnp.stack(wires[b.name])), S)
-            for b in layout.buckets
-        }
+        # Fold in shard order (collectives.fold_shards / fold_packet_shards)
+        # — the same sequence of fp32 adds on every device count dividing S,
+        # which is what makes 1-device and 8-device runs bitwise-identical.
+        # Packed buckets stack/gather leaf-wise (WirePacket is a pytree:
+        # u8 codes, u8 scale bytes, fp32 amax/mean scalars) and the fold
+        # decodes the packed bytes in-register.
+        acc_flats = {}
+        for b in layout.buckets:
+            if isinstance(wires[b.name][0], coll.WirePacket):
+                pk = jax.tree.map(
+                    lambda *xs: gather_stacked(jnp.stack(xs)),
+                    *wires[b.name])
+                acc_flats[b.name] = coll.fold_packet_shards(
+                    coll.get_comm_recipe(b.recipe), pk, S, n=b.size)
+            else:
+                acc_flats[b.name] = coll.fold_shards(
+                    gather_stacked(jnp.stack(wires[b.name])), S)
         # decode onto the *gradient* tree (fp32 under microbatch
         # accumulation — the plain step feeds apply_updates exactly this)
         grads_hat = coll.debucketize(layout, acc_flats, agrads)
@@ -496,6 +520,7 @@ def make_sharded_train_step(
     train_step.dp_shards = S
     train_step.comm_layout = layout
     train_step.comm_recipe = wire
+    train_step.wire_format = "packed" if packed_wire else "decoded"
     return train_step
 
 

@@ -400,3 +400,88 @@ def test_sharded_step_rejects_bad_shard_counts():
     with pytest.raises(ValueError, match="not divisible"):
         step(*init_train_state(model, tcfg, jax.random.key(0), dp_shards=3),
              _batch(bs=8), jax.random.key(0))
+
+# --------------------------------------------------------------------------
+# Packed wire (WirePacket) — encode, ragged mu-padding, probe reuse
+# --------------------------------------------------------------------------
+
+def test_ragged_bucket_mu_padding_adversarial():
+    """Adversarial ragged bucket: |mean| >> residual with a one-element
+    tail block. Zero-padding the tail would inject a -mu residual into
+    the shared tail 16-block (and the per-tensor amax), rescaling every
+    real entry; mu-padding centers the pad to exact zeros, so both the
+    fused decoded wire and the packet stay bitwise the unpadded stage
+    QDQ."""
+    rng = np.random.default_rng(9)
+    n = 257                                      # 16*16 + 1: ragged tail
+    flat = jnp.asarray(
+        1000.0 + rng.integers(-64, 64, size=n).astype(np.float32) / 64)
+    recipe = coll.get_comm_recipe("nvfp4_centered")
+    mu, res = split_mean(flat, 0)
+    manual = nvfp4_qdq(res, -1) + mu
+    # mean dominates: a zero-padded tail would see |res_pad| ~ 1000,
+    # ~16x the real residual amax — this input detects scale corruption
+    assert float(jnp.abs(res).max()) < 2.0
+
+    wire, _ = coll.encode_bucket(recipe, flat)
+    np.testing.assert_array_equal(np.asarray(wire), np.asarray(manual))
+
+    pkt, _ = coll.encode_bucket(recipe, flat, packed=True)
+    dec = coll.decode_packet(recipe, pkt, n)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(manual))
+
+
+def test_packed_encode_mixed_policy_wire_types():
+    """Only nvfp4 payloads pack; other recipes on the same layout keep
+    their decoded wires, and fold dispatch handles the mix."""
+    grads = {"wq": jnp.ones((64, 16)), "norm": jnp.ones((48,))}
+    policy = PrecisionPolicy.parse("bf16;comm=nvfp4_centered;comm.norm=bf16")
+    lay = coll.build_layout(grads, default_recipe="nvfp4_centered",
+                            policy=policy, bucket_mb=1.0)
+    flats = coll.bucketize(lay, grads)
+    wires, _ = coll.encode_shard_buckets(lay, flats, packed=True)
+    kinds = {b.recipe: isinstance(wires[b.name], coll.WirePacket)
+             for b in lay.buckets}
+    assert kinds == {"nvfp4_centered": True, "bf16": False}
+
+
+def test_probe_consumes_passed_wires(monkeypatch):
+    """Satellite: with the production wires passed in, bucket_probe_stats
+    must not re-encode (the probe-on encode count halves) and must report
+    the same stats as the re-encode path — for both wire formats."""
+    rng = np.random.default_rng(21)
+    grads = {"w": jnp.asarray(rng.standard_normal((96, 16)), jnp.float32)}
+    lay = coll.build_layout(grads, default_recipe="nvfp4_centered",
+                            bucket_mb=1.0)
+    flats = coll.bucketize(lay, grads)
+
+    for packed in (False, True):
+        wires, _ = coll.encode_shard_buckets(lay, flats, packed=packed)
+
+        calls = []
+        orig = COLL_MOD.encode_bucket
+
+        def counting(recipe, flat, ef=None, **kw):
+            calls.append(recipe.name)
+            return orig(recipe, flat, ef, **kw)
+
+        monkeypatch.setattr(COLL_MOD, "encode_bucket", counting)
+        coll.bucket_probe_stats(lay, flats, wires=wires)
+        monkeypatch.setattr(COLL_MOD, "encode_bucket", orig)
+        assert calls == [], f"probe re-encoded with wires passed "\
+                            f"(packed={packed}): {calls}"
+
+        # stat equality is pinned in ONE graph — the train step's regime,
+        # where the wire the probe consumes is the wire the fold reads
+        def both(flats):
+            wires, _ = coll.encode_shard_buckets(lay, flats, packed=packed)
+            return (coll.bucket_probe_stats(lay, flats),       # re-encode
+                    coll.bucket_probe_stats(lay, flats, wires=wires))
+
+        want, got = jax.jit(both)(flats)
+        for name in want:
+            for stat in want[name]:
+                np.testing.assert_array_equal(
+                    np.asarray(want[name][stat]),
+                    np.asarray(got[name][stat]),
+                    err_msg=f"{name}/{stat} packed={packed}")

@@ -48,9 +48,9 @@ _SCRIPT = textwrap.dedent(
     mesh8 = jax.make_mesh((8,), ("data",))
     mesh1 = Mesh(np.array(jax.devices()[:1]), ("data",))
 
-    def run(mesh, wire, steps=3):
+    def run(mesh, wire, wire_format, steps=3):
         tcfg = TrainConfig(
-            quant_mode="bf16", comm_recipe=wire,
+            quant_mode="bf16", comm_recipe=wire, wire_format=wire_format,
             optimizer=adamw.OptimizerConfig(peak_lr=3e-3, warmup_steps=1,
                                             total_steps=10))
         params, opt = init_train_state(model, tcfg, jax.random.key(0),
@@ -63,15 +63,20 @@ _SCRIPT = textwrap.dedent(
             losses.append(float(m["loss"]))
         return params, losses
 
-    for wire in ("bf16", "nvfp4_centered"):
-        p8, l8 = run(mesh8, wire)
-        p1, l1 = run(mesh1, wire)
-        assert l8 == l1, (wire, l8, l1)
+    # nvfp4_centered runs BOTH wire representations: the packed
+    # WirePacket fold (the shipping default) must be exactly as
+    # device-count invariant as the decoded QDQ simulation
+    for wire, wire_format in (("bf16", "decoded"),
+                              ("nvfp4_centered", "decoded"),
+                              ("nvfp4_centered", "packed")):
+        p8, l8 = run(mesh8, wire, wire_format)
+        p1, l1 = run(mesh1, wire, wire_format)
+        assert l8 == l1, (wire, wire_format, l8, l1)
         for a, b in zip(jax.tree.leaves(p8), jax.tree.leaves(p1)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         # 3 steps on the same batch under EF: finite and improving
         assert np.isfinite(l8).all() and l8[-1] < l8[0], (wire, l8)
-        print(f"BITWISE_OK {wire}")
+        print(f"BITWISE_OK {wire}:{wire_format}")
     print("TRAIN_OK")
     """
 )
@@ -86,6 +91,7 @@ def test_sharded_reduce_bitwise_on_8_devices():
         capture_output=True, text=True, timeout=900, env=env,
     )
     assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
-    assert "BITWISE_OK bf16" in out.stdout
-    assert "BITWISE_OK nvfp4_centered" in out.stdout
+    assert "BITWISE_OK bf16:decoded" in out.stdout
+    assert "BITWISE_OK nvfp4_centered:decoded" in out.stdout
+    assert "BITWISE_OK nvfp4_centered:packed" in out.stdout
     assert "TRAIN_OK" in out.stdout

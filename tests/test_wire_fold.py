@@ -1,0 +1,220 @@
+"""Packed-wire fold kernel: the bitwise contract between `fold_packets`
+(every backend), the decode-then-scan reference, and the decoded-wire
+codec it replaces.
+
+The pinned guarantee: a packed `WirePacket` fold equals a left
+`lax.scan` fold of the per-shard DECODED residuals plus the centered
+mean folded as S fp32 scalars — in the same global shard order, on every
+backend (Pallas/interpret, chunked XLA, reference). That is the packed
+wire's device-count-invariance story: the fold is a deterministic
+function of the globally-ordered packet stack, never of how shards land
+on devices.
+"""
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.formats import BLOCK_SIZE
+from repro.core.nvfp4 import nvfp4_qdq
+from repro.kernels import wire_fold
+from repro.obs.telemetry import global_hub
+from repro.parallel import collectives as coll
+
+CENTERED = coll.get_comm_recipe("nvfp4_centered")
+UNCENTERED = coll.get_comm_recipe("nvfp4")
+
+
+def _packets(recipe, buckets):
+    """Encode per-shard flat buckets -> (S,)-stacked WirePacket (jitted,
+    the train step's regime)."""
+    enc = jax.jit(lambda f: coll.encode_bucket(recipe, f, packed=True)[0])
+    packets = [enc(jnp.asarray(b, jnp.float32)) for b in buckets]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *packets)
+
+
+def _shard_buckets(n, s=8, seed=0, mean=0.0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return [mean + scale * rng.standard_normal(n).astype(np.float32)
+            for _ in range(s)]
+
+
+def _scan_fold_golden(recipe, stacked, num_shards):
+    """Independent decode-then-scan reimplementation of the contract
+    (NOT `fold_packets_reference` — re-derived here so a bug in the
+    shipped reference cannot self-certify)."""
+    def decode_one(codes, scales, amax):
+        return wire_fold.decode_wire_values(
+            codes, scales, wire_fold.shard_tensor_scales(amax))
+    decoded = jax.vmap(decode_one)(stacked.codes, stacked.scales,
+                                   stacked.amax)
+    acc, _ = jax.lax.scan(
+        lambda c, x: (c + x.astype(jnp.float32) / num_shards, None),
+        jnp.zeros(decoded.shape[1:], jnp.float32), decoded)
+    if recipe.center:
+        macc, _ = jax.lax.scan(
+            lambda c, m: (c + m / num_shards, None),
+            jnp.float32(0.0), stacked.mean.astype(jnp.float32))
+        acc = acc + macc
+    return acc
+
+
+@pytest.mark.parametrize("recipe", [CENTERED, UNCENTERED],
+                         ids=["centered", "uncentered"])
+@pytest.mark.parametrize("n", [256, 257, 4096])
+def test_fold_backends_bitwise_golden(recipe, n):
+    stacked = _packets(recipe, _shard_buckets(n, s=8, seed=n))
+    mean = stacked.mean if recipe.center else None
+    golden = jax.jit(
+        lambda st: _scan_fold_golden(recipe, st, 8))(stacked)
+    for backend in ("reference", "xla", "pallas"):
+        out = jax.jit(
+            lambda st, b=backend: wire_fold.fold_packets(
+                st.codes, st.scales, st.amax,
+                st.mean if recipe.center else None, 8, backend=b))(stacked)
+        np.testing.assert_array_equal(
+            np.asarray(out)[:n], np.asarray(golden)[:n],
+            err_msg=f"backend={backend}")
+
+
+def test_adversarial_large_mean_tiny_residual():
+    """The curse-of-mean-bias bucket: |mean| >> residual. The centered
+    packet ships the mean exactly (fp32 scalar), so the fold recovers it
+    to fp32 addition accuracy while the 4-bit payload only carries the
+    tiny residuals — and every backend agrees bitwise."""
+    n, s = 1040, 8                  # ragged: exercises the mu-padded tail
+    buckets = _shard_buckets(n, s=s, seed=3, mean=1.0e4, scale=1e-4)
+    stacked = _packets(CENTERED, buckets)
+    golden = jax.jit(lambda st: _scan_fold_golden(CENTERED, st, s))(stacked)
+    outs = {}
+    for backend in ("reference", "xla", "pallas"):
+        outs[backend] = jax.jit(
+            lambda st, b=backend: wire_fold.fold_packets(
+                st.codes, st.scales, st.amax, st.mean, s,
+                backend=b))(stacked)
+        np.testing.assert_array_equal(np.asarray(outs[backend])[:n],
+                                      np.asarray(golden)[:n],
+                                      err_msg=f"backend={backend}")
+    # the analytic mean half is exact to fp32: the folded bucket sits at
+    # the true mean of means +/- the quantized-residual scale, not at the
+    # 4-bit grid of 1e4 (which would be off by whole units)
+    true_mu = np.mean([b.mean(dtype=np.float64) for b in buckets])
+    err = np.abs(np.asarray(outs["xla"], np.float64)[:n] - true_mu)
+    assert err.max() < 1.0e-3, err.max()
+
+
+def test_fold_matches_decoded_wire_fold_shards():
+    """Packed fold == the decoded-wire `fold_shards` up to ONE documented
+    reassociation: the decoded wire folds (res_s + mu_s)/S per shard, the
+    packet folds the residuals and the means separately. Same shard
+    order, so the two agree to fp32 rounding of that reassociation."""
+    n, s = 512, 4
+    buckets = _shard_buckets(n, s=s, seed=7, mean=2.0)
+
+    def both(flats):
+        packets = [coll.encode_bucket(CENTERED, f, packed=True)[0]
+                   for f in flats]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *packets)
+        packed = coll.fold_packet_shards(CENTERED, stacked, s, n=n)
+        decoded = jnp.stack(
+            [coll.encode_bucket(CENTERED, f)[0] for f in flats])
+        return packed, coll.fold_shards(decoded, s)
+
+    packed, decoded = jax.jit(both)([jnp.asarray(b) for b in buckets])
+    np.testing.assert_allclose(np.asarray(packed), np.asarray(decoded),
+                               rtol=0, atol=1e-5)
+
+
+def test_uncentered_fold_skips_mean_add():
+    """nvfp4 (uncentered) packets carry mean=0.0 and the fold must skip
+    the add entirely — a `+ 0.0` would flip -0.0 accumulator entries."""
+    n, s = 64, 2
+    stacked = _packets(UNCENTERED, _shard_buckets(n, s=s, seed=11))
+    assert np.all(np.asarray(stacked.mean) == 0.0)
+    out = jax.jit(lambda st: wire_fold.fold_packets(
+        st.codes, st.scales, st.amax, None, s, backend="xla"))(stacked)
+    golden = jax.jit(
+        lambda st: _scan_fold_golden(UNCENTERED, st, s))(stacked)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(golden))
+
+
+@pytest.mark.parametrize("n", [16, 48, 257, 1040, 4096])
+def test_packet_decodes_to_decoded_wire_and_same_ef(n):
+    """decode_packet(encode(packed=True)) is bitwise the decoded wire of
+    encode(packed=False), and EF is identical — the wire format cannot
+    change training numerics (within one jit regime, the step's)."""
+    rng = np.random.default_rng(n)
+    flat = jnp.asarray(rng.standard_normal(n) + 0.5, jnp.float32)
+    ef = jnp.asarray(0.01 * rng.standard_normal(n), jnp.float32)
+
+    def run(flat, ef):
+        pkt, ef_p = coll.encode_bucket(CENTERED, flat, ef, packed=True)
+        dec = coll.decode_packet(CENTERED, pkt, n)
+        wire, ef_d = coll.encode_bucket(CENTERED, flat, ef)
+        return dec, wire, ef_p, ef_d
+
+    dec, wire, ef_p, ef_d = jax.jit(run)(flat, ef)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(wire))
+    np.testing.assert_array_equal(np.asarray(ef_p), np.asarray(ef_d))
+
+
+def test_packet_stage_twin_bitwise(monkeypatch):
+    """WIRE_FUSED off (the stage codec chain) emits byte-identical
+    packets to the fused Pallas pack — same codes, scales, amax, mean."""
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(rng.standard_normal(257) + 3.0, jnp.float32)
+    fused = jax.jit(
+        lambda f: coll.encode_bucket(CENTERED, f, packed=True)[0])(flat)
+    monkeypatch.setattr(coll, "WIRE_FUSED", False)
+    stage = jax.jit(
+        lambda f: coll.encode_bucket(CENTERED, f, packed=True)[0])(flat)
+    for name in coll.WirePacket._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(fused, name)),
+                                      np.asarray(getattr(stage, name)),
+                                      err_msg=name)
+
+
+def test_fallback_counted_and_warned_once():
+    wire_fold.reset_wire_fold_fallback_warnings()
+    hub = global_hub()
+    before = hub.counter("quant/wire_fold_fallback")
+    # a valid 4-shard stack folded with num_shards=3: the dispatcher
+    # rejects the mismatch and the decode-then-scan reference (which
+    # folds whatever rows it is given) takes over
+    stacked = _packets(UNCENTERED, _shard_buckets(64, s=4, seed=5))
+    args = (stacked.codes, stacked.scales, stacked.amax, None, 3)
+    with pytest.warns(UserWarning, match="packed wire fold fell back"):
+        out = wire_fold.fold_packets(*args)
+    assert out.shape == (64,)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # same reason: no rewarning
+        wire_fold.fold_packets(*args)
+    assert hub.counter("quant/wire_fold_fallback") == before + 2
+
+
+def test_fallback_surfaced_in_serve_metrics():
+    from repro.serve.metrics import ServeMetrics
+
+    wire_fold.reset_wire_fold_fallback_warnings()
+    base = ServeMetrics().summary()["wire_fold_fallback"]
+    with pytest.warns(UserWarning):
+        wire_fold._wire_fold_fallback("surfacing test")
+    assert ServeMetrics().summary()["wire_fold_fallback"] == base + 1
+
+
+def test_packet_layout_byte_accounting():
+    """README's bytes-read claim: a packet is ~0.5625 bytes/elem (codes
+    0.5 + scales 1/16) + 8 scalar bytes vs 4 bytes/elem decoded."""
+    n = 4096
+    pkt = jax.jit(
+        lambda f: coll.encode_bucket(CENTERED, f, packed=True)[0])(
+            jnp.ones((n,), jnp.float32))
+    padded = coll.packet_wire_elems(n)
+    assert pkt.codes.shape == (padded // 2,) and pkt.codes.dtype == jnp.uint8
+    assert pkt.scales.shape == (padded // BLOCK_SIZE,)
+    assert pkt.scales.dtype == jnp.uint8
+    payload = pkt.codes.nbytes + pkt.scales.nbytes + 8
+    assert payload / n < 0.57
+    assert payload / n < 0.15 * 4        # >7x fewer bytes than the fp32 wire
