@@ -19,12 +19,18 @@ Rows (name,us_per_call,derived):
                           min) on the speculative workload
   serve_spec_ngram_<kind> ditto with ngram speculation; derived accept_rate=..;
                           tokens_per_step=..;agree=.. (tokens vs baseline)
+  serve_disagg_<kind>     disaggregated prefill/decode pair mean TTFT; derived
+                          agree=.. (greedy identity vs the single engine);
+                          migration bytes/token and its ratio vs a dense bf16
+                          migration;ttft_ratio=.. vs the single engine
 
 Also writes ``artifacts/BENCH_serve.json`` (fused vs dense decode throughput
 per quantized KV mode — the nightly regression gate reads
 ``decode_throughput.<kind>.fused_speedup`` — plus the speculative
-accept-rate/tokens-per-step table, now with ``time_arms`` wall times),
-folded into ``BENCH_summary.json`` by ``benchmarks.run``.
+accept-rate/tokens-per-step table and the disaggregated-serving table the
+gate also reads: ``disagg.<kind>.migration_vs_dense_bf16 <= 0.35`` and
+``disagg.<kind>.ttft_ratio <= 1.5``), folded into ``BENCH_summary.json``
+by ``benchmarks.run``.
 """
 from __future__ import annotations
 
@@ -83,6 +89,7 @@ def run() -> None:
         cfg, model, params)}
     _run_prefix_workload(cfg, model, params)
     artifact["speculative_ngram_k4"] = _run_spec_workload(cfg, model, params)
+    artifact["disagg"] = _run_disagg_workload(cfg, model, params)
 
     os.makedirs(_ART, exist_ok=True)
     with open(os.path.join(_ART, "BENCH_serve.json"), "w") as f:
@@ -271,6 +278,73 @@ def _run_spec_workload(cfg, model, params) -> dict:
             "step_us_plain": stats["off"]["min_s"] * 1e6,
             "step_us_ngram": stats["ngram"]["min_s"] * 1e6,
         }
+    return artifact
+
+
+def _run_disagg_workload(cfg, model, params) -> dict:
+    """Disaggregated prefill/decode arm: a PrefillEngine/DecodeEngine pair
+    joined by the FP4 page wire must (a) stay greedy-token-identical to the
+    single unified engine, (b) migrate prefilled contexts as their stored
+    bytes — committed page payloads + the trimmed bf16 tail — at <= 0.35x
+    the dense bf16 bytes/token a naive migration would ship, and (c) not
+    regress TTFT (gated leniently at 1.5x: the in-process wire adds only a
+    host pack/unpack per request)."""
+    from repro.serve import Engine, EngineConfig, make_engine
+
+    rng = np.random.default_rng(13)
+    page = 32
+    prompt_len = 2 * page + 3            # 2 committed pages + a 3-token tail
+    gen = 12
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+               for _ in range(4)]
+    kw = dict(n_slots=2, max_len=prompt_len + gen + page, page_size=page,
+              quant_mode="bf16", prefill_chunk=32)
+
+    artifact = {}
+    for kind in ("fp4", "fp4-centered"):
+        outs, summs = {}, {}
+        for arm in ("single", "disagg"):
+            eng = make_engine(model, params, EngineConfig(
+                kv_cache=kind, disagg=(arm == "disagg"), **kw))
+            # warmup drain pays every jit compile (prefill buckets, decode,
+            # page import) so the TTFT comparison is steady-state
+            eng.submit(prompts[0], 4, seed=99)
+            eng.drain()
+            eng.reset_metrics()
+            for i, p in enumerate(prompts):
+                eng.submit(p, gen, seed=i)
+            fin = sorted(eng.drain(), key=lambda r: r.rid)
+            outs[arm] = [r.generated for r in fin]
+            summs[arm] = eng.metrics.summary()
+        agree = float(np.mean([a == b for a, b in
+                               zip(outs["single"], outs["disagg"])]))
+        s = summs["disagg"]
+        ttft_ratio = (s["mean_ttft_s"] / summs["single"]["mean_ttft_s"]
+                      if summs["single"]["mean_ttft_s"] else 0.0)
+        row = {
+            "agree": agree,
+            "migration_bytes_per_token": s["migration_bytes_per_token"],
+            "migration_vs_dense_bf16": s["migration_vs_dense_bf16"],
+            "migration_packets": s["migration_packets"],
+            "p50_transfer_ms": s["p50_transfer_ms"],
+            "ttft_single_ms": summs["single"]["mean_ttft_s"] * 1e3,
+            "ttft_disagg_ms": s["mean_ttft_s"] * 1e3,
+            "ttft_ratio": ttft_ratio,
+        }
+        artifact[kind] = row
+        emit(f"serve_disagg_{kind}", s["mean_ttft_s"] * 1e6,
+             f"agree={agree:.2f};"
+             f"migration_bytes_per_token="
+             f"{row['migration_bytes_per_token']:.1f};"
+             f"vs_dense_bf16={row['migration_vs_dense_bf16']:.3f};"
+             f"ttft_ratio={ttft_ratio:.2f}")
+        assert agree == 1.0, (
+            f"disaggregated greedy decode diverged from the single engine "
+            f"on {kind}")
+        assert row["migration_vs_dense_bf16"] <= 0.35, (
+            f"{kind} migration ships {row['migration_vs_dense_bf16']:.3f}x "
+            f"dense bf16 bytes/token (> 0.35 — the page wire must ship "
+            f"stored bytes, not dequantized ones)")
     return artifact
 
 

@@ -88,7 +88,7 @@ def check_staleness(written_at: str,
 
 
 def mark_regressions(summary: dict) -> list[str]:
-    """Flag perf inversions that MUST NOT ship. Three gates, same contract:
+    """Flag perf inversions that MUST NOT ship. Four gates, same contract:
 
     * quantized qgemm recipes whose prepared path is slower than inline
       re-quantization (``prepared_speedup >= 1.0`` — the per-step weight
@@ -96,6 +96,11 @@ def mark_regressions(summary: dict) -> list[str]:
     * serve decode throughput where the fused paged-attention read is
       slower than the dense ``_dense_view`` it replaces
       (``decode_throughput.<kind>.fused_speedup >= 1.0``);
+    * disaggregated serving whose page-wire migration ships more than
+      0.35x the dense bf16 bytes/token (``disagg.<kind>.
+      migration_vs_dense_bf16 <= 0.35`` — stored FP4 bytes, never a
+      dequantized migration), or whose TTFT exceeds 1.5x the single
+      engine's (``disagg.<kind>.ttft_ratio <= 1.5``);
     * comm nvfp4 recipes whose packed wire folds slower than the decoded
       fp32 wire it replaces (``wire_speedup >= 1.0``), or whose packed
       reduce is not under the bf16 baseline
@@ -129,6 +134,25 @@ def mark_regressions(summary: dict) -> list[str]:
             print(f"WARNING: serve decode {mode!r} REGRESSION: the fused "
                   f"paged-attention read is slower than the dense view it "
                   f"replaces (fused_speedup={speedup:.2f} < 1.0)",
+                  file=sys.stderr)
+    disagg = (summary.get("serve") or {}).get("disagg") or {}
+    for mode, row in disagg.items():
+        if not isinstance(row, dict):
+            continue
+        ratio = row.get("migration_vs_dense_bf16")
+        if ratio is not None and ratio > 0.35:
+            row["regression"] = True
+            offenders.append(f"serve:disagg:{mode}")
+            print(f"WARNING: serve disagg {mode!r} REGRESSION: migration "
+                  f"ships {ratio:.3f}x dense bf16 bytes/token (> 0.35 — "
+                  f"the page wire must ship stored FP4 bytes)",
+                  file=sys.stderr)
+        ttft = row.get("ttft_ratio")
+        if ttft is not None and ttft > 1.5:
+            row["regression"] = True
+            offenders.append(f"serve:disagg:{mode}:ttft")
+            print(f"WARNING: serve disagg {mode!r} REGRESSION: TTFT is "
+                  f"{ttft:.2f}x the single engine's (> 1.5)",
                   file=sys.stderr)
     recipes = (summary.get("comm") or {}).get("recipes") or {}
     for name, row in recipes.items():

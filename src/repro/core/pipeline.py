@@ -31,7 +31,6 @@ carry a Center stage.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -277,12 +276,10 @@ def register_plan(plan: GemmPlan) -> None:
 # Hadamard skip surfacing
 # --------------------------------------------------------------------------
 
-_HAD_SKIP_WARNED: set = set()
-
-
 def reset_hadamard_skip_warnings() -> None:
-    """Clear the once-per-length warning dedup (tests)."""
-    _HAD_SKIP_WARNED.clear()
+    """Clear the once-per-length warning dedup on the process hub (tests)."""
+    from repro.obs.telemetry import global_hub
+    global_hub().reset_warnings("hadamard_skip")
 
 
 def _hadamard_or_skip(t: jax.Array, axis: int) -> jax.Array:
@@ -291,16 +288,16 @@ def _hadamard_or_skip(t: jax.Array, axis: int) -> jax.Array:
         # Silent-recipe-downgrade counter: surfaces in quantwatch and
         # ServeMetrics.summary(), not just the once-per-length warning.
         # Lazy import keeps repro.core free of an obs dependency at import
-        # time (obs.telemetry is stdlib-only, so this costs nothing).
-        from repro.obs.telemetry import global_hub
-        global_hub().count("quant/skipped_hadamard")
-        if n not in _HAD_SKIP_WARNED:
-            _HAD_SKIP_WARNED.add(n)
-            warnings.warn(
-                f"Hadamard stage skipped: axis length {n} is not a multiple "
-                f"of {_TILE}; the GeMM runs unrotated (correct, unsmoothed). "
-                f"See plan_summary()['skipped_hadamard'].",
-                stacklevel=2)
+        # time (obs.telemetry is stdlib-only, so this costs nothing). The
+        # count lands process-wide AND on the scoped hub when an engine is
+        # stepping (obs.telemetry.use_hub); warn-once dedup is per hub.
+        from repro.obs.telemetry import report_downgrade
+        report_downgrade(
+            "quant/skipped_hadamard", "hadamard_skip", str(n),
+            f"Hadamard stage skipped: axis length {n} is not a multiple "
+            f"of {_TILE}; the GeMM runs unrotated (correct, unsmoothed). "
+            f"See plan_summary()['skipped_hadamard'].",
+            stacklevel=2)
         return t
     return hadamard_tiles(t, axis)
 
@@ -309,25 +306,21 @@ def _hadamard_or_skip(t: jax.Array, axis: int) -> jax.Array:
 # Fused backend (Pallas kernels; repro.kernels.fused)
 # --------------------------------------------------------------------------
 
-_FUSED_FALLBACK_WARNED: set = set()
-
-
 def reset_fused_fallback_warnings() -> None:
-    """Clear the once-per-reason warning dedup (tests)."""
-    _FUSED_FALLBACK_WARNED.clear()
+    """Clear the once-per-reason warning dedup on the process hub (tests)."""
+    from repro.obs.telemetry import global_hub
+    global_hub().reset_warnings("fused_fallback")
 
 
 def _fused_fallback(reason: str) -> None:
     """Loud fallback: a pipeline the fused backend was asked to run went to
     the stage path instead. Counted per occurrence (mirrors
-    ``quant/skipped_hadamard``) and warned once per reason."""
-    from repro.obs.telemetry import global_hub
-    global_hub().count("quant/fused_fallback")
-    if reason not in _FUSED_FALLBACK_WARNED:
-        _FUSED_FALLBACK_WARNED.add(reason)
-        warnings.warn(
-            f"fused quant backend fell back to the stage path: {reason}. "
-            f"Counted in telemetry as quant/fused_fallback.", stacklevel=3)
+    ``quant/skipped_hadamard``) and warned once per (hub, reason)."""
+    from repro.obs.telemetry import report_downgrade
+    report_downgrade(
+        "quant/fused_fallback", "fused_fallback", reason,
+        f"fused quant backend fell back to the stage path: {reason}. "
+        f"Counted in telemetry as quant/fused_fallback.", stacklevel=3)
 
 
 def _fused_interpret() -> bool:

@@ -53,7 +53,6 @@ counted (``quant/wire_fold_fallback``, warned once per reason — the
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Optional
 
 import jax
@@ -73,25 +72,21 @@ _FOLD_TILE_COLS = (65536, 16384, 4096, 1024, 256, 32)
 # Fallback accounting (the quant/fused_fallback pattern)
 # --------------------------------------------------------------------------
 
-_WIRE_FOLD_FALLBACK_WARNED: set = set()
-
-
 def reset_wire_fold_fallback_warnings() -> None:
-    """Clear the once-per-reason warning dedup (tests)."""
-    _WIRE_FOLD_FALLBACK_WARNED.clear()
+    """Clear the once-per-reason warning dedup on the process hub (tests)."""
+    from repro.obs.telemetry import global_hub
+    global_hub().reset_warnings("wire_fold")
 
 
 def _wire_fold_fallback(reason: str) -> None:
     """Loud fallback: a packed fold went to the decode-then-scan reference
     (or a packed encode went back to the decoded wire). Counted per
-    occurrence, warned once per reason."""
-    from repro.obs.telemetry import global_hub
-    global_hub().count("quant/wire_fold_fallback")
-    if reason not in _WIRE_FOLD_FALLBACK_WARNED:
-        _WIRE_FOLD_FALLBACK_WARNED.add(reason)
-        warnings.warn(
-            f"packed wire fold fell back: {reason}. Counted in telemetry "
-            f"as quant/wire_fold_fallback.", stacklevel=3)
+    occurrence, warned once per (hub, reason)."""
+    from repro.obs.telemetry import report_downgrade
+    report_downgrade(
+        "quant/wire_fold_fallback", "wire_fold", reason,
+        f"packed wire fold fell back: {reason}. Counted in telemetry "
+        f"as quant/wire_fold_fallback.", stacklevel=3)
 
 
 # --------------------------------------------------------------------------

@@ -30,7 +30,7 @@ from repro.configs import ALL_ARCHS, get_config, reduced
 from repro.core.policy import PrecisionPolicy
 from repro.models.layers import QuantCtx
 from repro.models.model import Model
-from repro.serve import Engine, EngineConfig
+from repro.serve import EngineConfig, make_engine
 from repro.serve.sampling import sample_tokens
 
 
@@ -106,7 +106,7 @@ def run_engine(args) -> None:
         from repro.obs import JsonlSink, Telemetry
         hub = Telemetry(JsonlSink(args.telemetry_out)
                         if args.telemetry_out else None)
-    eng = Engine(model, params, EngineConfig(
+    eng = make_engine(model, params, EngineConfig(
         n_slots=args.slots, max_len=max_len, kv_cache=args.kv_cache,
         kv_read=args.kv_read,
         page_size=args.page_size, quant_mode=args.quant, seed=args.seed,
@@ -116,6 +116,7 @@ def run_engine(args) -> None:
         speculate=args.speculate, draft_tokens=args.draft_tokens,
         self_draft_layers=args.draft_layers,
         draft_quant_mode=args.draft_quant,
+        disagg=args.disagg,
     ), tracer=tracer, telemetry=hub)
     tokens = np.asarray(_prompts(args, cfg, args.requests))
 
@@ -160,6 +161,11 @@ def run_engine(args) -> None:
           f"{int(summ['compile_count_decode'])}/"
           f"{int(summ['compile_count_verify'])}/"
           f"{int(summ['compile_count_draft'])}")
+    if args.disagg:
+        print(f"disagg: {int(summ['migration_packets'])} migrations, "
+              f"{summ['migration_bytes_per_token']:.0f} bytes/token on the "
+              f"wire ({summ['migration_vs_dense_bf16']:.2f}x dense bf16), "
+              f"p50 transfer {summ['p50_transfer_ms'] * 1e3:.0f}us")
     if args.speculate != "off":
         print(f"speculative ({args.speculate}, K={args.draft_tokens}): "
               f"accept-rate {summ['accept_rate']:.2f}, "
@@ -233,6 +239,12 @@ def main() -> None:
     ap.add_argument("--draft-quant", default="",
                     help="draft-model recipe / policy spec "
                          "(default: same as --quant)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated prefill/decode serving: a "
+                         "PrefillEngine commits FP4 pages and ships them "
+                         "over the in-process page wire to a DecodeEngine "
+                         "(stored bytes travel verbatim — greedy outputs "
+                         "are token-identical to the unified engine)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=0,
                     help="cache horizon (0 = prompt+gen)")

@@ -182,6 +182,32 @@ class DenseCacheAdapter:
         """Dense {stream: (L, P, *feat)} view of a page payload (identity)."""
         return dict(payload)
 
+    # ------------------------------------------------- migration hooks
+    # Disaggregated serving (repro.serve.disagg) ships a prefilled slot as
+    # page-granular frames. A dense "page" is just a K/V slice, so the
+    # frames are the slices themselves, with the last page trimmed to the
+    # valid length (beyond-length rows are zero by insert_from_buffer, and
+    # import clears the destination row, so trimming loses nothing).
+    def clear_slot(self, caches, slot):
+        """Zero every stream's row for ``slot`` (pre-import hygiene)."""
+        return {name: caches[name].at[:, slot].set(0)
+                for name in self.streams}
+
+    def export_slot_frames(self, caches, slot: int, length: int,
+                           page_size: int):
+        host = jax.device_get({name: caches[name][:, slot]
+                               for name in self.streams})
+        pages = []
+        for lo in range(0, length, page_size):
+            hi = min(lo + page_size, length)
+            pages.append({name: host[name][:, lo:hi]
+                          for name in self.streams})
+        return pages, {}
+
+    def write_slot_extras(self, caches, slot, extras):
+        assert not extras, f"dense caches have no extra frames: {set(extras)}"
+        return dict(caches)
+
     def bytes_per_token(self) -> float:
         """Marginal cache storage per cached token (one layer)."""
         itemsize = self.dtype.itemsize

@@ -15,7 +15,9 @@ from __future__ import annotations
 import json
 import math
 import time
-from typing import Any, Dict, List, Optional
+import warnings
+from contextlib import contextmanager
+from typing import Any, Dict, List, Optional, Set
 
 
 class JsonlSink:
@@ -66,6 +68,10 @@ class Telemetry:
         self.counters: Dict[str, float] = {}
         self.gauges: Dict[str, float] = {}
         self.series: Dict[str, List[float]] = {}
+        # Warn-once dedup state, grouped by downgrade kind (e.g.
+        # "paged_attn"). Scoping this per hub — not per process — is what
+        # lets two in-process engines each warn once (see use_hub).
+        self.warned: Dict[str, Set[str]] = {}
 
     # ------------------------------------------------------------- recording
     def count(self, name: str, n: float = 1.0) -> None:
@@ -111,6 +117,24 @@ class Telemetry:
         return {"counters": dict(self.counters), "gauges": dict(self.gauges),
                 "histograms": hists}
 
+    # ------------------------------------------------------------ warn-once
+    def warn_once(self, group: str, reason: str) -> bool:
+        """Record ``reason`` under ``group``; True exactly the first time."""
+        seen = self.warned.setdefault(group, set())
+        if reason in seen:
+            return False
+        seen.add(reason)
+        return True
+
+    def reset_warnings(self, group: Optional[str] = None) -> None:
+        """Clear warn-once dedup (one group, or all). Deliberately separate
+        from :meth:`reset`: a metrics-window reset should not re-arm
+        warnings."""
+        if group is None:
+            self.warned.clear()
+        else:
+            self.warned.pop(group, None)
+
     def reset(self) -> None:
         self.counters.clear()
         self.gauges.clear()
@@ -118,6 +142,7 @@ class Telemetry:
 
 
 _GLOBAL = Telemetry()
+_SCOPED: List[Telemetry] = []
 
 
 def global_hub() -> Telemetry:
@@ -125,3 +150,41 @@ def global_hub() -> Telemetry:
     place to thread a hub through (e.g. the pipeline's ragged-axis
     ``skipped_hadamard`` counter)."""
     return _GLOBAL
+
+
+def current_hub() -> Telemetry:
+    """The innermost scoped hub (see :func:`use_hub`), or the global one.
+
+    Low-level downgrade reporters resolve their hub through this at call
+    time, so code running inside an engine's step lands its counts and
+    warn-once state on *that engine's* hub instead of sharing one
+    process-wide registry across engines."""
+    return _SCOPED[-1] if _SCOPED else _GLOBAL
+
+
+@contextmanager
+def use_hub(hub: Telemetry):
+    """Make ``hub`` the :func:`current_hub` for the dynamic extent."""
+    _SCOPED.append(hub)
+    try:
+        yield hub
+    finally:
+        _SCOPED.pop()
+
+
+def report_downgrade(counter: str, group: str, reason: str, message: str,
+                     stacklevel: int = 3) -> None:
+    """One quant-path downgrade: count + warn once per (hub, reason).
+
+    The count always lands on the process hub (quantwatch and the CLIs read
+    it there) and *additionally* on the scoped hub when one is active, so a
+    multi-engine process keeps per-engine tallies without losing the global
+    one. Warn-once dedup lives on the innermost hub: two engines tripping
+    the same downgrade each warn exactly once.
+    """
+    hub = current_hub()
+    global_hub().count(counter)
+    if hub is not _GLOBAL:
+        hub.count(counter)
+    if hub.warn_once(group, reason):
+        warnings.warn(message, stacklevel=stacklevel + 1)

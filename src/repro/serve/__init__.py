@@ -6,7 +6,15 @@ Public surface::
     eng = Engine(model, params, EngineConfig(kv_cache="fp4-centered"))
     rid = eng.submit(prompt, max_new_tokens=32, temperature=0.8, top_k=40)
     finished = eng.drain()
+
+Disaggregated prefill/decode serving (``serve.disagg``) keeps the same API
+behind a router over a PrefillEngine/DecodeEngine pair::
+
+    from repro.serve import EngineConfig, make_engine
+    eng = make_engine(model, params,
+                      EngineConfig(kv_cache="fp4-centered", disagg=True))
 """
+from .disagg import DecodeEngine, DisaggRouter, PrefillEngine, make_engine
 from .engine import Engine, EngineConfig, chunk_buckets
 from .kvcache import (
     PagePool,
@@ -24,8 +32,11 @@ from .speculative import (
     StubDrafter,
     prompt_lookup,
 )
+from .wire import MigrationPacket, PageWire, pack_frames, unpack_frames
 
 __all__ = [
+    "DecodeEngine", "DisaggRouter", "PrefillEngine", "make_engine",
+    "MigrationPacket", "PageWire", "pack_frames", "unpack_frames",
     "Engine", "EngineConfig", "chunk_buckets", "PagePool",
     "QuantizedKVAdapter", "make_adapter", "prefix_page_keys",
     "ServeMetrics", "sample_tokens", "speculative_accept",

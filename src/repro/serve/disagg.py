@@ -1,0 +1,324 @@
+"""Disaggregated prefill/decode serving over the FP4 page wire.
+
+Two phase-specialized engines split the single :class:`~repro.serve.engine.
+Engine`'s step loop:
+
+  * :class:`PrefillEngine` runs chunked prefill exactly as the unified
+    engine does — same bucket jits, same prefix-cache reuse, same
+    commit-once page quantization — but instead of activating the slot for
+    decode, ``_post_prefill`` exports the slot's STORED bytes (committed
+    FP4 pages + exact trimmed tail) onto the :class:`~repro.serve.wire.
+    PageWire` and frees the slot for the next prompt.
+  * :class:`DecodeEngine` never sees a prompt. Its "prefill phase" ingests
+    migrated packets: clear the destination row, write each committed page
+    payload bit-verbatim, write the trimmed extras, restore host slot state
+    from the packet, and join the fused decode batch.
+
+Because the page codec is the wire format and import writes stored bytes,
+the decode-side slot is byte-identical to the prefill-side commit — greedy
+decode under disaggregation is token-identical to the single-engine path
+for every cache mode (asserted in ``tests/test_disagg.py``).
+
+Refcount handoff: the prefill engine's pool pins for a migrated request
+move into the packet's delivery callback; the decode engine acks
+(``wire.delivered``) only after its import completes, so shared prefix
+pages stay unevictable for the whole flight.
+
+:class:`DisaggRouter` wraps the pair behind the single-engine API
+(``submit / step / drain / abort / metrics.summary()``): prefill metrics
+land under the ``serve.prefill`` hub namespace, decode under
+``serve.decode``, and the merged summary adds wire transfer stats
+(``migration_bytes_per_token``, ``migration_vs_dense_bf16``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .engine import Engine, EngineConfig, _PrefillState
+from .scheduler import Request
+from .speculative import SelfDrafter
+from .wire import MigrationPacket, PageWire, pack_frames
+
+
+class PrefillEngine(Engine):
+    """Prefill-phase engine: prompts in, committed pages out on the wire."""
+
+    def __init__(self, model, params, config: EngineConfig, wire: PageWire,
+                 tracer=None, telemetry=None,
+                 metrics_namespace: str = "serve.prefill"):
+        # The prefill engine never decodes, so a drafter would never fire;
+        # force speculation off (the decode engine keeps the configured
+        # drafter).
+        config = dataclasses.replace(config, speculate="off")
+        super().__init__(model, params, config, tracer=tracer,
+                         telemetry=telemetry,
+                         metrics_namespace=metrics_namespace)
+        self.wire = wire
+
+    def _post_prefill(self, st: _PrefillState, tok: int,
+                      finished: List[Request]) -> None:
+        """Ship the finished prefill instead of activating the slot.
+
+        A request that already finished on its first token (EOS or a
+        max_new_tokens of 1) never migrates — it retires locally, releasing
+        its pins through the normal path.
+        """
+        slot, req = st.slot, st.req
+        if req.eos_id is not None and tok == req.eos_id:
+            req.finish_reason = "eos"
+        elif len(req.generated) >= req.max_new_tokens:
+            req.finish_reason = "length"
+        elif req.prompt_len >= self.capacity:
+            req.finish_reason = "capacity"
+        if req.done:
+            self._retire_slot(slot, req, finished)
+            return
+
+        p = self.config.page_size
+        with self._span("engine.export", rid=req.rid, slot=slot,
+                        tokens=req.prompt_len):
+            pages, extras = self.adapter.export_slot_frames(
+                self.caches, slot, req.prompt_len, p)
+        manifest, blob = pack_frames(list(pages) + [extras])
+        packet = MigrationPacket(
+            tid=-1, req=req, length=req.prompt_len, first_token=tok,
+            gencnt=1, page_keys=list(st.keys[: req.prompt_len // p]),
+            manifest=manifest, blob=blob)
+        # Refcount handoff: this slot's pins (prefix-hit pages acquired at
+        # _begin_prefill) transfer to the packet — released only when the
+        # decode side acks the import, never at transfer().
+        pinned = self._page_refs.pop(slot, [])
+        pool = self.pool
+
+        def _release_pins() -> None:
+            if pool is not None:
+                for key in pinned:
+                    pool.release(key)
+
+        self.wire.send(packet, on_delivered=_release_pins)
+        self.scheduler.transfer(slot)
+
+
+class DecodeEngine(Engine):
+    """Decode-phase engine: migrated packets in, tokens out."""
+
+    def __init__(self, model, params, config: EngineConfig, wire: PageWire,
+                 tracer=None, telemetry=None,
+                 metrics_namespace: str = "serve.decode"):
+        # The decode engine never runs a prompt, so prefix-cache state is
+        # dead weight here (shared pages arrive pre-committed in packets).
+        config = dataclasses.replace(config, prefix_cache=False)
+        super().__init__(model, params, config, tracer=tracer,
+                         telemetry=telemetry,
+                         metrics_namespace=metrics_namespace)
+        if isinstance(self.drafter, SelfDrafter):
+            raise NotImplementedError(
+                "--speculate self needs the prefill-side dense buffer to "
+                "seed its draft cache; the disaggregated decode engine "
+                "supports ngram (prompt-lookup) drafting only")
+        self.wire = wire
+        # Import jits (donated caches, like every cache-mutating engine op).
+        # Shapes retrace per distinct trimmed-extras size — bounded by the
+        # page size, same discipline as the prefill bucket grid.
+        self._clear_slot = jax.jit(
+            lambda caches, slot: self.adapter.clear_slot(caches, slot),
+            donate_argnums=(0,))
+        self._write_extras = jax.jit(
+            lambda caches, slot, extras:
+                self.adapter.write_slot_extras(caches, slot, extras),
+            donate_argnums=(0,))
+
+    def submit(self, *args, **kwargs) -> int:
+        raise RuntimeError(
+            "DecodeEngine takes work from the page wire, not submit(); "
+            "submit to the DisaggRouter (or its prefill engine)")
+
+    def _prefill_phase(self, finished: List[Request]) -> None:
+        """This engine's 'prefill' is importing migrated slots."""
+        while self.scheduler.n_free > 0 and self.wire.pending > 0:
+            packet = self.wire.recv()
+            self._import_packet(packet, finished)
+
+    def _import_packet(self, packet: MigrationPacket,
+                       finished: List[Request]) -> None:
+        req = packet.req
+        slot = self.scheduler.place_decode(req)
+        pages, extras = packet.frames()
+        p = self.config.page_size
+        with self._span("engine.import", rid=req.rid, slot=slot,
+                        tokens=packet.length, bytes=packet.nbytes):
+            # Clear-then-write: the row may hold a longer retired context,
+            # and page writes only cover [0, length) — stale bytes past the
+            # imported span would otherwise survive slot reuse.
+            self.caches = self._clear_slot(self.caches, jnp.int32(slot))
+            for i, payload in enumerate(pages):
+                self.caches = self._write_page(
+                    self.caches, jnp.int32(slot), jnp.int32(i * p), payload)
+            if extras:
+                self.caches = self._write_extras(
+                    self.caches, jnp.int32(slot), extras)
+            jax.block_until_ready(self.caches)
+
+        self._tokens[slot] = packet.first_token
+        self._pos[slot] = packet.length
+        self._active[slot] = True
+        self._temps[slot] = req.temperature
+        self._topks[slot] = req.top_k
+        self._seeds[slot] = req.seed
+        self._gencnt[slot] = packet.gencnt
+        # Ack AFTER the import landed: sender-side pins release only now.
+        self.wire.delivered(packet.tid)
+        self._maybe_finish(slot, req, packet.first_token, finished)
+
+
+class _RouterMetrics:
+    """Single-engine-shaped metrics view over the disagg pair + wire."""
+
+    def __init__(self, router: "DisaggRouter"):
+        self._r = router
+
+    @property
+    def finished(self) -> List[Request]:
+        return (self._r.prefill.metrics.finished
+                + self._r.decode.metrics.finished)
+
+    @property
+    def total_generated(self) -> int:
+        return sum(len(r.generated) for r in self.finished)
+
+    @property
+    def step_latencies_s(self) -> List[float]:
+        return self._r.decode.metrics.step_latencies_s
+
+    def now(self) -> float:
+        return self._r.decode.metrics.now()
+
+    def summary(self) -> Dict[str, float]:
+        pre = self._r.prefill.metrics.summary()
+        dec = self._r.decode.metrics.summary()
+        out = dict(dec)
+        # Prefill-side signals the decode engine never sees.
+        for key in ("prefill_tokens_computed", "prefill_tokens_padded",
+                    "prefix_hit_tokens", "prefix_hit_rate",
+                    "compile_count", "compile_count_prefill"):
+            out[key] = pre[key]
+        # Per-engine fallback counts add (each engine's scoped hub counts
+        # only its own downgrades — no double counting across the pair).
+        for key in ("skipped_hadamard", "fused_fallback",
+                    "paged_attn_fallback", "wire_fold_fallback"):
+            out[key] = pre[key] + dec[key]
+        # Requests that retired prefill-side (finish-on-first-token).
+        out["requests"] = pre["requests"] + dec["requests"]
+        out["generated_tokens"] = (pre["generated_tokens"]
+                                   + dec["generated_tokens"])
+        out.update(self._r.wire.stats())
+        dense = (self._r.decode.metrics.kv_dense_equiv_bytes_per_token
+                 * self._r.decode.model.cfg.num_layers)
+        out["migration_vs_dense_bf16"] = (
+            out["migration_bytes_per_token"] / dense if dense else 0.0)
+        return out
+
+
+class DisaggRouter:
+    """Prefill/decode engine pair behind the single-engine API.
+
+    ``submit`` lands prompts on the prefill engine; each ``step`` advances
+    prefill first (possibly shipping finished prompts onto the wire), then
+    decode (which ingests pending packets before its fused step) — a
+    migrated request starts decoding on the same router step its prefill
+    finished. ``drain`` runs until both engines and the wire are empty.
+    """
+
+    def __init__(self, model, params, config: EngineConfig = EngineConfig(),
+                 tracer=None, prefill_telemetry=None, decode_telemetry=None):
+        self.config = config
+        self.wire = PageWire(tracer=tracer)
+        self.prefill = PrefillEngine(model, params, config, self.wire,
+                                     tracer=tracer,
+                                     telemetry=prefill_telemetry)
+        self.decode = DecodeEngine(model, params, config, self.wire,
+                                   tracer=tracer,
+                                   telemetry=decode_telemetry)
+        self.metrics = _RouterMetrics(self)
+
+    # ------------------------------------------------------------------ API
+    @property
+    def capacity(self) -> int:
+        return self.decode.capacity
+
+    @property
+    def adapter(self):
+        return self.decode.adapter
+
+    @property
+    def has_work(self) -> bool:
+        return (self.prefill.scheduler.has_work
+                or self.wire.pending > 0
+                or self.decode.scheduler.has_work)
+
+    def submit(self, *args, **kwargs) -> int:
+        return self.prefill.submit(*args, **kwargs)
+
+    def step(self) -> List[Request]:
+        finished = self.prefill.step()
+        finished.extend(self.decode.step())
+        return finished
+
+    def drain(self, max_steps: Optional[int] = None) -> List[Request]:
+        out: List[Request] = []
+        steps = 0
+        while self.has_work:
+            out.extend(self.step())
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return out
+
+    def abort(self, rid: int, reason: str = "aborted") -> Optional[Request]:
+        """Cancel wherever the request lives: prefill engine, in flight on
+        the wire (dropping the packet acks it, releasing prefill pins), or
+        decode engine."""
+        req = self.prefill.abort(rid, reason)
+        if req is not None:
+            return req
+        packet = self.wire.drop(rid)
+        if packet is not None:
+            packet.req.finish_reason = reason
+            packet.req.finish_time = self.metrics.now()
+            return packet.req
+        return self.decode.abort(rid, reason)
+
+    def reset_metrics(self) -> None:
+        self.prefill.reset_metrics()
+        self.decode.reset_metrics()
+        self.wire = PageWire(tracer=self.wire.tracer)
+        self.prefill.wire = self.wire
+        self.decode.wire = self.wire
+        self.metrics = _RouterMetrics(self)
+
+
+def make_engine(model, params, config: EngineConfig = EngineConfig(),
+                tracer=None, telemetry=None, drafter=None,
+                prefill_telemetry=None, decode_telemetry=None):
+    """Engine factory honoring ``config.disagg``.
+
+    The disagg pair keeps per-engine hubs (scoped fallback counters and
+    warn-once dedup stay per engine); pass ``prefill_telemetry`` /
+    ``decode_telemetry`` to stream both — two hubs may share one sink. A
+    bare ``telemetry`` hub attaches to the decode engine (the token-
+    emitting side). Custom ``drafter`` objects are single-engine only; the
+    router builds the decode engine's drafter from ``config.speculate``.
+    """
+    if config.disagg:
+        if drafter is not None:
+            raise ValueError("custom drafters are single-engine only; "
+                             "use config.speculate with disagg")
+        return DisaggRouter(model, params, config, tracer=tracer,
+                            prefill_telemetry=prefill_telemetry,
+                            decode_telemetry=decode_telemetry or telemetry)
+    return Engine(model, params, config, tracer=tracer, telemetry=telemetry,
+                  drafter=drafter)

@@ -51,6 +51,7 @@ from repro.core.policy import PrecisionPolicy
 from repro.models.cache import cached_insert_fn
 from repro.models.layers import QuantCtx
 from repro.models.model import Model
+from repro.obs.telemetry import use_hub
 
 from .kvcache import (
     PagePool,
@@ -118,6 +119,11 @@ class EngineConfig:
     record_prefill_logits: bool = False   # keep last-prompt-position logits
                                           # on each Request (tests/debug)
     max_waiting: int = 256           # waiting-queue backpressure bound
+    disagg: bool = False             # disaggregated prefill/decode serving:
+                                     # make_engine (serve.disagg) builds a
+                                     # PrefillEngine + DecodeEngine pair
+                                     # joined by a PageWire instead of one
+                                     # unified engine
     seed: int = 0
 
 
@@ -136,8 +142,11 @@ class Engine:
 
     def __init__(self, model: Model, params, config: EngineConfig = EngineConfig(),
                  drafter: Optional[Drafter] = None, tracer=None,
-                 telemetry=None):
+                 telemetry=None, metrics_namespace: str = "serve"):
         cfg = model.cfg
+        # Hub-name prefix for this engine's metrics (a disagg pair runs
+        # "serve.prefill" / "serve.decode" so shared sinks stay legible).
+        self._metrics_namespace = metrics_namespace
         # Observability (repro.obs): ``tracer`` is a ChromeTracer — engine
         # phases emit spans (engine.step / admit / prefill_chunk / decode /
         # draft / verify / commit + pool_hit instants); ``telemetry`` is a
@@ -270,7 +279,8 @@ class Engine:
             num_layers=self.model.cfg.num_layers,
             kv_read=self._kv_read,
             kv_read_bytes_per_token=self._kv_read_bytes,
-            kv_dense_equiv_bytes_per_token=dense_fn(), **kw,
+            kv_dense_equiv_bytes_per_token=dense_fn(),
+            namespace=self._metrics_namespace, scoped=True, **kw,
         )
         self.metrics.prefill_compiles = len(self._prefill_shapes)
         self.metrics.decode_compiles = len(self._decode_shapes)
@@ -390,17 +400,33 @@ class Engine:
         (or one multi-token speculative step when a drafter is configured).
 
         Returns the requests that finished during this step.
+
+        The whole step runs under ``use_hub(self.metrics.hub)``: low-level
+        downgrade reporters (fused/paged-attn/wire-fold fallbacks, Hadamard
+        skips) resolve their hub dynamically, so anything tripped while
+        tracing or running THIS engine's jits counts on this engine's hub
+        (as well as the process hub) and warn-once dedup is per engine.
         """
+        with use_hub(self.metrics.hub):
+            return self._step_impl()
+
+    def _prefill_phase(self, finished: List[Request]) -> None:
+        """Advance prompt ingestion under the step's token budget. The
+        disaggregated DecodeEngine overrides this: its 'prefill' is
+        importing migrated slots off the page wire."""
+        budget = (self.config.prefill_token_budget
+                  or self.config.prefill_chunk)
+        while budget > 0:
+            st = self._next_prefill()
+            if st is None:
+                break
+            budget -= self._prefill_chunk_step(st, budget, finished)
+
+    def _step_impl(self) -> List[Request]:
         t_start = self.metrics.now()
         finished: List[Request] = []
         with self._span("engine.step", step=self._step_idx):
-            budget = (self.config.prefill_token_budget
-                      or self.config.prefill_chunk)
-            while budget > 0:
-                st = self._next_prefill()
-                if st is None:
-                    break
-                budget -= self._prefill_chunk_step(st, budget, finished)
+            self._prefill_phase(finished)
 
             n_active = int(self._active.sum())
             # KV bytes this step's attention streams from the cache: every
@@ -415,11 +441,19 @@ class Engine:
                                     ("decode", self.config.n_slots))
                 with self._span("engine.decode", n_active=n_active,
                                 kv_read=self._kv_read, kv_bytes=kv_bytes):
+                    # Copy the host arrays the bookkeeping loop below
+                    # mutates: on CPU, jnp.asarray may alias numpy memory
+                    # zero-copy, and the cache-update half of the decode
+                    # can still be in flight (only nxt is blocked on) when
+                    # _tokens/_pos/_gencnt are rewritten. Same race PR 5
+                    # fixed in the speculative step's pos operand.
                     nxt, self.caches = self._decode(
                         self.params, self.caches,
-                        jnp.asarray(self._tokens), jnp.asarray(self._pos),
+                        jnp.asarray(self._tokens.copy()),
+                        jnp.asarray(self._pos.copy()),
                         jnp.asarray(self._temps), jnp.asarray(self._topks),
-                        jnp.asarray(self._seeds), jnp.asarray(self._gencnt),
+                        jnp.asarray(self._seeds),
+                        jnp.asarray(self._gencnt.copy()),
                         self._step_idx,
                     )
                     nxt = np.asarray(jax.block_until_ready(nxt))
@@ -448,7 +482,8 @@ class Engine:
         self.metrics.record_step(latency, n_active, self.scheduler.occupancy,
                                  kv_read_bytes=kv_bytes if n_active else 0.0)
         self.metrics.hub.emit(
-            "serve.step", step=self._step_idx - 1, latency_s=latency,
+            f"{self._metrics_namespace}.step",
+            step=self._step_idx - 1, latency_s=latency,
             n_active=n_active, occupancy=self.scheduler.occupancy,
             finished=len(finished), kv_read=self._kv_read,
             kv_read_bytes=kv_bytes if n_active else 0.0)
@@ -492,7 +527,11 @@ class Engine:
             n_acc, emitted = self._accept(
                 logits, jnp.asarray(drafts), qprobs,
                 jnp.asarray(self._temps), jnp.asarray(self._topks),
-                jnp.asarray(self._seeds), jnp.asarray(self._gencnt))
+                jnp.asarray(self._seeds),
+                # copy: the emit loop below mutates _gencnt while device
+                # work from this step may still be in flight (the same
+                # zero-copy aliasing race as the pos operand above)
+                jnp.asarray(self._gencnt.copy()))
             n_acc = np.asarray(jax.block_until_ready(n_acc))
         emitted = np.asarray(emitted)
 
@@ -684,15 +723,22 @@ class Engine:
         req.generated.append(tok)
         if self.config.record_prefill_logits:
             req.prefill_logits = np.asarray(logits[0], np.float32)
+        del self._prefilling[slot]
+        self._post_prefill(st, tok, finished)
 
+    def _post_prefill(self, st: _PrefillState, tok: int,
+                      finished: List[Request]) -> None:
+        """The prompt is in the slot cache and its first token is sampled:
+        activate the slot for decode. The disaggregated PrefillEngine
+        overrides this to export the slot over the page wire instead."""
+        slot, req = st.slot, st.req
         self._tokens[slot] = tok
-        self._pos[slot] = s
+        self._pos[slot] = req.prompt_len
         self._active[slot] = True
         self._temps[slot] = req.temperature
         self._topks[slot] = req.top_k
         self._seeds[slot] = req.seed
         self._gencnt[slot] = 1    # the prefill-sampled token was index 0
-        del self._prefilling[slot]
         self.scheduler.begin_decode(slot)
         self._maybe_finish(slot, req, tok, finished)
 
@@ -705,22 +751,75 @@ class Engine:
         elif int(self._pos[slot]) >= self.capacity:
             req.finish_reason = "capacity"
         if req.done:
+            self._retire_slot(slot, req, finished)
+
+    def _retire_slot(self, slot: int, req: Request,
+                     finished: List[Request]) -> None:
+        """Free one finished request's slot: reset host state, release its
+        pinned pool pages, return the slot to the scheduler."""
+        req.finish_time = self.metrics.now()
+        self._active[slot] = False
+        # Reset host slot state so the (masked) decode of a free slot
+        # never scatters at an out-of-range position.
+        self._tokens[slot] = 0
+        self._pos[slot] = 0
+        self._temps[slot] = 0.0
+        self._topks[slot] = 0
+        self._gencnt[slot] = 0
+        if self.pool is not None:
+            for key in self._page_refs.pop(slot, []):
+                self.pool.release(key)
+        self.scheduler.retire(slot)
+        if self.tracer is not None:
+            self.tracer.instant("engine.retire", cat="engine",
+                                rid=req.rid, slot=slot,
+                                reason=req.finish_reason)
+        self.metrics.record_finished(req)
+        finished.append(req)
+
+    def _release_prefill_pins(self, st: _PrefillState) -> None:
+        """Release the pool pins a mid-prefill request acquired.
+
+        ``_begin_prefill`` pins prefix-hit pages into ``st.acquired``, but
+        ``self._page_refs[slot]`` — what retirement releases — is only
+        populated at ``_finalize_prefill``. Any retirement between begin
+        and finalize must release through HERE or the pins leak (refcounts
+        never return to zero and the pool can never evict those pages).
+        """
+        if self.pool is not None:
+            for key, _ in st.acquired:
+                self.pool.release(key)
+        st.acquired = []
+
+    def abort(self, rid: int, reason: str = "aborted") -> Optional[Request]:
+        """Cancel one request wherever it lives: waiting queue, mid-prefill
+        slot, or decode slot. Returns the request (finish_reason set to
+        ``reason``) or None if ``rid`` is not live in this engine.
+
+        This is the non-happy-path retirement: a request aborted between
+        ``_begin_prefill`` and ``_finalize_prefill`` releases the pins it
+        acquired (the mid-prefill pool-pin leak fix).
+        """
+        req = self.scheduler.cancel_waiting(rid)
+        if req is not None:
+            req.finish_reason = reason
             req.finish_time = self.metrics.now()
-            self._active[slot] = False
-            # Reset host slot state so the (masked) decode of a free slot
-            # never scatters at an out-of-range position.
-            self._tokens[slot] = 0
-            self._pos[slot] = 0
-            self._temps[slot] = 0.0
-            self._topks[slot] = 0
-            self._gencnt[slot] = 0
-            if self.pool is not None:
-                for key in self._page_refs.pop(slot, []):
-                    self.pool.release(key)
-            self.scheduler.retire(slot)
-            if self.tracer is not None:
-                self.tracer.instant("engine.retire", cat="engine",
-                                    rid=req.rid, slot=slot,
-                                    reason=req.finish_reason)
             self.metrics.record_finished(req)
-            finished.append(req)
+            return req
+        for slot, st in list(self._prefilling.items()):
+            if st.req.rid != rid:
+                continue
+            st.req.finish_reason = reason
+            self._release_prefill_pins(st)
+            del self._prefilling[slot]
+            finished: List[Request] = []
+            self._retire_slot(slot, st.req, finished)
+            return st.req
+        for slot, req in self.scheduler.active_items():
+            if req.rid != rid:
+                continue
+            req.finish_reason = reason
+            finished = []
+            self._retire_slot(slot, req, finished)
+            return req
+        return None

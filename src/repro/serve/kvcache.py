@@ -28,7 +28,6 @@ when centered) vs 2 B/elem for bf16 — ~0.28-0.30x.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from collections import OrderedDict
 from typing import Any, Dict, Optional, Tuple
 
@@ -57,23 +56,22 @@ _EPS = 1e-30
 # warned once per reason.
 # --------------------------------------------------------------------------
 
-_PAGED_ATTN_WARNED: set = set()
-
-
 def reset_paged_attn_fallback_warnings() -> None:
-    """Clear the once-per-reason warning dedup (tests)."""
-    _PAGED_ATTN_WARNED.clear()
+    """Clear the once-per-reason warning dedup on the process hub (tests).
+
+    Engine-scoped hubs (see ``obs.telemetry.use_hub``) carry their own
+    dedup state and are born fresh with each engine."""
+    from repro.obs.telemetry import global_hub
+    global_hub().reset_warnings("paged_attn")
 
 
 def _paged_attn_fallback(reason: str) -> None:
-    from repro.obs.telemetry import global_hub
-    global_hub().count("quant/paged_attn_fallback")
-    if reason not in _PAGED_ATTN_WARNED:
-        _PAGED_ATTN_WARNED.add(reason)
-        warnings.warn(
-            f"paged FP4 attention fell back to the dense-view read path: "
-            f"{reason}. Counted in telemetry as quant/paged_attn_fallback.",
-            stacklevel=3)
+    from repro.obs.telemetry import report_downgrade
+    report_downgrade(
+        "quant/paged_attn_fallback", "paged_attn", reason,
+        f"paged FP4 attention fell back to the dense-view read path: "
+        f"{reason}. Counted in telemetry as quant/paged_attn_fallback.",
+        stacklevel=3)
 
 
 # --------------------------------------------------------------------------
@@ -506,6 +504,50 @@ class QuantizedKVAdapter:
                            dtype=self.dtype, block_size=self.block_size)
         return {"k": deq[:, :, 0], "v": deq[:, :, 1]}
 
+    # ------------------------------------------------- migration hooks
+    # Disaggregated serving ships a prefilled slot to a decode engine as its
+    # STORED bytes: committed pages exactly as `extract_page_payload` sees
+    # them (the page codec is the wire format — zero re-quantization) plus
+    # the exact bf16 tail trimmed to its valid remainder. Import clears the
+    # destination row first, so a migrated slot is byte-identical to the
+    # prefill-side slot including the zeroed beyond-length regions.
+    def clear_slot(self, caches, slot):
+        """Zero every leaf's row for ``slot`` (slot-reuse hygiene before a
+        page-granular import; ``insert_from_buffer`` masks instead)."""
+        return {k: caches[k].at[:, slot].set(0) for k in caches}
+
+    def export_slot_frames(self, caches, slot: int, length: int,
+                           page_size: int):
+        """Host-side stored bytes of one slot's first ``length`` tokens.
+
+        Returns ``(pages, extras)``: ``pages[i]`` is committed page ``i``'s
+        payload (bitwise ``extract_page_payload``); ``extras["tail"]`` is
+        the exact tail trimmed to the boundary remainder (absent when the
+        context is page-aligned).
+        """
+        assert page_size == self.page_size
+        p = self.page_size
+        n_full = length // p
+        host = jax.device_get({k: caches[k][:, slot]
+                               for k in self._page_keys + ("tail",)})
+        pages = [{k: host[k][:, i] for k in self._page_keys}
+                 for i in range(n_full)]
+        extras = {}
+        rem = length - n_full * p
+        if rem:
+            extras["tail"] = host["tail"][:, :rem]
+        return pages, extras
+
+    def write_slot_extras(self, caches, slot, extras):
+        """Write the non-page frames of a migrated slot (the trimmed tail)
+        into a cleared row. Traced; shapes keyed by the trimmed lengths."""
+        out = dict(caches)
+        if "tail" in extras:
+            t = extras["tail"].shape[1]
+            out["tail"] = caches["tail"].at[:, slot, :t].set(
+                extras["tail"].astype(self.dtype))
+        return out
+
     # ------------------------------------------------------------------ cost
     def bytes_per_token(self) -> float:
         """Marginal storage per committed cached token (k+v, one layer)."""
@@ -554,7 +596,9 @@ class QuantizedLatentAdapter:
     when ``read_backend == "fused"`` (payload as stored, analytic mean
     fold) or the float32 ``_dense_view`` otherwise. The engine's MLA path
     is whole-prompt prefill without speculation or prefix caching, so the
-    span/page-payload protocol hooks intentionally raise.
+    speculative span hooks intentionally raise; the page-payload and
+    migration hooks are real (disaggregated serving ships latent pages
+    across the engine boundary as their stored bytes).
     """
 
     kv_lora_rank: int
@@ -740,8 +784,8 @@ class QuantizedLatentAdapter:
         return ctx, new
 
     # The engine serves MLA through whole-prompt prefill without
-    # speculation or prefix caching (see Engine.__init__), so these
-    # protocol hooks are structurally unreachable.
+    # speculation or prefix caching (see Engine.__init__), so the span
+    # hooks are structurally unreachable.
     def update_span(self, cache, toks, pos):
         raise NotImplementedError(
             "speculative spans require the chunked GQA serving path")
@@ -755,13 +799,61 @@ class QuantizedLatentAdapter:
             "MLA serves via whole-prompt padded prefill, not chunked "
             "context buffers")
 
+    # ------------------------------------------------- page payload hooks
+    # A committed latent page is self-contained just like a GQA K/V page
+    # (codes + scales + pamax [+ mean]); the exact kr ring rides separately
+    # (see export_slot_frames). Used by disaggregated migration — the
+    # engine's MLA path still has no prefix cache (chunked-GQA only).
     def extract_page_payload(self, caches, slot, page_idx, page_size):
-        raise NotImplementedError(
-            "prefix-cache page sharing requires the chunked GQA path")
+        assert page_size == self.page_size
+        out = {"codes": caches["codes"][:, slot, page_idx],
+               "scales": caches["scales"][:, slot, page_idx],
+               "pamax": caches["pamax"][:, slot, page_idx]}
+        if self.centered:
+            out["mean"] = caches["mean"][:, slot, page_idx]
+        return out
 
     def write_page_payload(self, caches, slot, start, payload):
-        raise NotImplementedError(
-            "prefix-cache page sharing requires the chunked GQA path")
+        """Write one committed-page payload at token offset ``start``."""
+        i = start // self.page_size
+        out = dict(caches)
+        for name in self._page_keys:
+            out[name] = caches[name].at[:, slot, i].set(
+                payload[name].astype(caches[name].dtype))
+        return out
+
+    # ------------------------------------------------- migration hooks
+    def clear_slot(self, caches, slot):
+        """Zero every leaf's row for ``slot`` (pre-import hygiene)."""
+        return {k: caches[k].at[:, slot].set(0) for k in caches}
+
+    def export_slot_frames(self, caches, slot: int, length: int,
+                           page_size: int):
+        """Stored bytes of one slot: committed ``c`` pages as payloads,
+        plus the exact trimmed tail and the exact kr ring up to
+        ``length`` (kr is per token, not per page)."""
+        assert page_size == self.page_size
+        p = self.page_size
+        n_full = length // p
+        host = jax.device_get({k: caches[k][:, slot]
+                               for k in self._page_keys + ("tail", "kr")})
+        pages = [{k: host[k][:, i] for k in self._page_keys}
+                 for i in range(n_full)]
+        extras = {"kr": host["kr"][:, :length]}
+        rem = length - n_full * p
+        if rem:
+            extras["tail"] = host["tail"][:, :rem]
+        return pages, extras
+
+    def write_slot_extras(self, caches, slot, extras):
+        out = dict(caches)
+        if "tail" in extras:
+            t = extras["tail"].shape[1]
+            out["tail"] = caches["tail"].at[:, slot, :t].set(
+                extras["tail"].astype(self.dtype))
+        kr = extras["kr"].astype(self.dtype)
+        out["kr"] = caches["kr"].at[:, slot, :kr.shape[1]].set(kr)
+        return out
 
     def insert_from_buffer(self, caches, buf, slot, length):
         """Quantize + place one whole-prompt prefill into ``slot``.

@@ -36,6 +36,16 @@ class ServeMetrics:
     kv_read_bytes_per_token: float = 0.0
     kv_dense_equiv_bytes_per_token: float = 0.0
     hub: Telemetry = dataclasses.field(default_factory=Telemetry)
+    # Hub-name prefix: a disagg pair runs one engine under "serve.prefill"
+    # and one under "serve.decode", so a shared sink/hub keeps the two
+    # engines' streams apart. Single-engine default stays "serve".
+    namespace: str = "serve"
+    # Fallback-counter scope for summary(): scoped=True reads this
+    # instance's own hub (the engine runs its steps under
+    # ``obs.telemetry.use_hub(self.hub)``, so per-engine counts land
+    # there); the default reads the process hub — the pre-existing contract
+    # for bare ServeMetrics() consumers and the single-engine CLI.
+    scoped: bool = False
 
     finished: List[Request] = dataclasses.field(default_factory=list)
     # distinct jit shapes compiled, split by engine phase: prefill (chunk /
@@ -54,70 +64,73 @@ class ServeMetrics:
     def now(self) -> float:
         return time.perf_counter()
 
+    def _k(self, name: str) -> str:
+        return f"{self.namespace}/{name}"
+
     # -------------------------------------------------------------- recording
     def record_step(self, latency_s: float, n_active: int, occupancy: float,
                     kv_read_bytes: float = 0.0):
         if self._t0 is None:
             self._t0 = time.perf_counter() - latency_s
         self._t1 = time.perf_counter()
-        self.hub.observe("serve/step_latency_s", latency_s)
-        self.hub.observe("serve/step_active", n_active)
-        self.hub.observe("serve/step_occupancy", occupancy)
+        self.hub.observe(self._k("step_latency_s"), latency_s)
+        self.hub.observe(self._k("step_active"), n_active)
+        self.hub.observe(self._k("step_occupancy"), occupancy)
         if kv_read_bytes > 0.0:
             # decode-bandwidth gauge: bytes of KV payload the step's
             # attention streams, and the achieved read rate
-            self.hub.observe("serve/decode_kv_read_bytes", kv_read_bytes)
+            self.hub.observe(self._k("decode_kv_read_bytes"), kv_read_bytes)
             if latency_s > 0.0:
                 gbps = kv_read_bytes / latency_s / 1e9
-                self.hub.gauge("serve/decode_kv_read_gbps", gbps)
-                self.hub.observe("serve/decode_kv_read_gbps", gbps)
+                self.hub.gauge(self._k("decode_kv_read_gbps"), gbps)
+                self.hub.observe(self._k("decode_kv_read_gbps"), gbps)
 
     def record_finished(self, req: Request):
         self.finished.append(req)
         if req.first_token_time is not None:
-            self.hub.observe("serve/ttft_s",
+            self.hub.observe(self._k("ttft_s"),
                              req.first_token_time - req.submit_time)
             if req.finish_time is not None and len(req.generated) > 1:
                 self.hub.observe(
-                    "serve/tpot_s",
+                    self._k("tpot_s"),
                     (req.finish_time - req.first_token_time)
                     / (len(req.generated) - 1))
 
     def record_prefill_chunk(self, valid: int, padded: int):
-        self.hub.count("serve/prefill_tokens_computed", valid)
-        self.hub.count("serve/prefill_tokens_padded", padded)
+        self.hub.count(self._k("prefill_tokens_computed"), valid)
+        self.hub.count(self._k("prefill_tokens_padded"), padded)
 
     def record_prefix_lookup(self, hit_pages: int, lookup_pages: int,
                              page_size: int):
-        self.hub.count("serve/prefix_hit_pages", hit_pages)
-        self.hub.count("serve/prefix_lookup_pages", lookup_pages)
-        self.hub.count("serve/prefix_hit_tokens", hit_pages * page_size)
+        self.hub.count(self._k("prefix_hit_pages"), hit_pages)
+        self.hub.count(self._k("prefix_lookup_pages"), lookup_pages)
+        self.hub.count(self._k("prefix_hit_tokens"), hit_pages * page_size)
 
     def record_speculation(self, proposed: int, accepted: int, emitted: int,
                            n_slots: int):
         """One speculative step's batch totals (draft tokens proposed across
         the ``n_slots`` active slots, accepted by the target, tokens
         actually emitted)."""
-        self.hub.count("serve/spec_steps")
-        self.hub.count("serve/spec_slot_steps", n_slots)
-        self.hub.count("serve/draft_tokens_proposed", proposed)
-        self.hub.count("serve/draft_tokens_accepted", accepted)
-        self.hub.count("serve/spec_tokens_emitted", emitted)
+        self.hub.count(self._k("spec_steps"))
+        self.hub.count(self._k("spec_slot_steps"), n_slots)
+        self.hub.count(self._k("draft_tokens_proposed"), proposed)
+        self.hub.count(self._k("draft_tokens_accepted"), accepted)
+        self.hub.count(self._k("spec_tokens_emitted"), emitted)
 
     # ------------------------------------------------------------------ views
     # Hub-backed views of what used to be plain list/int fields, kept for
     # existing consumers (benchmarks/bench_serve.py reads step_latencies_s).
     @property
     def step_latencies_s(self) -> List[float]:
-        return self.hub.values("serve/step_latency_s")
+        return self.hub.values(self._k("step_latency_s"))
 
     @property
     def step_active(self) -> List[float]:
-        return self.hub.values("serve/step_active")
+        return self.hub.values(self._k("step_active"))
 
     @property
     def step_occupancy(self) -> List[float]:
-        return self.hub.values("serve/step_occupancy")
+        return self.hub.values(self._k("step_occupancy"))
 
     @property
     def total_generated(self) -> int:
@@ -125,6 +138,7 @@ class ServeMetrics:
 
     def summary(self) -> Dict[str, float]:
         c, h = self.hub.counter, self.hub
+        dg = self.hub if self.scoped else global_hub()
         lat = np.asarray(self.step_latencies_s or [0.0])
         wall = ((self._t1 - self._t0)
                 if self._t0 is not None and self._t1 is not None else 0.0)
@@ -132,12 +146,12 @@ class ServeMetrics:
             "requests": float(len(self.finished)),
             "generated_tokens": float(self.total_generated),
             "throughput_tok_s": (self.total_generated / wall) if wall else 0.0,
-            "mean_ttft_s": h.mean("serve/ttft_s"),
-            "p50_ttft_s": h.percentile("serve/ttft_s", 50),
-            "p99_ttft_s": h.percentile("serve/ttft_s", 99),
-            "mean_tpot_s": h.mean("serve/tpot_s"),
-            "p50_tpot_s": h.percentile("serve/tpot_s", 50),
-            "p99_tpot_s": h.percentile("serve/tpot_s", 99),
+            "mean_ttft_s": h.mean(self._k("ttft_s")),
+            "p50_ttft_s": h.percentile(self._k("ttft_s"), 50),
+            "p99_ttft_s": h.percentile(self._k("ttft_s"), 99),
+            "mean_tpot_s": h.mean(self._k("tpot_s")),
+            "p50_tpot_s": h.percentile(self._k("tpot_s"), 50),
+            "p99_tpot_s": h.percentile(self._k("tpot_s"), 99),
             "p50_step_ms": float(np.percentile(lat, 50) * 1e3),
             "p95_step_ms": float(np.percentile(lat, 95) * 1e3),
             "mean_occupancy": float(np.mean(self.step_occupancy or [0.0])),
@@ -149,13 +163,13 @@ class ServeMetrics:
                 self.kv_read_bytes_per_token * self.num_layers,
             "kv_dense_equiv_bytes_per_token":
                 self.kv_dense_equiv_bytes_per_token * self.num_layers,
-            "decode_kv_read_gbps": h.mean("serve/decode_kv_read_gbps"),
-            "prefill_tokens_computed": c("serve/prefill_tokens_computed"),
-            "prefill_tokens_padded": c("serve/prefill_tokens_padded"),
-            "prefix_hit_tokens": c("serve/prefix_hit_tokens"),
-            "prefix_hit_rate": (c("serve/prefix_hit_pages")
-                                / c("serve/prefix_lookup_pages")
-                                if c("serve/prefix_lookup_pages") else 0.0),
+            "decode_kv_read_gbps": h.mean(self._k("decode_kv_read_gbps")),
+            "prefill_tokens_computed": c(self._k("prefill_tokens_computed")),
+            "prefill_tokens_padded": c(self._k("prefill_tokens_padded")),
+            "prefix_hit_tokens": c(self._k("prefix_hit_tokens")),
+            "prefix_hit_rate": (c(self._k("prefix_hit_pages"))
+                                / c(self._k("prefix_lookup_pages"))
+                                if c(self._k("prefix_lookup_pages")) else 0.0),
             # per-phase compile split; bare compile_count keeps its pre-split
             # meaning (prefill shapes) for existing consumers
             "compile_count": float(self.prefill_compiles),
@@ -164,33 +178,27 @@ class ServeMetrics:
             "compile_count_verify": float(self.verify_compiles),
             "compile_count_draft": float(self.draft_compiles),
             # speculative decoding
-            "spec_steps": c("serve/spec_steps"),
-            "accept_rate": (c("serve/draft_tokens_accepted")
-                            / c("serve/draft_tokens_proposed")
-                            if c("serve/draft_tokens_proposed") else 0.0),
+            "spec_steps": c(self._k("spec_steps")),
+            "accept_rate": (c(self._k("draft_tokens_accepted"))
+                            / c(self._k("draft_tokens_proposed"))
+                            if c(self._k("draft_tokens_proposed")) else 0.0),
             # tokens emitted per ACTIVE SLOT per speculative step — the
             # plain-decode baseline is exactly 1.0 by construction
-            "spec_tokens_per_step": (c("serve/spec_tokens_emitted")
-                                     / c("serve/spec_slot_steps")
-                                     if c("serve/spec_slot_steps") else 0.0),
-            "draft_tokens_proposed": c("serve/draft_tokens_proposed"),
-            "draft_tokens_accepted": c("serve/draft_tokens_accepted"),
-            # ragged-axis Hadamard downgrades anywhere in this process —
-            # the silent-recipe-downgrade signal (core/pipeline.py reports
-            # into the process-wide hub, which outlives any one engine)
-            "skipped_hadamard": global_hub().counter("quant/skipped_hadamard"),
-            # fused-backend pipelines that fell back to the XLA stage path
-            # (unsupported shape/config) — the fused analogue of the
-            # skipped-Hadamard downgrade signal
-            "fused_fallback": global_hub().counter("quant/fused_fallback"),
-            # fused paged-attention reads that fell back to the dense view
-            # (unsupported softmax dtype etc.) — loud, counted, and surfaced
-            # by quantwatch like the other two downgrade signals
-            "paged_attn_fallback":
-                global_hub().counter("quant/paged_attn_fallback"),
-            # packed-wire folds that fell back to the decode-then-scan
-            # reference (unsupported packet shape etc.) — the comm-path
-            # downgrade signal: the fold still reads 4*S bytes/elem there
-            "wire_fold_fallback":
-                global_hub().counter("quant/wire_fold_fallback"),
+            "spec_tokens_per_step": (c(self._k("spec_tokens_emitted"))
+                                     / c(self._k("spec_slot_steps"))
+                                     if c(self._k("spec_slot_steps")) else 0.0),
+            "draft_tokens_proposed": c(self._k("draft_tokens_proposed")),
+            "draft_tokens_accepted": c(self._k("draft_tokens_accepted")),
+            # Quant-path downgrade signals. Scoped instances (engines) read
+            # their OWN hub — two in-process engines no longer double-count
+            # each other's fallbacks; an unscoped ServeMetrics keeps the
+            # process-wide view (quantwatch / bare consumers):
+            #   skipped_hadamard    — ragged-axis Hadamard stage skips
+            #   fused_fallback      — fused pipelines -> XLA stage path
+            #   paged_attn_fallback — fused KV reads -> dense view
+            #   wire_fold_fallback  — packed folds -> decode-then-scan
+            "skipped_hadamard": dg.counter("quant/skipped_hadamard"),
+            "fused_fallback": dg.counter("quant/fused_fallback"),
+            "paged_attn_fallback": dg.counter("quant/paged_attn_fallback"),
+            "wire_fold_fallback": dg.counter("quant/wire_fold_fallback"),
         }

@@ -33,6 +33,7 @@ class Request:
     # -- filled in during serving ------------------------------------------
     generated: List[int] = dataclasses.field(default_factory=list)
     finish_reason: Optional[str] = None   # "eos" | "length" | "capacity"
+                                          # | "aborted" (Engine.abort)
     submit_time: float = 0.0
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
@@ -164,3 +165,35 @@ class Scheduler:
         self._phase.pop(slot, None)
         self._free.append(slot)
         return req
+
+    # --------------------------------------------------- disagg / abort ops
+    def transfer(self, slot: int) -> Request:
+        """Hand a *live* (not done) request off this engine: the slot frees
+        without the ``retire`` done-assert. Used by the disaggregated
+        prefill engine when a fully-prefilled request migrates to the
+        decode engine over the page wire."""
+        req = self._active.pop(slot)
+        assert req.prefilled, \
+            f"transferring slot {slot} mid-prefill (request {req.rid})"
+        self._phase.pop(slot, None)
+        self._free.append(slot)
+        return req
+
+    def place_decode(self, req: Request) -> int:
+        """Admit an already-prefilled request straight into the decode
+        phase (the receiving end of a migration). Returns its slot."""
+        assert self._free, "place_decode with no free slot"
+        assert req.prefilled, \
+            f"request {req.rid} arrived at decode with an incomplete prefill"
+        slot = self._free.pop()
+        self._active[slot] = req
+        self._phase[slot] = "decode"
+        return slot
+
+    def cancel_waiting(self, rid: int) -> Optional[Request]:
+        """Remove one request from the waiting queue by id (abort path)."""
+        for req in self._waiting:
+            if req.rid == rid:
+                self._waiting.remove(req)
+                return req
+        return None

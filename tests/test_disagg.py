@@ -1,0 +1,476 @@
+"""Disaggregated prefill/decode serving over the FP4 page wire.
+
+The production contract is *identity*: because the page codec is the wire
+format and the decode engine imports stored bytes, a disaggregated pair
+must produce greedy tokens identical to the single unified engine for
+every cache mode, and the migrated payloads must be byte-identical on both
+ends of the wire. Around that sit the protocol tests (refcount handoff,
+abort paths releasing mid-prefill pool pins) and the multi-engine scoping
+sweep (per-engine warn-once dedup and fallback counters).
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import reduced
+from repro.models.model import Model
+from repro.obs.telemetry import global_hub
+from repro.serve import (
+    Engine,
+    EngineConfig,
+    MigrationPacket,
+    PageWire,
+    make_engine,
+    pack_frames,
+    prefix_page_keys,
+    unpack_frames,
+)
+from repro.serve.disagg import DisaggRouter
+from repro.serve.kvcache import reset_paged_attn_fallback_warnings
+from repro.serve.scheduler import Request
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_compile_population():
+    """Same discipline as test_paged_attention: this module builds many
+    engines; drop its compiled state on the way out so later modules see
+    the same XLA:CPU executable population as before."""
+    yield
+    jax.clear_caches()
+    import gc
+    gc.collect()
+
+
+@pytest.fixture(scope="module")
+def tiny_gqa():
+    cfg = reduced("qwen3-0.6b", remat=False)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(1), (3, 16), 0, cfg.vocab_size), np.int32)
+    return cfg, model, params, prompts
+
+
+@pytest.fixture(scope="module")
+def tiny_mla():
+    cfg = reduced("minicpm3-4b", remat=False)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(1), (2, 12), 0, cfg.vocab_size), np.int32)
+    return cfg, model, params, prompts
+
+
+def _drain_engine(eng, prompts, gen=6, **submit_kw):
+    for i, p in enumerate(prompts):
+        eng.submit(p, gen, seed=i, **submit_kw)
+    fin = sorted(eng.drain(), key=lambda r: r.rid)
+    assert len(fin) == len(prompts)
+    return [r.generated for r in fin]
+
+
+def _identity_pair(model, params, prompts, gen=6, **cfg_kw):
+    out = {}
+    engines = {}
+    for disagg in (False, True):
+        eng = make_engine(model, params,
+                          EngineConfig(disagg=disagg, **cfg_kw))
+        out[disagg] = _drain_engine(eng, prompts, gen)
+        engines[disagg] = eng
+    assert out[False] == out[True], (
+        "disaggregated greedy decode diverged from the single engine")
+    return engines
+
+
+# ------------------------------------------------------------------- wire
+
+def test_pack_unpack_frames_byte_exact():
+    """Every stored dtype (packed u8 nibbles, E4M3 scales, f32 amax, bf16
+    means) round-trips the wire blob bit-for-bit."""
+    rng = np.random.default_rng(0)
+    frames = [
+        {
+            "codes": rng.integers(0, 256, (3, 4, 2), dtype=np.uint8),
+            "scales": jax.device_get(
+                jnp.asarray(rng.standard_normal((3, 4)), jnp.float8_e4m3fn)),
+            "pamax": rng.standard_normal((3,)).astype(np.float32),
+            "mean": jax.device_get(
+                jnp.asarray(rng.standard_normal((3, 2)), jnp.bfloat16)),
+        },
+        {},                                 # empty extras frame survives
+        {"tail": jax.device_get(
+            jnp.asarray(rng.standard_normal((2, 5)), jnp.bfloat16))},
+    ]
+    manifest, blob = pack_frames(frames)
+    back = unpack_frames(manifest, blob)
+    assert len(back) == len(frames)
+    for orig, rt in zip(frames, back):
+        assert set(orig) == set(rt)
+        for k in orig:
+            assert orig[k].dtype == rt[k].dtype
+            assert orig[k].shape == rt[k].shape
+            assert orig[k].tobytes() == rt[k].tobytes()
+
+
+def _dummy_packet(rid=0, length=4):
+    req = Request(rid=rid, prompt=np.zeros(length, np.int32),
+                  max_new_tokens=2)
+    manifest, blob = pack_frames([{"x": np.arange(3, dtype=np.uint8)}, {}])
+    return MigrationPacket(tid=-1, req=req, length=length, first_token=1,
+                           gencnt=1, page_keys=[], manifest=manifest,
+                           blob=blob)
+
+
+def test_page_wire_fifo_and_delivery_ack():
+    wire = PageWire()
+    released = []
+    t0 = wire.send(_dummy_packet(rid=0), on_delivered=lambda: released.append(0))
+    t1 = wire.send(_dummy_packet(rid=1), on_delivered=lambda: released.append(1))
+    assert wire.pending == 2 and wire.in_flight == 2
+    first = wire.recv()
+    assert first.tid == t0                      # FIFO
+    assert wire.pending == 1 and wire.in_flight == 2
+    assert released == []                       # recv is NOT delivery
+    wire.delivered(t0)
+    assert released == [0] and wire.in_flight == 1
+    wire.recv()
+    wire.delivered(t1)
+    assert released == [0, 1] and wire.in_flight == 0
+    stats = wire.stats()
+    assert stats["migration_packets"] == 2.0
+    assert stats["migration_bytes"] > 0
+    assert stats["migration_bytes_per_token"] > 0
+
+
+def test_page_wire_drop_acks_pins():
+    wire = PageWire()
+    released = []
+    wire.send(_dummy_packet(rid=7), on_delivered=lambda: released.append(7))
+    assert wire.drop(rid=99) is None
+    dropped = wire.drop(rid=7)
+    assert dropped is not None and dropped.req.rid == 7
+    assert released == [7]                      # pins release on drop too
+    assert wire.pending == 0 and wire.in_flight == 0
+
+
+# --------------------------------------------------------------- identity
+
+def test_disagg_matches_single_engine_bf16(tiny_gqa):
+    """Greedy identity on the dense cache, plus the per-engine metric
+    split: prefill work lands under serve.prefill, decode under
+    serve.decode, and the merged router summary carries the wire stats."""
+    cfg, model, params, prompts = tiny_gqa
+    engines = _identity_pair(model, params, prompts, n_slots=2, max_len=32,
+                             kv_cache="bf16", quant_mode="bf16")
+    router = engines[True]
+    assert isinstance(router, DisaggRouter)
+    # namespaced per-engine hubs
+    assert router.prefill.metrics.hub.values("serve.prefill/step_latency_s")
+    assert router.decode.metrics.hub.values("serve.decode/step_latency_s")
+    pre = router.prefill.metrics.summary()
+    dec = router.decode.metrics.summary()
+    assert pre["prefill_tokens_computed"] > 0
+    assert dec["prefill_tokens_computed"] == 0   # decode never sees a prompt
+    assert dec["generated_tokens"] > 0
+    merged = router.metrics.summary()
+    assert merged["migration_packets"] == float(len(prompts))
+    assert merged["migration_tokens"] == float(
+        sum(len(p) for p in prompts))
+    assert merged["migration_bytes_per_token"] > 0
+    assert merged["prefill_tokens_computed"] == pre["prefill_tokens_computed"]
+    # the single unified engine keeps the unprefixed namespace
+    single = engines[False]
+    assert single.metrics.hub.values("serve/step_latency_s")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["fp4", "fp4-centered"])
+@pytest.mark.parametrize("speculate", ["off", "ngram"])
+def test_disagg_identity_gqa(tiny_gqa, kind, speculate):
+    """{fp4, fp4-centered} x {plain, speculative}: token-identical to the
+    unified engine. FP4 pages migrate as stored bytes, so there is no
+    re-quantization anywhere on the path."""
+    cfg, model, params, prompts = tiny_gqa
+    engines = _identity_pair(
+        model, params, prompts, gen=8, n_slots=2, max_len=48,
+        kv_cache=kind, page_size=16, quant_mode="bf16",
+        speculate=speculate, draft_tokens=3)
+    router = engines[True]
+    merged = router.metrics.summary()
+    # stored-bytes migration beats a dense bf16 migration on bytes
+    assert merged["migration_vs_dense_bf16"] < 1.0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["fp4", "fp4-centered"])
+def test_disagg_identity_mla(tiny_mla, kind):
+    """MLA (whole-prompt prefill, latent pages + exact kr ring riding the
+    extras frame) is token-identical under disaggregation too."""
+    cfg, model, params, prompts = tiny_mla
+    _identity_pair(model, params, prompts, gen=6, n_slots=2, max_len=32,
+                   kv_cache=kind, page_size=16, quant_mode="bf16")
+
+
+# ---------------------------------------------------------- byte identity
+
+@pytest.mark.slow
+def test_migrated_payload_byte_identical(tiny_gqa):
+    """The decode-side slot is bitwise the prefill-side commit: committed
+    page payloads AND the trimmed bf16 tail survive the wire verbatim."""
+    cfg, model, params, _ = tiny_gqa
+    p = 16
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, p + 5).astype(np.int32)
+    router = make_engine(model, params, EngineConfig(
+        disagg=True, n_slots=2, max_len=48, kv_cache="fp4-centered",
+        page_size=p, quant_mode="bf16"))
+    router.submit(prompt, 4, seed=0)
+    for _ in range(32):
+        router.prefill.step()
+        if router.wire.pending:
+            break
+    else:
+        pytest.fail("prefill never shipped a packet")
+    packet = router.wire._queue[0]
+    pages, extras = packet.frames()
+    assert len(pages) == 1 and "tail" in extras
+    assert extras["tail"].shape[1] == 5          # trimmed to the remainder
+
+    # wire payload == prefill-side stored bytes (slot 0 transferred but
+    # its cache row is untouched until reuse)
+    pre = jax.device_get(router.prefill.adapter.extract_page_payload(
+        router.prefill.caches, 0, 0, p))
+    for k, v in pages[0].items():
+        assert v.tobytes() == np.asarray(pre[k]).tobytes(), k
+    pre_tail = jax.device_get(router.prefill.caches["tail"][:, 0, :5])
+    assert extras["tail"].tobytes() == np.asarray(pre_tail).tobytes()
+
+    router.decode.step()                          # import + ack
+    ((slot, req),) = router.decode.scheduler.active_items()
+    post = jax.device_get(router.decode.adapter.extract_page_payload(
+        router.decode.caches, slot, 0, p))
+    for k, v in pages[0].items():
+        assert v.tobytes() == np.asarray(post[k]).tobytes(), k
+    post_tail = jax.device_get(router.decode.caches["tail"][:, slot, :5])
+    assert extras["tail"].tobytes() == np.asarray(post_tail).tobytes()
+    router.drain()
+
+
+# --------------------------------------------------------- pin handoff
+
+@pytest.mark.slow
+def test_pin_handoff_held_until_delivered(tiny_gqa):
+    """A migrating request's pool pins survive the flight: acquired at
+    admission, parked in the packet's delivery callback at transfer, and
+    released only when the decode engine acks the import."""
+    cfg, model, params, _ = tiny_gqa
+    p = 16
+    rng = np.random.default_rng(3)
+    system = rng.integers(0, cfg.vocab_size, p).astype(np.int32)
+    pa = np.concatenate([system,
+                         rng.integers(0, cfg.vocab_size, 7).astype(np.int32)])
+    pb = np.concatenate([system,
+                         rng.integers(0, cfg.vocab_size, 11).astype(np.int32)])
+    router = make_engine(model, params, EngineConfig(
+        disagg=True, n_slots=2, max_len=48, kv_cache="fp4-centered",
+        page_size=p, quant_mode="bf16", prefix_cache=True,
+        prefill_chunk=32))
+    pool = router.prefill.pool
+    router.submit(pa, 3, seed=0)
+    router.drain()                               # publishes pa's first page
+    key0 = prefix_page_keys(pa, p)[0]
+    assert pool.refcount(key0) == 0
+
+    router.submit(pb, 3, seed=1)                 # hits the shared page
+    for _ in range(16):
+        router.prefill.step()
+        if router.wire.pending:
+            break
+    else:
+        pytest.fail("prefill never shipped a packet")
+    assert router.prefill.scheduler.n_active == 0   # slot already freed...
+    assert pool.refcount(key0) == 1                 # ...but the pin holds
+    router.decode.step()                            # import + delivered ack
+    assert pool.refcount(key0) == 0                 # handoff complete
+    fin = router.drain()
+    assert [r.rid for r in fin] == [1]
+
+
+# ------------------------------------------------- abort / pin-leak fix
+
+@pytest.mark.slow
+def test_abort_midprefill_releases_pins(tiny_gqa):
+    """Regression test for the mid-prefill pool-pin leak: retirement
+    between _begin_prefill and _finalize_prefill used to strand the pins
+    in st.acquired (``_page_refs`` — what retirement releases — is only
+    written at finalize), leaving shared pages unevictable forever.
+    ``Engine.abort`` must release them."""
+    cfg, model, params, _ = tiny_gqa
+    p = 16
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    eng = Engine(model, params, EngineConfig(
+        n_slots=2, max_len=96, kv_cache="fp4-centered", page_size=p,
+        quant_mode="bf16", prefix_cache=True, prefill_chunk=8))
+    eng.submit(prompt, 3, seed=0)
+    eng.drain()                        # publishes the prompt's 4 pages
+    keys = prefix_page_keys(prompt, p)
+    rid = eng.submit(prompt, 3, seed=1)
+    eng.step()                         # admits; acquires 3 prefix pins;
+                                       # advances 8 of the 16 fresh tokens
+    assert eng._prefilling, "request should still be mid-prefill"
+    assert [eng.pool.refcount(k) for k in keys[:3]] == [1, 1, 1]
+
+    req = eng.abort(rid)
+    assert req is not None and req.finish_reason == "aborted"
+    assert not eng._prefilling and eng.scheduler.n_active == 0
+    assert all(eng.pool.refcount(k) == 0 for k in keys), \
+        "mid-prefill abort leaked pool pins"
+    # the freed slot (and the still-pooled pages) remain fully usable
+    eng.submit(prompt, 2, seed=2)
+    (r,) = eng.drain()
+    assert r.finish_reason == "length"
+
+
+@pytest.mark.slow
+def test_abort_waiting_and_decode_phases(tiny_gqa):
+    """abort() covers the other two lifetimes: waiting (leaves the queue,
+    never takes a slot) and decoding (slot retires mid-generation)."""
+    cfg, model, params, prompts = tiny_gqa
+    eng = Engine(model, params, EngineConfig(
+        n_slots=1, max_len=32, kv_cache="bf16", quant_mode="bf16"))
+    r0 = eng.submit(prompts[0], 8, seed=0)
+    r1 = eng.submit(prompts[1], 8, seed=1)      # waits behind r0
+    req1 = eng.abort(r1)
+    assert req1.finish_reason == "aborted"
+    assert eng.scheduler.n_waiting == 1        # r0 still queued (no step yet)
+    for _ in range(4):
+        eng.step()
+    assert eng.scheduler.n_active == 1          # r0 decoding
+    req0 = eng.abort(r0)
+    assert req0.finish_reason == "aborted"
+    assert eng.scheduler.n_active == 0 and not eng.scheduler.has_work
+    assert eng.abort(12345) is None
+
+
+@pytest.mark.slow
+def test_router_abort_drops_in_flight_packet(tiny_gqa):
+    cfg, model, params, _ = tiny_gqa
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab_size, 21).astype(np.int32)
+    router = make_engine(model, params, EngineConfig(
+        disagg=True, n_slots=2, max_len=48, kv_cache="fp4-centered",
+        page_size=16, quant_mode="bf16"))
+    rid = router.submit(prompt, 4, seed=0)
+    for _ in range(32):
+        router.prefill.step()
+        if router.wire.pending:
+            break
+    req = router.abort(rid)
+    assert req is not None and req.finish_reason == "aborted"
+    assert router.wire.pending == 0 and router.wire.in_flight == 0
+    assert not router.has_work
+
+
+# ------------------------------------------- multi-engine scoping sweep
+
+@pytest.mark.slow
+def test_two_engines_each_warn_once_with_scoped_counts(tiny_gqa):
+    """Warn-once dedup is per engine hub, not process-global: two engines
+    tripping the same paged-attention fallback each warn exactly once, and
+    each engine's scoped summary counts only its own downgrades (the
+    process hub still sees the total)."""
+    cfg, model, params, prompts = tiny_gqa
+    cfg16 = dataclasses.replace(cfg, attn_softmax_dtype="bfloat16")
+    model16 = Model(cfg16)
+    params16 = model16.init(jax.random.key(0))
+    reset_paged_attn_fallback_warnings()
+    hub = global_hub()
+    before = hub.counter("quant/paged_attn_fallback")
+    kw = dict(n_slots=1, max_len=32, kv_cache="fp4-centered", page_size=16,
+              quant_mode="bf16")
+    engines = [Engine(model16, params16, EngineConfig(**kw))
+               for _ in range(2)]
+    with warnings.catch_warnings(record=True) as recs:
+        warnings.simplefilter("always")
+        for eng in engines:
+            eng.submit(prompts[0][:8], 4, seed=0)
+            eng.drain()
+    fallback_warns = [r for r in recs if "fell back" in str(r.message)]
+    assert len(fallback_warns) == 2, (
+        f"expected one warning per engine, got {len(fallback_warns)}")
+    counts = [e.metrics.summary()["paged_attn_fallback"] for e in engines]
+    assert all(c > 0 for c in counts)
+    # scoped counters partition the process total — no double counting
+    assert hub.counter("quant/paged_attn_fallback") - before == sum(counts)
+
+
+# -------------------------------------------------- aliasing-race stress
+
+@pytest.mark.slow
+def test_decode_host_state_race_stress(tiny_gqa):
+    """The decode/accept jit operands must be COPIES of the engine's host
+    slot arrays: on CPU, jnp.asarray may alias numpy memory zero-copy, and
+    the step's cache update can still be in flight when the bookkeeping
+    loop rewrites _tokens/_pos/_gencnt. Scribbling over those arrays right
+    after dispatch (then restoring) must not perturb generation."""
+    cfg, model, params, prompts = tiny_gqa
+
+    def scribble(eng):
+        for a in (eng._tokens, eng._pos, eng._gencnt):
+            a += 7919
+        for a in (eng._tokens, eng._pos, eng._gencnt):
+            a -= 7919
+
+    kw = dict(n_slots=2, max_len=48, kv_cache="fp4-centered", page_size=16,
+              quant_mode="bf16")
+    # plain decode
+    ref = _drain_engine(Engine(model, params, EngineConfig(**kw)),
+                        prompts, gen=8)
+    eng = Engine(model, params, EngineConfig(**kw))
+    orig_decode = eng._decode
+
+    def racy_decode(*args):
+        out = orig_decode(*args)       # async dispatch has returned
+        scribble(eng)
+        return out
+
+    eng._decode = racy_decode
+    assert _drain_engine(eng, prompts, gen=8) == ref
+
+    # speculative: the accept/commit pipeline reads pos/gencnt async too
+    kw_spec = dict(kw, speculate="ngram", draft_tokens=3)
+    ref_spec = _drain_engine(Engine(model, params, EngineConfig(**kw_spec)),
+                             prompts, gen=8)
+    eng2 = Engine(model, params, EngineConfig(**kw_spec))
+    orig_accept = eng2._accept
+
+    def racy_accept(*args):
+        out = orig_accept(*args)
+        scribble(eng2)
+        return out
+
+    eng2._accept = racy_accept
+    assert _drain_engine(eng2, prompts, gen=8) == ref_spec
+
+
+# ------------------------------------------------------------ guardrails
+
+def test_decode_engine_rejects_direct_submit_and_self_draft(tiny_gqa):
+    cfg, model, params, _ = tiny_gqa
+    router = make_engine(model, params, EngineConfig(
+        disagg=True, n_slots=2, max_len=32, kv_cache="bf16",
+        quant_mode="bf16"))
+    with pytest.raises(RuntimeError, match="page wire"):
+        router.decode.submit([1, 2, 3], 4)
+    with pytest.raises(NotImplementedError, match="ngram"):
+        make_engine(model, params, EngineConfig(
+            disagg=True, n_slots=2, max_len=32, kv_cache="bf16",
+            quant_mode="bf16", speculate="self"))
+    with pytest.raises(ValueError, match="single-engine"):
+        make_engine(model, params, EngineConfig(disagg=True),
+                    drafter=object())
